@@ -1,0 +1,140 @@
+"""Shared benchmark substrate: paper payloads, calibration, CSV helpers.
+
+Payloads follow SS7.1: the 1x1 / 128x128 int64 matrix multiplications
+(Table 1, Fig. 2/5/6), the fetch-and-reduce phase microbenchmark (SS7.4/7.5)
+and an image-transform stand-in (SS7.6). Cold-start profiles are calibrated
+ONCE per process from the real code paths (repro.core.coldstart) and then
+drive the virtual-time simulations, so RPS sweeps are faithful to measured
+costs AND deterministic.
+"""
+from __future__ import annotations
+
+import csv
+import io
+import sys
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import (
+    ColdStartProfile,
+    Composition,
+    FunctionRegistry,
+    HttpRequest,
+    HttpResponse,
+    Item,
+    ServiceRegistry,
+    measure,
+)
+
+
+# ---------------------------------------------------------------- payloads
+def matmul_fn(n: int):
+    def fn(inputs):
+        x = inputs["x"][0].data
+        return {"out": [Item(np.matmul(x, x))]}
+
+    return fn
+
+
+def matmul_inputs(n: int):
+    return {"x": [Item(np.ones((n, n), np.int64))]}
+
+
+def register_matmul(reg: FunctionRegistry, n: int, name: Optional[str] = None):
+    import jax.numpy as jnp
+
+    name = name or f"matmul_{n}"
+    reg.register_function(
+        name,
+        matmul_fn(n),
+        jax_fn=lambda x: x @ x,
+        abstract_args=(jnp.zeros((n, n), jnp.int32),),
+        context_bytes=max(1 << 20, 3 * n * n * 8),
+    )
+    return name
+
+
+def register_image_compress(reg: FunctionRegistry, kb: int = 18):
+    """QOI->PNG stand-in: zlib-compress an image-sized buffer (real work)."""
+    import zlib
+
+    rng = np.random.default_rng(0)
+    img = rng.integers(0, 255, kb * 1024, dtype=np.uint8).tobytes()
+
+    def fn(inputs):
+        return {"out": [Item(zlib.compress(inputs["img"][0].data, 6))]}
+
+    reg.register_function("image_compress", fn, context_bytes=4 << 20)
+    return "image_compress", {"img": [Item(img)]}
+
+
+def register_reduce(reg: FunctionRegistry):
+    """The SS7.4 phase compute: sum/min/max over a sampled array."""
+
+    def fn(inputs):
+        raw = inputs["data"][0].data
+        body = raw.body if isinstance(raw, HttpResponse) else raw
+        arr = np.frombuffer(body if isinstance(body, bytes) else bytes(body), np.uint8)
+        sample = arr[:: max(1, len(arr) // 4096)]
+        out = np.array([sample.sum(), sample.min(), sample.max()], np.int64)
+        return {"out": [Item(out.tobytes())]}
+
+    reg.register_function("reduce", fn, context_bytes=1 << 20)
+    return "reduce"
+
+
+def storage_service(services: ServiceRegistry, fetch_bytes: int = 64 * 1024,
+                    base_latency_s: float = 0.5e-3,
+                    bandwidth_bps: float = 1.25e9):
+    blob = np.random.default_rng(1).integers(
+        0, 255, fetch_bytes, dtype=np.uint8
+    ).tobytes()
+    services.register(
+        "storage.svc", lambda req: HttpResponse(200, blob),
+        base_latency_s=base_latency_s, bandwidth_bps=bandwidth_bps,
+    )
+    return "storage.svc"
+
+
+# -------------------------------------------------------------- calibration
+_PROFILE_CACHE: Dict[tuple, ColdStartProfile] = {}
+
+
+def calibrate(reg: FunctionRegistry, name: str, inputs, backend="dandelion",
+              cached=True, samples=5) -> ColdStartProfile:
+    key = (id(reg), name, backend, cached)
+    if key not in _PROFILE_CACHE:
+        bd, exec_s = measure(
+            reg, name, inputs, backend=backend, cached=cached, samples=samples
+        )
+        _PROFILE_CACHE[key] = ColdStartProfile(setup_s=bd.total, execute_s=exec_s)
+    return _PROFILE_CACHE[key]
+
+
+# --------------------------------------------------------------------- CSV
+def emit(name: str, rows: List[dict], out_stream=None) -> None:
+    out = out_stream or sys.stdout
+    if not rows:
+        print(f"# {name}: no rows", file=out)
+        return
+    print(f"# === {name} ===", file=out)
+    cols = list(rows[0].keys())
+    w = csv.DictWriter(out, fieldnames=cols)
+    w.writeheader()
+    for r in rows:
+        w.writerow({k: (f"{v:.6g}" if isinstance(v, float) else v)
+                    for k, v in r.items()})
+    out.flush()
+
+
+def single_function_composition(reg: FunctionRegistry, fn_name: str,
+                                in_set: str = "x") -> Composition:
+    c = Composition(f"single_{fn_name}")
+    v = c.compute(fn_name, fn_name, inputs=(in_set,), outputs=("out",),
+                  context_bytes=reg.get(fn_name).context_bytes)
+    c.bind_input(in_set, v[in_set])
+    c.bind_output("out", v["out"])
+    reg.register_composition(c)
+    return c

@@ -1,0 +1,97 @@
+"""Figures 2 & 6: latency sensitivity to the % of hot (warm) requests.
+
+128x128 int64 matmul on the keep-warm (Firecracker-analogue) platform at
+a fixed moderate load, sweeping the forced hot-request ratio, vs Dandelion
+cold-starting every request. Reports median / p5 / p95 / p99 - the paper's
+point is the 2-3 orders of magnitude between the platforms' variability.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    ColdStartProfile,
+    EventLoop,
+    FunctionRegistry,
+    KeepWarmPlatform,
+    WorkerNode,
+)
+from repro.core.items import Item
+from benchmarks.common import (
+    calibrate,
+    emit,
+    matmul_inputs,
+    register_matmul,
+    single_function_composition,
+)
+
+N = 128
+RPS = 400.0
+DURATION = 15.0
+CORES = 16
+
+
+def _requests(seed=0):
+    rng = np.random.default_rng(seed)
+    t, out = 0.0, []
+    while t < DURATION:
+        t += float(rng.exponential(1.0 / RPS))
+        out.append(t)
+    return out
+
+
+def run():
+    reg = FunctionRegistry()
+    name = register_matmul(reg, N)
+    inputs = matmul_inputs(N)
+    dand = calibrate(reg, name, inputs, backend="dandelion")
+    # boot-cost analogues from the real AOT code paths (see Table 1):
+    # snapshot restore (deserialize) and full boot (trace+lower+compile)
+    snap = calibrate(reg, name, inputs, backend="snapshot")
+    boot = calibrate(reg, name, inputs, backend="microvm")
+
+    rows = []
+    # --- keep-warm platform at several hot ratios, both boot modes ---
+    for label, boot_s in (("keepwarm_snapshot", snap.setup_s),
+                          ("keepwarm_fullboot", boot.setup_s)):
+        for hot in (1.0, 0.99, 0.97, 0.9, 0.5):
+            loop = EventLoop()
+            kw = KeepWarmPlatform(loop, cores=CORES, hot_ratio=hot, seed=1)
+            kw.register(name, ColdStartProfile(boot_s, dand.execute_s),
+                        context_bytes=reg.get(name).context_bytes)
+            for t in _requests():
+                kw.request_at(t, name)
+            loop.run()
+            s = kw.latency.summary()
+            rows.append({
+                "platform": label, "hot_pct": hot * 100,
+                "p50_ms": s["p50_ms"], "p5_ms": kw.latency.percentile(5) * 1e3,
+                "p95_ms": s["p95_ms"], "p99_ms": s["p99_ms"],
+                "rel_var_pct": s["rel_var_pct"],
+            })
+
+    # --- Dandelion: every request cold, 3% code-cache misses (SS7.3) ---
+    node = WorkerNode(
+        reg, num_slots=CORES, comm_slots=1,
+        profiles={name: dand}, cache_miss_rate=0.03, seed=1,
+    )
+    comp = single_function_composition(reg, name)
+    for t in _requests():
+        node.invoke_at(t, comp, {"x": list(inputs["x"])})
+    node.run()
+    s = node.latency.summary()
+    rows.append({
+        "platform": "dandelion", "hot_pct": 0.0,
+        "p50_ms": s["p50_ms"], "p5_ms": node.latency.percentile(5) * 1e3,
+        "p95_ms": s["p95_ms"], "p99_ms": s["p99_ms"],
+        "rel_var_pct": s["rel_var_pct"],
+    })
+    return rows
+
+
+def main():
+    emit("fig2_fig6_hot_ratio", run())
+
+
+if __name__ == "__main__":
+    main()

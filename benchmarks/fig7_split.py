@@ -1,0 +1,140 @@
+"""Figure 7: compute/communication split + PI control vs unified "D-hybrid".
+
+D-hybrid runs a composition as a single hybrid function: network I/O blocks
+the execution thread, and the OS multiplexes ``tpc`` threads per core.
+Modeled as engine slots = cores x tpc with the CPU portion inflated by the
+processor-sharing factor (tpc) under saturation; the I/O portion is not
+inflated (threads sleep). Dandelion runs the same work as a real
+composition: compute functions run-to-completion on dedicated cores,
+communication functions multiplex cooperatively, and the PI controller
+moves cores between the pools.
+
+Two workloads (SS7.5): compute-intensive (128x128 int64 matmul) and
+I/O-intensive (fetch 64 KiB + reduce).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    ColdStartProfile,
+    Composition,
+    FunctionRegistry,
+    HttpRequest,
+    Item,
+    ServiceRegistry,
+    WorkerNode,
+)
+from benchmarks.common import (
+    calibrate,
+    emit,
+    matmul_inputs,
+    register_matmul,
+    register_reduce,
+    single_function_composition,
+    storage_service,
+)
+
+CORES = 16
+DURATION = 8.0
+
+
+def _fetch_compute_comp(reg: FunctionRegistry) -> Composition:
+    reg.register_function(
+        "mk_req",
+        lambda ins: {"req": [Item(HttpRequest("GET", "http://storage.svc/blob"))]},
+    )
+    c = Composition("fetch_compute")
+    m = c.compute("mk_req", "mk_req", inputs=("x",), outputs=("req",))
+    h = c.http("fetch")
+    r = c.compute("reduce", "reduce", inputs=("data",), outputs=("out",))
+    c.edge(m["req"], h["requests"])
+    c.edge(h["responses"], r["data"])
+    c.bind_input("x", m["x"])
+    c.bind_output("out", r["out"])
+    reg.register_composition(c)
+    return c
+
+
+def _drive(node, comp, inputs, rps, seed=5):
+    rng = np.random.default_rng(seed)
+    duration = min(DURATION, 25_000 / rps)  # bound the event count
+    t = 0.0
+    while t < duration:
+        t += float(rng.exponential(1.0 / rps))
+        node.invoke_at(t, comp, {k: list(v) for k, v in inputs.items()})
+    node.run()
+    s = node.latency.summary()
+    return {
+        "goodput_rps": s["n"] / duration,
+        "p50_ms": s["p50_ms"],
+        "p99_ms": s["p99_ms"],
+    }
+
+
+def run():
+    reg = FunctionRegistry()
+    services = ServiceRegistry()
+    storage_service(services)
+    mm = register_matmul(reg, 128)
+    register_reduce(reg)
+    mm_inputs = matmul_inputs(128)
+    mm_comp = single_function_composition(reg, mm)
+    fc_comp = _fetch_compute_comp(reg)
+
+    mm_prof = calibrate(reg, mm, mm_inputs, backend="dandelion")
+    from repro.core import measure
+    red_bd, red_exec = measure(reg, "reduce", {
+        "data": [Item(b"\x00" * 65536)]}, samples=5)
+    mk_bd, mk_exec = measure(reg, "mk_req", {"x": [Item(0)]}, samples=5)
+    io_s = 0.5e-3 + 2 * 65536 / 1.25e9
+
+    rows = []
+    workloads = {
+        "compute_intensive": dict(
+            comp=mm_comp, inputs=mm_inputs, cpu=mm_prof.execute_s, io=0.0,
+            setup=mm_prof.setup_s, rps=0.75 * CORES / (mm_prof.setup_s + mm_prof.execute_s),
+        ),
+        "io_intensive": dict(
+            comp=fc_comp, inputs={"x": [Item(0)]},
+            cpu=mk_exec + red_exec, io=io_s, setup=mm_prof.setup_s,
+            rps=0.75 * CORES * 3 / (mk_exec + red_exec + io_s),
+        ),
+    }
+
+    for wname, w in workloads.items():
+        # --- D-hybrid: single hybrid function, tpc sweep ---
+        for tpc in (1, 3, 5):
+            hname = f"hybrid_{wname}_{tpc}"
+            reg.register_function(hname, lambda ins: {"out": [Item(1)]})
+            hcomp = single_function_composition(reg, hname)
+            prof = ColdStartProfile(
+                setup_s=w["setup"] + w["io"],          # io blocks the thread
+                execute_s=w["cpu"] * tpc,              # processor sharing
+            )
+            node = WorkerNode(
+                reg, num_slots=CORES * tpc, comm_slots=1,
+                profiles={hname: prof}, controller_enabled=False, seed=6,
+            )
+            r = _drive(node, hcomp, {"x": [Item(0)]}, w["rps"])
+            rows.append({"workload": wname, "system": f"d_hybrid_tpc{tpc}",
+                         **r})
+        # --- Dandelion: real composition, split engines + PI ---
+        node = WorkerNode(
+            reg, services, num_slots=CORES, comm_slots=2,
+            profiles={mm: mm_prof,
+                      "reduce": ColdStartProfile(mm_prof.setup_s, red_exec),
+                      "mk_req": ColdStartProfile(mm_prof.setup_s, mk_exec)},
+            seed=6,
+        )
+        r = _drive(node, w["comp"], w["inputs"], w["rps"])
+        rows.append({"workload": wname, "system": "dandelion_split_pi", **r})
+    return rows
+
+
+def main():
+    emit("fig7_split_vs_hybrid", run())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,167 @@
+"""Figure 9: elastic query processing (SSB-style) vs a QaaS cost model.
+
+A mini columnar engine implemented as Dandelion compute functions:
+partitioned scans fan out with 'each' (one sandbox per partition, the
+paper's elastic scale-out), partial filter/aggregate per partition, merge.
+Data is served from a simulated S3 (latency + bandwidth model); the scan
+kernels are real numpy.
+
+Cost model: Dandelion = wall-clock x EC2 m7a.8xlarge on-demand rate;
+Athena-like QaaS = $5/TB scanned (10 MB minimum) with a fixed engine
+startup latency + per-byte scan model. Both reported per query.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    Composition,
+    FunctionRegistry,
+    HttpRequest,
+    HttpResponse,
+    Item,
+    ServiceRegistry,
+    WorkerNode,
+)
+from benchmarks.common import emit
+
+PARTITIONS = 16
+ROWS_PER_PART = 200_000
+EC2_USD_PER_S = 1.85 / 3600.0          # m7a.8xlarge on-demand
+ATHENA_USD_PER_TB = 5.0
+ATHENA_MIN_BYTES = 10 * 1024**2
+ATHENA_STARTUP_S = 0.65
+ATHENA_SCAN_BPS = 2.0e9
+
+
+def _make_partition(seed):
+    rng = np.random.default_rng(seed)
+    n = ROWS_PER_PART
+    return {
+        "quantity": rng.integers(1, 51, n, dtype=np.uint8),
+        "discount": rng.integers(0, 11, n, dtype=np.uint8),
+        "extendedprice": rng.integers(100, 10_000, n, dtype=np.uint32),
+        "year": rng.integers(1992, 1999, n, dtype=np.uint16),
+        "category": rng.integers(0, 25, n, dtype=np.uint8),
+    }
+
+
+def _setup(reg: FunctionRegistry, services: ServiceRegistry):
+    parts = [_make_partition(s) for s in range(PARTITIONS)]
+    blobs = {}
+    for i, p in enumerate(parts):
+        buf = b"".join(c.tobytes() for c in p.values())
+        blobs[f"/part{i}"] = buf
+    total_bytes = sum(len(b) for b in blobs.values())
+    services.register(
+        "s3.svc",
+        lambda req: HttpResponse(200, blobs[req.url.split("s3.svc")[1]]),
+        base_latency_s=2e-3, bandwidth_bps=10e9,
+    )
+
+    def decode(body):
+        n = ROWS_PER_PART
+        raw = body if isinstance(body, bytes) else bytes(body)
+        off = 0
+        cols = {}
+        for name, dt in (("quantity", np.uint8), ("discount", np.uint8),
+                         ("extendedprice", np.uint32), ("year", np.uint16),
+                         ("category", np.uint8)):
+            sz = n * np.dtype(dt).itemsize
+            cols[name] = np.frombuffer(raw[off:off + sz], dt)
+            off += sz
+        return cols
+
+    def plan_fn(ins):
+        return {"reqs": [
+            Item(HttpRequest("GET", f"http://s3.svc/part{i}"), key=str(i))
+            for i in range(PARTITIONS)
+        ]}
+
+    def q1_scan(ins):  # filter + agg: revenue query (SSB Q1-like)
+        c = decode(ins["part"][0].data.body)
+        m = (c["discount"] >= 1) & (c["discount"] <= 3) & (c["quantity"] < 25) \
+            & (c["year"] == 1993)
+        rev = np.sum(c["extendedprice"][m].astype(np.int64) * c["discount"][m])
+        return {"partial": [Item(np.int64(rev).tobytes())]}
+
+    def q2_scan(ins):  # group-by category sum (join with tiny dim table)
+        c = decode(ins["part"][0].data.body)
+        sums = np.bincount(
+            c["category"], weights=c["extendedprice"].astype(np.float64),
+            minlength=25,
+        )
+        return {"partial": [Item(sums.tobytes())]}
+
+    def q3_scan(ins):  # multi-filter group-by year
+        c = decode(ins["part"][0].data.body)
+        m = (c["category"] < 5) & (c["quantity"] > 10)
+        sums = np.bincount(
+            c["year"][m] - 1992,
+            weights=c["extendedprice"][m].astype(np.float64), minlength=7,
+        )
+        return {"partial": [Item(sums.tobytes())]}
+
+    def merge_sum(ins):
+        arrs = [np.frombuffer(i.data, np.float64 if len(i.data) > 8 else np.int64)
+                for i in ins["partials"]]
+        return {"result": [Item(np.sum(arrs, axis=0).tobytes())]}
+
+    reg.register_function("plan", plan_fn)
+    reg.register_function("q1_scan", q1_scan, context_bytes=4 << 20)
+    reg.register_function("q2_scan", q2_scan, context_bytes=4 << 20)
+    reg.register_function("q3_scan", q3_scan, context_bytes=4 << 20)
+    reg.register_function("merge", merge_sum)
+
+    comps = {}
+    for q in ("q1", "q2", "q3"):
+        c = Composition(f"ssb_{q}")
+        pl = c.compute("plan", "plan", inputs=("go",), outputs=("reqs",))
+        h = c.http("fetch")
+        sc = c.compute("scan", f"{q}_scan", inputs=("part",), outputs=("partial",),
+                       context_bytes=4 << 20)
+        mg = c.compute("merge", "merge", inputs=("partials",), outputs=("result",))
+        c.edge(pl["reqs"], h["requests"], "each")
+        c.edge(h["responses"], sc["part"], "each")
+        c.edge(sc["partial"], mg["partials"], "all")
+        c.bind_input("go", pl["go"])
+        c.bind_output("result", mg["result"])
+        reg.register_composition(c)
+        comps[q] = c
+    return comps, total_bytes
+
+
+def run():
+    reg, services = FunctionRegistry(), ServiceRegistry()
+    comps, total_bytes = _setup(reg, services)
+    rows = []
+    for q, comp in comps.items():
+        node = WorkerNode(reg, services, num_slots=32, comm_slots=4, seed=11)
+        done = []
+        node.invoke(comp, {"go": [Item(1)]}, on_done=done.append)
+        node.run()
+        assert done and not done[0].failed, done and done[0].failed
+        lat = done[0].latency
+        d_cost = lat * EC2_USD_PER_S
+        scanned = max(total_bytes, ATHENA_MIN_BYTES)
+        a_lat = ATHENA_STARTUP_S + total_bytes / ATHENA_SCAN_BPS
+        a_cost = scanned / 1024**4 * ATHENA_USD_PER_TB
+        rows.append({
+            "query": q,
+            "scanned_mb": total_bytes / 1024**2,
+            "dandelion_latency_s": lat,
+            "athena_like_latency_s": a_lat,
+            "latency_ratio": lat / a_lat,
+            "dandelion_cost_usd": d_cost,
+            "athena_like_cost_usd": a_cost,
+            "cost_ratio": d_cost / a_cost,
+        })
+    return rows
+
+
+def main():
+    emit("fig9_query", run())
+
+
+if __name__ == "__main__":
+    main()

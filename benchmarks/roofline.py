@@ -1,0 +1,76 @@
+"""Roofline report: aggregates the dry-run artifacts into the per-(arch x
+shape x mesh) three-term table (EXPERIMENTS.md SSRoofline).
+
+Reads results/<dir>/*.json produced by repro.launch.dryrun.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from typing import List
+
+from benchmarks.common import emit
+
+
+def load_cells(dirname: str) -> List[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def rows_from_cells(cells: List[dict]) -> List[dict]:
+    rows = []
+    for c in cells:
+        base = {"arch": c.get("arch"), "shape": c.get("shape"),
+                "mesh": c.get("mesh")}
+        if "skipped" in c:
+            rows.append({**base, "status": "SKIP", "bottleneck": "",
+                         "compute_s": 0.0, "memory_s": 0.0,
+                         "collective_s": 0.0, "step_s": 0.0, "mfu": 0.0,
+                         "useful_flops_frac": 0.0, "hbm_gb_per_dev": 0.0})
+            continue
+        if "error" in c:
+            rows.append({**base, "status": "FAIL", "bottleneck": "",
+                         "compute_s": 0.0, "memory_s": 0.0,
+                         "collective_s": 0.0, "step_s": 0.0, "mfu": 0.0,
+                         "useful_flops_frac": 0.0, "hbm_gb_per_dev": 0.0})
+            continue
+        r = c["roofline"]
+        mem = c.get("memory", {}) or {}
+        peak = mem.get("peak_bytes_per_device") or 0
+        rows.append({
+            **base,
+            "status": "OK",
+            "compute_s": r["compute_s"],
+            "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"],
+            "bottleneck": r["bottleneck"],
+            "step_s": r["step_time_s"],
+            "mfu": r["mfu"],
+            "useful_flops_frac": r["useful_flops_fraction"],
+            "hbm_gb_per_dev": peak / 1024**3,
+        })
+    return rows
+
+
+def run(dirname: str = "results/dryrun_baseline_v2"):
+    if not os.path.isdir(dirname):
+        return [{"arch": "(no dry-run artifacts found)", "shape": dirname,
+                 "mesh": "", "status": "MISSING", "compute_s": 0.0,
+                 "memory_s": 0.0, "collective_s": 0.0, "bottleneck": "",
+                 "step_s": 0.0, "mfu": 0.0, "useful_flops_frac": 0.0,
+                 "hbm_gb_per_dev": 0.0}]
+    return rows_from_cells(load_cells(dirname))
+
+
+def main():
+    dirname = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_baseline_v2"
+    emit("roofline", run(dirname))
+
+
+if __name__ == "__main__":
+    main()

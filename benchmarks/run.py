@@ -1,0 +1,70 @@
+"""Benchmark harness entry: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table1,fig5,...]
+
+Emits CSV blocks per benchmark to stdout (tee'd into bench_output.txt by
+the final deliverable run) and mirrors them under results/bench/.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+import traceback
+
+from benchmarks import (
+    fig2_hot_ratio,
+    fig5_throughput,
+    fig7_split,
+    fig8_multiplex,
+    fig9_query,
+    fig10_azure_trace,
+    roofline,
+    table1_coldstart,
+)
+from benchmarks.common import emit
+
+BENCHES = {
+    "table1": ("Table 1: cold-start phase breakdown", table1_coldstart.run),
+    "fig2": ("Fig 2/6: latency vs hot-request ratio", fig2_hot_ratio.run),
+    "fig5": ("Fig 5: tail latency vs RPS (0% hot)", fig5_throughput.run),
+    "fig7": ("Fig 7: compute/comm split vs D-hybrid", fig7_split.run),
+    "fig8": ("Fig 8: multiplexing mixed bursty apps", fig8_multiplex.run),
+    "fig9": ("Fig 9: SSB query latency + cost", fig9_query.run),
+    "fig10": ("Fig 1/10: Azure-trace committed memory", fig10_azure_trace.run),
+    "roofline": ("Roofline: dry-run three-term table", roofline.run),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="all")
+    ap.add_argument("--outdir", default="results/bench")
+    args = ap.parse_args()
+    names = list(BENCHES) if args.only == "all" else args.only.split(",")
+    os.makedirs(args.outdir, exist_ok=True)
+
+    failed = []
+    for name in names:
+        title, fn = BENCHES[name]
+        print(f"\n## {name}: {title}")
+        t0 = time.time()
+        try:
+            rows = fn()
+            emit(name, rows)
+            with open(os.path.join(args.outdir, f"{name}.csv"), "w") as f:
+                emit(name, rows, out_stream=f)
+            print(f"# {name} done in {time.time()-t0:.1f}s")
+        except Exception as e:
+            failed.append(name)
+            print(f"# {name} FAILED: {type(e).__name__}: {e}")
+            traceback.print_exc()
+    if failed:
+        print(f"\nFAILED benchmarks: {failed}")
+        raise SystemExit(1)
+    print("\nall benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

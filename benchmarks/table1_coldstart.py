@@ -1,0 +1,47 @@
+"""Table 1: cold-start latency breakdown per backend (microseconds).
+
+Real code paths, measured on this host: marshal the input descriptors,
+load the binary (RAM cache hit AND disk miss), bind+fill the memory
+context, set up execution (nothing / AOT-deserialize / full compile), and
+collect outputs. Payload: the paper's 1x1 int64 matmul.
+"""
+from __future__ import annotations
+
+from repro.core import BACKENDS, FunctionRegistry, measure
+from benchmarks.common import emit, matmul_inputs, register_matmul
+
+
+def run(samples: int = 9):
+    reg = FunctionRegistry()
+    name = register_matmul(reg, 1)
+    inputs = matmul_inputs(1)
+    rows = []
+    for backend in BACKENDS:
+        for cached in (True, False):
+            if not cached:
+                reg.evict(name)
+            bd, exec_s = measure(
+                reg, name, inputs, backend=backend, cached=cached,
+                samples=samples,
+            )
+            us = bd.us()
+            rows.append({
+                "backend": backend,
+                "code_cache": "ram" if cached else "disk",
+                "marshal_us": us["marshal_us"],
+                "load_us": us["load_us"],
+                "transfer_us": us["transfer_us"],
+                "setup_us": us["execute_setup_us"],
+                "output_us": us["output_us"],
+                "total_coldstart_us": us["total_us"],
+                "execute_us": exec_s * 1e6,
+            })
+    return rows
+
+
+def main():
+    emit("table1_coldstart", run())
+
+
+if __name__ == "__main__":
+    main()

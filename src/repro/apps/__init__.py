@@ -1,0 +1,4 @@
+"""Reference applications built on the public composition API."""
+from repro.apps.log_processing import build_log_processing
+
+__all__ = ["build_log_processing"]

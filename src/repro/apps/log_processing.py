@@ -1,0 +1,72 @@
+"""The paper's Figure 3 application: distributed log processing.
+
+Access -> HTTP(auth) -> FanOut -> HTTP(each shard, parallel) -> Render.
+Shared by tests, benchmarks, and examples.
+"""
+from __future__ import annotations
+
+from repro.core import (
+    Composition,
+    FunctionRegistry,
+    HttpRequest,
+    HttpResponse,
+    Item,
+    ServiceRegistry,
+)
+
+
+def build_log_processing(
+    reg: FunctionRegistry,
+    services: ServiceRegistry,
+    *,
+    shards: int = 3,
+    log_bytes: int = 2000,
+    auth_latency_s: float = 1e-3,
+    shard_latency_s: float = 2e-3,
+) -> Composition:
+    hosts = [f"logs{i}.svc" for i in range(shards)]
+    services.register(
+        "auth.svc",
+        lambda req: HttpResponse(200, " ".join(f"http://{h}/tail" for h in hosts)),
+        base_latency_s=auth_latency_s,
+    )
+    blob = b"log-entry " * (log_bytes // 10)
+    for h in hosts:
+        services.register(
+            h, lambda req, blob=blob: HttpResponse(200, blob),
+            base_latency_s=shard_latency_s, bandwidth_bps=1e9,
+        )
+
+    reg.register_function(
+        "access",
+        lambda ins: {"auth_req": [Item(HttpRequest(
+            "GET", f"http://auth.svc/endpoints?tok={ins['token'][0].data}"))]},
+    )
+    reg.register_function(
+        "fanout",
+        lambda ins: {"log_reqs": [
+            Item(HttpRequest("GET", u), key=str(i))
+            for i, u in enumerate(str(ins["endpoints"][0].data.body).split())
+        ]},
+    )
+    reg.register_function(
+        "render",
+        lambda ins: {"page": [Item(
+            f"rendered {sum(len(str(i.data.body)) for i in ins['logs'])} bytes".encode()
+        )]},
+    )
+
+    c = Composition("log_processing")
+    acc = c.compute("access", "access", inputs=("token",), outputs=("auth_req",))
+    h1 = c.http("auth_call")
+    fan = c.compute("fanout", "fanout", inputs=("endpoints",), outputs=("log_reqs",))
+    h2 = c.http("fetch_logs")
+    ren = c.compute("render", "render", inputs=("logs",), outputs=("page",))
+    c.edge(acc["auth_req"], h1["requests"], "all")
+    c.edge(h1["responses"], fan["endpoints"], "all")
+    c.edge(fan["log_reqs"], h2["requests"], "each")
+    c.edge(h2["responses"], ren["logs"], "all")
+    c.bind_input("token", acc["token"])
+    c.bind_output("result", ren["page"])
+    reg.register_composition(c)
+    return c

@@ -1,0 +1,32 @@
+"""Configuration system: model configs, shape sets, parallelism plans."""
+from repro.config.model import FAMILIES, ModelConfig, validate
+from repro.config.parallel import TPU_V5E, HardwareSpec, ParallelPlan
+from repro.config.shapes import (
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    SHAPE_ORDER,
+    SHAPES,
+    TRAIN_4K,
+    ShapeConfig,
+    applicability,
+    runnable_cells,
+)
+
+__all__ = [
+    "FAMILIES",
+    "ModelConfig",
+    "validate",
+    "ParallelPlan",
+    "HardwareSpec",
+    "TPU_V5E",
+    "ShapeConfig",
+    "SHAPES",
+    "SHAPE_ORDER",
+    "TRAIN_4K",
+    "PREFILL_32K",
+    "DECODE_32K",
+    "LONG_500K",
+    "applicability",
+    "runnable_cells",
+]

@@ -1,0 +1,222 @@
+"""Model configuration dataclasses for all supported architecture families.
+
+Families:
+  dense   -- decoder-only transformer (llama-style: RMSNorm, SwiGLU, RoPE, GQA)
+  moe     -- dense skeleton with MoE FFN (top-k routing, EP-shardable experts)
+  ssm     -- attention-free Mamba2 (SSD) stack
+  hybrid  -- Hymba-style parallel attention + SSM heads per block
+  encdec  -- Whisper-style encoder-decoder (conv frontend stubbed)
+  vlm     -- InternVL-style: patch-embedding stub + decoder-only LM backbone
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional
+
+FAMILIES = ("dense", "moe", "ssm", "hybrid", "encdec", "vlm")
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture description. All sizes are in elements, not bytes."""
+
+    name: str
+    family: str
+
+    num_layers: int
+    d_model: int
+    num_heads: int            # query heads (0 for attention-free)
+    num_kv_heads: int         # KV heads for GQA (== num_heads for MHA)
+    d_ff: int                 # dense FFN hidden dim (per-expert dim for MoE)
+    vocab_size: int
+
+    head_dim: int = 0         # 0 -> d_model // num_heads
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    dtype: str = "bfloat16"
+
+    # --- MoE ---
+    num_experts: int = 0
+    experts_per_token: int = 0
+    moe_capacity_factor: float = 1.25
+    # Some MoE models keep a shared dense FFN alongside experts; not used by
+    # the two assigned MoE archs, but supported.
+    shared_expert_d_ff: int = 0
+
+    # --- SSM (Mamba2 / SSD) ---
+    ssm_state: int = 0        # per-head state dim N
+    ssm_expand: int = 2       # d_inner = expand * d_model
+    ssm_head_dim: int = 64
+    ssm_conv_dim: int = 4     # depthwise conv kernel width
+    ssm_chunk: int = 128      # SSD chunk length
+
+    # --- hybrid (attention + SSM in parallel) ---
+    sliding_window: int = 0   # 0 -> full attention
+    global_attn_layers: tuple = ()  # layer indices using full attention
+
+    # --- encoder-decoder ---
+    encoder_layers: int = 0
+    encoder_frames: int = 1500  # stub frontend output length (audio frames)
+
+    # --- VLM ---
+    num_patches: int = 0      # stub frontend output length (image patches)
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        if self.num_heads == 0:
+            return 0
+        return self.d_model // self.num_heads
+
+    @property
+    def d_inner(self) -> int:
+        """SSM inner dim."""
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        if self.ssm_state == 0:
+            return 0
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """True if decode memory/compute is sub-quadratic in context length.
+
+        Pure-SSM archs compress context into O(1) state; hybrid archs bound
+        attention KV by the sliding window except on a few global layers.
+        """
+        return self.family == "ssm" or (
+            self.family == "hybrid" and self.sliding_window > 0
+        )
+
+    @property
+    def has_decoder(self) -> bool:
+        """Encoder-only archs have no decode step. All ours have decoders."""
+        return True
+
+    # ------------------------------------------------------------------
+    # Parameter counting (used for MODEL_FLOPS = 6*N*D roofline term).
+    # ------------------------------------------------------------------
+    def _attn_params(self) -> int:
+        dh = self.resolved_head_dim
+        if self.num_heads == 0:
+            return 0
+        q = self.d_model * self.num_heads * dh
+        kv = 2 * self.d_model * self.num_kv_heads * dh
+        o = self.num_heads * dh * self.d_model
+        bias = (self.num_heads + 2 * self.num_kv_heads) * dh if self.qkv_bias else 0
+        return q + kv + o + bias
+
+    def _dense_ffn_params(self, d_ff: int) -> int:
+        # SwiGLU: gate + up + down
+        return 3 * self.d_model * d_ff
+
+    def _moe_ffn_params(self) -> int:
+        router = self.d_model * self.num_experts
+        experts = self.num_experts * 3 * self.d_model * self.d_ff
+        shared = (
+            self._dense_ffn_params(self.shared_expert_d_ff)
+            if self.shared_expert_d_ff
+            else 0
+        )
+        return router + experts + shared
+
+    def _ssm_params(self) -> int:
+        d_in = self.d_inner
+        nheads = self.ssm_heads
+        ngroups = 1
+        # in_proj -> [z, x, B, C, dt]
+        in_proj = self.d_model * (2 * d_in + 2 * ngroups * self.ssm_state + nheads)
+        conv = self.ssm_conv_dim * (d_in + 2 * ngroups * self.ssm_state)
+        extras = 3 * nheads  # A_log, D, dt_bias
+        norm = d_in
+        out_proj = d_in * self.d_model
+        return in_proj + conv + extras + norm + out_proj
+
+    def layer_params(self, layer_idx: int = 0) -> int:
+        """Parameters in one block (norms included)."""
+        norms = 2 * self.d_model
+        if self.family == "ssm":
+            return self._ssm_params() + self.d_model  # single pre-norm
+        if self.family == "hybrid":
+            return (
+                self._attn_params()
+                + self._ssm_params()
+                + self._dense_ffn_params(self.d_ff)
+                + norms
+                + 2 * self.d_model  # per-branch output norms
+            )
+        if self.family == "moe":
+            return self._attn_params() + self._moe_ffn_params() + norms
+        # dense / vlm backbone / encdec decoder block
+        return self._attn_params() + self._dense_ffn_params(self.d_ff) + norms
+
+    def num_params(self) -> int:
+        """Total parameter count N."""
+        embed = self.vocab_size * self.d_model
+        head = 0 if self.tie_embeddings else self.vocab_size * self.d_model
+        final_norm = self.d_model
+        if self.family == "encdec":
+            enc_block = (
+                self._attn_params() + self._dense_ffn_params(self.d_ff) + 2 * self.d_model
+            )
+            # decoder block: self-attn + cross-attn + ffn + 3 norms
+            dec_block = (
+                2 * self._attn_params()
+                + self._dense_ffn_params(self.d_ff)
+                + 3 * self.d_model
+            )
+            total = (
+                self.encoder_layers * enc_block
+                + self.num_layers * dec_block
+                + embed
+                + head
+                + 2 * final_norm
+            )
+            return total
+        total = self.num_layers * self.layer_params() + embed + head + final_norm
+        if self.family == "vlm":
+            # stub patch projection into d_model
+            total += self.d_model * self.d_model
+        return total
+
+    def num_active_params(self) -> int:
+        """Active parameters per token (MoE: only top-k experts count)."""
+        if self.family != "moe":
+            return self.num_params()
+        embed = self.vocab_size * self.d_model
+        head = 0 if self.tie_embeddings else self.vocab_size * self.d_model
+        active_ffn = (
+            self.d_model * self.num_experts  # router always runs
+            + self.experts_per_token * 3 * self.d_model * self.d_ff
+            + (self._dense_ffn_params(self.shared_expert_d_ff) if self.shared_expert_d_ff else 0)
+        )
+        block = self._attn_params() + active_ffn + 2 * self.d_model
+        return self.num_layers * block + embed + head + self.d_model
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def validate(cfg: ModelConfig) -> None:
+    assert cfg.family in FAMILIES, f"unknown family {cfg.family}"
+    if cfg.family != "ssm":
+        assert cfg.num_heads > 0 and cfg.num_kv_heads > 0
+        assert cfg.num_heads % cfg.num_kv_heads == 0, "GQA requires q%kv==0"
+    if cfg.family == "moe":
+        assert cfg.num_experts > 0 and cfg.experts_per_token > 0
+    if cfg.family in ("ssm", "hybrid"):
+        assert cfg.ssm_state > 0
+        assert cfg.d_inner % cfg.ssm_head_dim == 0
+    if cfg.family == "encdec":
+        assert cfg.encoder_layers > 0

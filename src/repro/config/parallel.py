@@ -1,0 +1,76 @@
+"""Parallelism / run configuration.
+
+The production meshes are fixed by the assignment:
+  single-pod: (16, 16)      axes ("data", "model")
+  multi-pod : (2, 16, 16)   axes ("pod", "data", "model")
+
+``ParallelPlan`` describes how logical tensor axes map onto mesh axes; the
+actual PartitionSpecs are derived in ``repro.sharding``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ParallelPlan:
+    """Logical -> physical axis plan.
+
+    Attributes:
+      data_axes:    mesh axes used for batch data parallelism.
+      fsdp_axes:    mesh axes over which parameters/optimizer state are
+                    sharded ZeRO-3 style (all-gathered per layer on use).
+      tensor_axes:  mesh axes for tensor (op) parallelism (heads / d_ff).
+      expert_axes:  mesh axes for expert parallelism (MoE only).
+      seq_axes:     mesh axes for sequence/context parallelism (long ctx).
+      remat:        activation checkpoint policy: "none"|"full"|"dots".
+      grad_accum:   microbatch count (1 = no accumulation).
+      zero3:        shard params over fsdp_axes (else replicate over them).
+      compress_grads: apply int8 error-feedback compression to the DP
+                    gradient all-reduce (training only).
+      overlap_weight_gather: double-buffer next-layer weight all-gather
+                    inside the layer scan (ZeRO-3 prefetch).
+    """
+
+    data_axes: Tuple[str, ...] = ("pod", "data")
+    fsdp_axes: Tuple[str, ...] = ("pod", "data")
+    tensor_axes: Tuple[str, ...] = ("model",)
+    expert_axes: Tuple[str, ...] = ("model",)
+    seq_axes: Tuple[str, ...] = ("data",)
+    remat: str = "full"
+    grad_accum: int = 1
+    zero3: bool = True
+    compress_grads: bool = False
+    overlap_weight_gather: bool = False
+
+    def restrict_to(self, axis_names: Tuple[str, ...]) -> "ParallelPlan":
+        """Drop mesh axes not present (e.g. no 'pod' on single-pod mesh)."""
+        f = lambda axes: tuple(a for a in axes if a in axis_names)
+        return ParallelPlan(
+            data_axes=f(self.data_axes),
+            fsdp_axes=f(self.fsdp_axes),
+            tensor_axes=f(self.tensor_axes),
+            expert_axes=f(self.expert_axes),
+            seq_axes=f(self.seq_axes),
+            remat=self.remat,
+            grad_accum=self.grad_accum,
+            zero3=self.zero3,
+            compress_grads=self.compress_grads,
+            overlap_weight_gather=self.overlap_weight_gather,
+        )
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    """Roofline constants for the target accelerator (TPU v5e defaults)."""
+
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12        # bf16 FLOP/s per chip
+    hbm_bandwidth: float = 819e9      # bytes/s per chip
+    ici_bandwidth: float = 50e9       # bytes/s per link
+    hbm_bytes: int = 16 * 1024**3     # capacity per chip
+    vmem_bytes: int = 128 * 1024**2
+
+
+TPU_V5E = HardwareSpec()

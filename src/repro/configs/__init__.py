@@ -1,0 +1,58 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``get_smoke(arch_id)``.
+
+One module per assigned architecture; each exposes ``full()`` (the exact
+published config) and ``smoke()`` (a reduced same-family config used by the
+CPU smoke tests).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.config import ModelConfig, validate
+from repro.configs import (
+    deepseek_67b,
+    glm4_9b,
+    granite_8b,
+    hymba_1p5b,
+    internvl2_76b,
+    mamba2_130m,
+    olmoe_1b_7b,
+    qwen25_32b,
+    qwen3_moe_235b,
+    whisper_base,
+)
+
+_MODULES = {
+    deepseek_67b.ARCH_ID: deepseek_67b,
+    glm4_9b.ARCH_ID: glm4_9b,
+    qwen25_32b.ARCH_ID: qwen25_32b,
+    granite_8b.ARCH_ID: granite_8b,
+    whisper_base.ARCH_ID: whisper_base,
+    hymba_1p5b.ARCH_ID: hymba_1p5b,
+    internvl2_76b.ARCH_ID: internvl2_76b,
+    mamba2_130m.ARCH_ID: mamba2_130m,
+    olmoe_1b_7b.ARCH_ID: olmoe_1b_7b,
+    qwen3_moe_235b.ARCH_ID: qwen3_moe_235b,
+}
+
+ARCH_IDS: List[str] = list(_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    cfg = _MODULES[arch_id].full()
+    validate(cfg)
+    return cfg
+
+
+def get_smoke(arch_id: str) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    cfg = _MODULES[arch_id].smoke()
+    validate(cfg)
+    return cfg
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,38 @@
+"""granite-8b: dense llama-arch code LM [arXiv:2405.04324; hf].
+
+36L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=49152.
+"""
+from repro.config import ModelConfig
+
+ARCH_ID = "granite-8b"
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="dense",
+        num_layers=36,
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=8,
+        d_ff=14336,
+        vocab_size=49152,
+        head_dim=128,
+        rope_theta=10000.0,
+        tie_embeddings=True,
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke",
+        family="dense",
+        num_layers=2,
+        d_model=64,
+        num_heads=8,
+        num_kv_heads=2,
+        d_ff=160,
+        vocab_size=256,
+        head_dim=8,
+        tie_embeddings=True,
+    )

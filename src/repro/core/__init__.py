@@ -1,0 +1,66 @@
+"""Dandelion core: the paper's contribution as a composable platform.
+
+Programming model (SS4): ``Composition`` DAGs of pure compute functions +
+platform communication functions, with all/each/key edge fan-out.
+
+Execution system (SS5-6): memory contexts, dispatcher, compute/comm
+engines, PI control plane, cold-start backends, cluster manager.
+"""
+from repro.core.cluster import ClusterManager, KeepWarmPlatform
+from repro.core.coldstart import (
+    BACKENDS,
+    ColdStartBreakdown,
+    ColdStartProfile,
+    cold_start,
+    measure,
+    profile_from_measurement,
+)
+from repro.core.context import MemoryContext, MemoryTracker
+from repro.core.dag import Composition, Edge, PortRef, Vertex
+from repro.core.dispatcher import Dispatcher, InvocationRun
+from repro.core.engines import EngineSet, Task
+from repro.core.http import (
+    HttpRequest,
+    HttpResponse,
+    SanitizationError,
+    ServiceRegistry,
+    sanitize,
+)
+from repro.core.items import Item, ItemSet, SetDict, make_set
+from repro.core.node import WorkerNode
+from repro.core.registry import FunctionRegistry
+from repro.core.sim import EventLoop, Timeline
+
+__all__ = [
+    "BACKENDS",
+    "ClusterManager",
+    "ColdStartBreakdown",
+    "ColdStartProfile",
+    "Composition",
+    "Dispatcher",
+    "Edge",
+    "EngineSet",
+    "EventLoop",
+    "FunctionRegistry",
+    "HttpRequest",
+    "HttpResponse",
+    "InvocationRun",
+    "Item",
+    "ItemSet",
+    "KeepWarmPlatform",
+    "MemoryContext",
+    "MemoryTracker",
+    "PortRef",
+    "SanitizationError",
+    "ServiceRegistry",
+    "SetDict",
+    "Task",
+    "Timeline",
+    "Vertex",
+    "WorkerNode",
+    "cold_start",
+    "make_set",
+    "measure",
+    "profile_from_measurement",
+    "sanitize",
+]

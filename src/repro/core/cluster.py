@@ -1,0 +1,251 @@
+"""Cluster manager + keep-warm baseline platform.
+
+``ClusterManager`` plays Dirigent's role (SS5): it load-balances
+composition invocations over Dandelion worker nodes, injects/handles node
+failures (pure functions are idempotent, so lost invocations restart on a
+surviving node), supports elastic node add/remove, and aggregates memory /
+latency accounting.
+
+``KeepWarmPlatform`` is the baseline execution model (Firecracker/
+Knative): single-function requests served by a per-function sandbox pool.
+Two modes:
+  * forced ``hot_ratio`` (the paper's 97%-hot microbenchmark setting);
+  * ``autoscale=True``: Knative-style concurrency autoscaler with panic
+    window + keep-alive reaping (the Azure-trace experiment).
+Sandboxes commit context + guest-OS memory while alive - the
+over-provisioning Figures 1/10 quantify.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.coldstart import ColdStartProfile
+from repro.core.context import MemoryTracker
+from repro.core.dag import Composition
+from repro.core.dispatcher import InvocationRun
+from repro.core.items import SetDict
+from repro.core.node import WorkerNode
+from repro.core.sim import EventLoop
+from repro.core.tracing import LatencyStats
+
+
+class ClusterManager:
+    def __init__(self, nodes: List[WorkerNode], loop: EventLoop):
+        if not nodes:
+            raise ValueError("cluster needs at least one node")
+        self.loop = loop
+        self.nodes: List[WorkerNode] = list(nodes)
+        self.latency = LatencyStats()
+        self.restarts = 0
+        self.failed = 0
+        self._outstanding: Dict[int, int] = {id(n): 0 for n in nodes}
+
+    # ------------------------------------------------------------ routing
+    def _route(self) -> WorkerNode:
+        alive = [n for n in self.nodes if n.alive]
+        if not alive:
+            raise RuntimeError("no alive nodes")
+        return min(alive, key=lambda n: self._outstanding[id(n)])
+
+    def invoke(
+        self,
+        comp: Composition,
+        inputs: SetDict,
+        on_done: Optional[Callable[[InvocationRun], None]] = None,
+        _attempt: int = 0,
+    ) -> None:
+        node = self._route()
+        self._outstanding[id(node)] += 1
+        t_submit = self.loop.now
+
+        def done(inv: InvocationRun):
+            self._outstanding[id(node)] -= 1
+            if inv.failed and "node_failure" in inv.failed and _attempt < 3:
+                # idempotent re-execution on a surviving node (SS6.1)
+                self.restarts += 1
+                self.invoke(comp, inputs, on_done, _attempt=_attempt + 1)
+                return
+            if inv.failed:
+                self.failed += 1
+            else:
+                self.latency.add(self.loop.now - t_submit)
+            if on_done:
+                on_done(inv)
+
+        node.invoke(comp, inputs, on_done=done)
+
+    def invoke_at(self, t: float, comp: Composition, inputs: SetDict,
+                  on_done=None):
+        self.loop.at(t, lambda: self.invoke(comp, inputs, on_done))
+
+    # ------------------------------------------------------ elasticity
+    def add_node(self, node: WorkerNode):
+        self.nodes.append(node)
+        self._outstanding[id(node)] = 0
+
+    def remove_node(self, node: WorkerNode):
+        """Graceful drain: stop routing; node finishes in-flight work."""
+        node.alive = False
+
+    def fail_node_at(self, t: float, idx: int):
+        self.loop.at(t, self.nodes[idx].fail)
+
+    def run(self, until: Optional[float] = None):
+        self.loop.run(until=until)
+
+    @property
+    def committed_avg_bytes(self) -> float:
+        return sum(n.committed_avg_bytes for n in self.nodes)
+
+
+# ===========================================================================
+# Keep-warm baseline (Firecracker / Knative)
+# ===========================================================================
+@dataclass
+class Sandbox:
+    fn_name: str
+    committed_bytes: int
+    idle_since: float = 0.0
+    busy: bool = False
+
+
+@dataclass
+class _FnState:
+    profile: ColdStartProfile          # boot(setup) + execute times
+    context_bytes: int
+    pool: List[Sandbox] = field(default_factory=list)
+    waiting: int = 0
+    # autoscaler state
+    concurrency: int = 0
+    history: List[Tuple[float, int]] = field(default_factory=list)
+
+
+class KeepWarmPlatform:
+    """Single-function baseline with a per-function warm sandbox pool."""
+
+    def __init__(
+        self,
+        loop: EventLoop,
+        *,
+        cores: int = 16,
+        guest_os_bytes: int = 128 << 20,
+        hot_ratio: Optional[float] = None,  # forced ratio; None -> autoscale
+        keepalive_s: float = 60.0,
+        target_concurrency: float = 1.0,
+        reap_interval_s: float = 1.0,
+        seed: int = 0,
+        name: str = "keepwarm",
+    ):
+        self.loop = loop
+        self.cores = cores
+        self.guest_os_bytes = guest_os_bytes
+        self.hot_ratio = hot_ratio
+        self.keepalive_s = keepalive_s
+        self.target_concurrency = target_concurrency
+        self.reap_interval_s = reap_interval_s
+        self.rng = np.random.default_rng(seed)
+        self.name = name
+        self.fns: Dict[str, _FnState] = {}
+        self.tracker = MemoryTracker(loop)
+        self.latency = LatencyStats()
+        self.cold_count = 0
+        self.warm_count = 0
+        self._core_free = cores
+        self._runq: List[Tuple[float, Callable[[], None]]] = []
+        self._reaper_started = False
+
+    # ------------------------------------------------------------------
+    def register(self, fn_name: str, profile: ColdStartProfile,
+                 context_bytes: int = 1 << 20):
+        self.fns[fn_name] = _FnState(profile=profile, context_bytes=context_bytes)
+
+    def _sandbox_bytes(self, st: _FnState) -> int:
+        return st.context_bytes + self.guest_os_bytes
+
+    # ------------------------------------------------------- core model
+    def _run_on_core(self, duration: float, done: Callable[[], None]):
+        if self._core_free > 0:
+            self._core_free -= 1
+
+            def fin():
+                self._core_free += 1
+                done()
+                if self._runq:
+                    d, cb = self._runq.pop(0)
+                    self._run_on_core(d, cb)
+
+            self.loop.after(duration, fin)
+        else:
+            self._runq.append((duration, done))
+
+    # ------------------------------------------------------------------
+    def request_at(self, t: float, fn_name: str,
+                   on_done: Optional[Callable[[float], None]] = None):
+        self.loop.at(t, lambda: self._request(fn_name, on_done))
+
+    def _request(self, fn_name: str, on_done):
+        if not self._reaper_started and self.hot_ratio is None:
+            self._reaper_started = True
+            self.loop.after(self.reap_interval_s, self._reap, daemon=True)
+        st = self.fns[fn_name]
+        st.concurrency += 1
+        t0 = self.loop.now
+        idle = next((s for s in st.pool if not s.busy), None)
+
+        forced_cold = (
+            self.hot_ratio is not None
+            and self.rng.random() >= self.hot_ratio
+        )
+        if idle is not None and not forced_cold:
+            self.warm_count += 1
+            self._serve(st, idle, t0, on_done, boot_s=0.0)
+        else:
+            self.cold_count += 1
+            sb = Sandbox(fn_name, self._sandbox_bytes(st))
+            st.pool.append(sb)
+            self.tracker.commit(sb.committed_bytes)
+            boot_s, _ = st.profile.sample(self.rng)
+            self._serve(st, sb, t0, on_done, boot_s=boot_s)
+
+    def _serve(self, st: _FnState, sb: Sandbox, t0: float, on_done,
+               boot_s: float):
+        sb.busy = True
+        _, exec_s = st.profile.sample(self.rng)
+
+        def finish():
+            sb.busy = False
+            sb.idle_since = self.loop.now
+            st.concurrency -= 1
+            lat = self.loop.now - t0
+            self.latency.add(lat)
+            if on_done:
+                on_done(lat)
+
+        self._run_on_core(boot_s + exec_s, finish)
+
+    # -------------------------------------------------------- autoscaler
+    def _reap(self):
+        now = self.loop.now
+        for st in self.fns.values():
+            # Knative-style: desired = ceil(avg concurrency / target);
+            # keep-alive grace before reaping idle sandboxes beyond desired
+            st.history.append((now, st.concurrency))
+            st.history = [(t, c) for t, c in st.history if now - t <= 60.0]
+            avg_c = np.mean([c for _, c in st.history]) if st.history else 0.0
+            desired = int(np.ceil(avg_c / self.target_concurrency))
+            idle = [s for s in st.pool if not s.busy]
+            idle.sort(key=lambda s: s.idle_since)
+            keep = max(desired - sum(1 for s in st.pool if s.busy), 0)
+            for sb in idle[keep:] if len(idle) > keep else []:
+                if now - sb.idle_since > self.keepalive_s:
+                    st.pool.remove(sb)
+                    self.tracker.release(sb.committed_bytes)
+        self.loop.after(self.reap_interval_s, self._reap, daemon=True)
+
+    @property
+    def committed_avg_bytes(self) -> float:
+        return self.tracker.timeline.average(self.loop.now)

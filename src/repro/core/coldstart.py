@@ -1,0 +1,247 @@
+"""Cold-start backends: three real code paths with Table-1-style phases.
+
+The paper's four isolation backends (CHERI/rWasm/process/KVM) are CPU
+hardware mechanisms with no TPU analogue (DESIGN.md SS2). What *does*
+transfer is the cold-start cost structure, which we reproduce with real
+work on this platform:
+
+  dandelion  -- Dandelion's own path: bind a memory context + load the
+                function binary from the RAM code cache (disk on a cache
+                miss) + set up the I/O descriptor structure. No compile,
+                no deserialize: this is the 100s-of-us path.
+  snapshot   -- Firecracker-snapshot analogue: the function's AOT-compiled
+                executable is deserialized from its serialized snapshot on
+                every cold start (jax serialize_executable round trip).
+                ms-scale.
+  microvm    -- Firecracker full-boot analogue: trace+lower+compile the
+                function on the critical path. 100ms-scale.
+
+Phases mirror Table 1: marshal requests / load from disk / transfer input
+/ execute(-setup) / get+send output. ``measure`` runs the real path k
+times and returns median phase durations; the virtual-time engines then
+consume these profiles (with seeded lognormal jitter) so thousand-RPS
+sweeps stay faithful to measured costs.
+"""
+from __future__ import annotations
+
+import pickle
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.context import MemoryContext
+from repro.core.items import Item, SetDict
+from repro.core.registry import ComputeFunction, FunctionRegistry
+
+BACKENDS = ("dandelion", "snapshot", "microvm")
+
+
+@dataclass
+class ColdStartBreakdown:
+    """Per-phase seconds (Table 1 rows)."""
+
+    marshal: float = 0.0
+    load: float = 0.0
+    transfer: float = 0.0
+    execute_setup: float = 0.0
+    output: float = 0.0
+
+    @property
+    def total(self) -> float:
+        return self.marshal + self.load + self.transfer + self.execute_setup + self.output
+
+    def us(self) -> Dict[str, float]:
+        return {
+            "marshal_us": self.marshal * 1e6,
+            "load_us": self.load * 1e6,
+            "transfer_us": self.transfer * 1e6,
+            "execute_setup_us": self.execute_setup * 1e6,
+            "output_us": self.output * 1e6,
+            "total_us": self.total * 1e6,
+        }
+
+
+class _AotCache:
+    """Serialized-executable store for the snapshot/microvm backends."""
+
+    def __init__(self):
+        self._snapshots: Dict[str, bytes] = {}
+
+    def snapshot_blob(self, cf: ComputeFunction) -> bytes:
+        if cf.name in self._snapshots:
+            return self._snapshots[cf.name]
+        if cf.jax_fn is None:
+            raise ValueError(f"{cf.name}: snapshot backend needs a jax payload")
+        import jax
+        from jax.experimental import serialize_executable
+
+        compiled = jax.jit(cf.jax_fn).lower(*cf.abstract_args).compile()
+        blob = serialize_executable.serialize(compiled)
+        self._snapshots[cf.name] = pickle.dumps(blob)
+        return self._snapshots[cf.name]
+
+
+_AOT = _AotCache()
+
+
+def _marshal(inputs: SetDict) -> Dict[str, Any]:
+    """Build the low-level descriptor structure the function sees (SS4.1)."""
+    return {
+        name: [(it.key, it.nbytes) for it in items]
+        for name, items in inputs.items()
+    }
+
+
+def cold_start(
+    registry: FunctionRegistry,
+    name: str,
+    inputs: SetDict,
+    *,
+    backend: str = "dandelion",
+    cached: bool = True,
+    tracker=None,
+) -> Tuple[MemoryContext, ColdStartBreakdown, Callable[[], SetDict]]:
+    """Run the real cold-start path. Returns (context, phases, run_fn).
+
+    ``run_fn()`` executes the function body against the prepared context
+    and writes outputs back into it (timed separately by the caller).
+    """
+    cf = registry.get(name)
+    bd = ColdStartBreakdown()
+
+    t0 = time.perf_counter()
+    desc = _marshal(inputs)
+    bd.marshal = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    code = registry.load_code(name, cached=cached)
+    bd.load = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    ctx = MemoryContext(capacity=cf.context_bytes, tracker=tracker)
+    ctx.load_code(code)
+    for set_name, items in inputs.items():
+        ctx.write_set(set_name, items)
+    bd.transfer = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    runner: Callable[[], SetDict]
+    if backend == "dandelion":
+        fn = cf.fn
+        runner = lambda: fn(ctx.inputs)
+    elif backend == "snapshot":
+        blob = _AOT.snapshot_blob(cf)
+        from jax.experimental import serialize_executable
+
+        compiled = serialize_executable.deserialize_and_load(
+            *pickle.loads(blob)
+        )
+        runner = _jax_runner(cf, compiled, ctx)
+    elif backend == "microvm":
+        if cf.jax_fn is None:
+            raise ValueError(f"{name}: microvm backend needs a jax payload")
+        import jax
+
+        # fresh closure per boot: defeats the jit cache, so every cold
+        # start really pays trace + lower + compile (the full-boot analogue)
+        payload = cf.jax_fn
+        fresh = lambda *a: payload(*a)  # noqa: E731
+        compiled = jax.jit(fresh).lower(*cf.abstract_args).compile()
+        runner = _jax_runner(cf, compiled, ctx)
+    else:
+        raise ValueError(f"unknown backend {backend!r}; known {BACKENDS}")
+    bd.execute_setup = time.perf_counter() - t0
+
+    def run_and_collect() -> SetDict:
+        out = runner()
+        t1 = time.perf_counter()
+        for sname, items in out.items():
+            ctx.write_set(sname, items, into="outputs")
+        bd.output = time.perf_counter() - t1
+        return out
+
+    return ctx, bd, run_and_collect
+
+
+def _jax_runner(cf: ComputeFunction, compiled, ctx: MemoryContext):
+    """Adapt an AOT-compiled jax payload to the SetDict interface: arrays
+    are taken positionally from the first input set."""
+
+    def run() -> SetDict:
+        args = []
+        for items in ctx.inputs.values():
+            for it in items:
+                if hasattr(it.data, "shape"):
+                    args.append(it.data)
+        args = args[: len(cf.abstract_args)]
+        result = compiled(*args)
+        leaves = result if isinstance(result, (tuple, list)) else [result]
+        return {"out": [Item(np.asarray(x)) for x in leaves]}
+
+    return run
+
+
+def measure(
+    registry: FunctionRegistry,
+    name: str,
+    inputs: SetDict,
+    *,
+    backend: str = "dandelion",
+    cached: bool = True,
+    samples: int = 7,
+    execute: bool = True,
+) -> Tuple[ColdStartBreakdown, float]:
+    """Median phase breakdown over ``samples`` real runs.
+
+    Returns (breakdown, execute_seconds). Set ``execute=False`` to measure
+    only sandbox creation (Fig. 5's workload).
+    """
+    phases = []
+    exec_times = []
+    for _ in range(samples):
+        ctx, bd, run = cold_start(
+            registry, name, inputs, backend=backend, cached=cached
+        )
+        if execute:
+            t0 = time.perf_counter()
+            run()
+            exec_times.append(time.perf_counter() - t0 - bd.output)
+        phases.append(bd)
+        ctx.free()
+    med = lambda xs: float(np.median(xs))
+    out = ColdStartBreakdown(
+        marshal=med([p.marshal for p in phases]),
+        load=med([p.load for p in phases]),
+        transfer=med([p.transfer for p in phases]),
+        execute_setup=med([p.execute_setup for p in phases]),
+        output=med([p.output for p in phases]),
+    )
+    return out, (med(exec_times) if exec_times else 0.0)
+
+
+@dataclass
+class ColdStartProfile:
+    """Calibrated per-(function, backend) profile consumed by the
+    virtual-time engines: deterministic base + seeded lognormal jitter."""
+
+    setup_s: float            # marshal+load+transfer+execute_setup+output
+    execute_s: float
+    jitter_sigma: float = 0.08
+
+    def sample(self, rng: np.random.Generator) -> Tuple[float, float]:
+        j1 = float(rng.lognormal(0.0, self.jitter_sigma))
+        j2 = float(rng.lognormal(0.0, self.jitter_sigma))
+        return self.setup_s * j1, self.execute_s * j2
+
+
+def profile_from_measurement(
+    registry: FunctionRegistry,
+    name: str,
+    inputs: SetDict,
+    backend: str = "dandelion",
+    cached: bool = True,
+) -> ColdStartProfile:
+    bd, exec_s = measure(registry, name, inputs, backend=backend, cached=cached)
+    return ColdStartProfile(setup_s=bd.total, execute_s=exec_s)

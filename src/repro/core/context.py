@@ -1,0 +1,98 @@
+"""Memory contexts: bounded arenas with committed-page accounting (SS5).
+
+A context is a contiguous virtual region sized by the user-declared
+function memory requirement. Physical commitment is modeled at page
+granularity exactly like demand paging: pages are committed on first
+write, and the node-level ``MemoryTracker`` integrates committed bytes
+over (virtual) time - the quantity Figures 1/10 plot.
+
+``transfer_to`` moves items between contexts (the dispatcher's data
+passing; a memcpy here, device-to-device copy for array payloads).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+from repro.core.items import Item, ItemSet, SetDict, sets_bytes
+from repro.core.sim import Timeline
+
+PAGE = 4096
+
+
+class MemoryTracker:
+    """Node-wide committed-memory accounting over virtual time."""
+
+    def __init__(self, loop=None):
+        self.loop = loop
+        self.committed = 0
+        self.timeline = Timeline()
+        self._record()
+
+    def _record(self):
+        t = self.loop.now if self.loop is not None else 0.0
+        self.timeline.record(t, float(self.committed))
+
+    def commit(self, nbytes: int):
+        self.committed += nbytes
+        self._record()
+
+    def release(self, nbytes: int):
+        self.committed -= nbytes
+        self._record()
+
+
+@dataclass
+class MemoryContext:
+    """One function's isolated memory region."""
+
+    capacity: int
+    tracker: Optional[MemoryTracker] = None
+    committed_pages: int = 0
+    inputs: SetDict = field(default_factory=dict)
+    outputs: SetDict = field(default_factory=dict)
+    code_bytes: int = 0
+    freed: bool = False
+
+    def _commit_for(self, nbytes: int):
+        pages = (nbytes + PAGE - 1) // PAGE
+        self.committed_pages += pages
+        if self.tracker:
+            self.tracker.commit(pages * PAGE)
+
+    @property
+    def committed_bytes(self) -> int:
+        return self.committed_pages * PAGE
+
+    def load_code(self, code: bytes) -> None:
+        self.code_bytes = len(code)
+        self._commit_for(len(code))
+
+    def write_set(self, name: str, items: ItemSet, into: str = "inputs") -> None:
+        store = self.inputs if into == "inputs" else self.outputs
+        store.setdefault(name, []).extend(items)
+        self._commit_for(sum(i.nbytes for i in items))
+
+    def read_set(self, name: str, frm: str = "outputs") -> ItemSet:
+        store = self.outputs if frm == "outputs" else self.inputs
+        return list(store.get(name, []))
+
+    def transfer_to(
+        self, other: "MemoryContext", set_name: str, dst_set: str,
+        items: Optional[ItemSet] = None,
+    ) -> int:
+        """Copy items (default: whole output set) into ``other``'s inputs.
+        Returns bytes moved (the dispatcher charges transfer time)."""
+        payload = items if items is not None else self.read_set(set_name)
+        other.write_set(dst_set, payload, into="inputs")
+        return sum(i.nbytes for i in payload)
+
+    def free(self) -> None:
+        if self.freed:
+            return
+        self.freed = True
+        if self.tracker:
+            self.tracker.release(self.committed_bytes)
+        self.inputs.clear()
+        self.outputs.clear()
+        self.committed_pages = 0

@@ -1,0 +1,176 @@
+"""Composition IR: the paper's programming model (SS4.1).
+
+A composition is a DAG G=(V,E). Vertices are (i) user compute functions,
+(ii) platform communication functions, or (iii) nested compositions.
+Edges carry a metadata descriptor: which output set of V1 feeds which
+input set of V2 and a distribution keyword:
+
+    all   -- every instance of V2 receives the whole item set
+    each  -- one V2 instance per item
+    key   -- one V2 instance per distinct item key
+
+At most one 'each'/'key' edge may target a vertex (it determines the
+instance count); 'all' edges broadcast to every instance.
+
+The builder doubles as the composition DSL (SS4.1 "composition language").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+MODES = ("all", "each", "key")
+
+COMPUTE, COMM, SUBGRAPH = "compute", "comm", "composition"
+
+
+@dataclass(frozen=True)
+class PortRef:
+    vertex: str
+    set_name: str
+
+
+@dataclass
+class Vertex:
+    name: str
+    kind: str                      # compute | comm | composition
+    function: str = ""             # registry name (compute) / protocol (comm)
+    inputs: Tuple[str, ...] = ()
+    outputs: Tuple[str, ...] = ()
+    subgraph: Optional["Composition"] = None
+    context_bytes: int = 1 << 20   # user-declared memory requirement
+    timeout_s: float = 60.0
+
+    def __getitem__(self, set_name: str) -> PortRef:
+        if set_name not in self.inputs and set_name not in self.outputs:
+            raise KeyError(f"{self.name}: unknown set {set_name!r}")
+        return PortRef(self.name, set_name)
+
+
+@dataclass(frozen=True)
+class Edge:
+    src: PortRef
+    dst: PortRef
+    mode: str = "all"
+
+
+@dataclass
+class Composition:
+    """DAG of compute/communication functions (+ nested compositions)."""
+
+    name: str
+    vertices: Dict[str, Vertex] = field(default_factory=dict)
+    edges: List[Edge] = field(default_factory=list)
+    input_bindings: Dict[str, PortRef] = field(default_factory=dict)
+    output_bindings: Dict[str, PortRef] = field(default_factory=dict)
+
+    # ------------------------------------------------------------- DSL
+    def _add(self, v: Vertex) -> Vertex:
+        if v.name in self.vertices:
+            raise ValueError(f"duplicate vertex {v.name!r}")
+        self.vertices[v.name] = v
+        return v
+
+    def compute(
+        self,
+        name: str,
+        function: str,
+        inputs: Tuple[str, ...],
+        outputs: Tuple[str, ...],
+        context_bytes: int = 1 << 20,
+        timeout_s: float = 60.0,
+    ) -> Vertex:
+        return self._add(Vertex(
+            name, COMPUTE, function, tuple(inputs), tuple(outputs),
+            context_bytes=context_bytes, timeout_s=timeout_s,
+        ))
+
+    def http(self, name: str, context_bytes: int = 1 << 20) -> Vertex:
+        """The platform HTTP communication function (trusted, SS6.3)."""
+        return self._add(Vertex(
+            name, COMM, "http", ("requests",), ("responses",),
+            context_bytes=context_bytes,
+        ))
+
+    def subgraph(self, name: str, comp: "Composition") -> Vertex:
+        return self._add(Vertex(
+            name, SUBGRAPH, comp.name,
+            tuple(comp.input_bindings), tuple(comp.output_bindings),
+            subgraph=comp,
+        ))
+
+    def edge(self, src: PortRef, dst: PortRef, mode: str = "all") -> None:
+        if mode not in MODES:
+            raise ValueError(f"edge mode {mode!r} not in {MODES}")
+        sv, dv = self.vertices.get(src.vertex), self.vertices.get(dst.vertex)
+        if sv is None or dv is None:
+            raise ValueError("edge references unknown vertex")
+        if src.set_name not in sv.outputs:
+            raise ValueError(f"{src.vertex} has no output set {src.set_name!r}")
+        if dst.set_name not in dv.inputs:
+            raise ValueError(f"{dst.vertex} has no input set {dst.set_name!r}")
+        self.edges.append(Edge(src, dst, mode))
+
+    def bind_input(self, name: str, dst: PortRef) -> None:
+        self.input_bindings[name] = dst
+
+    def bind_output(self, name: str, src: PortRef) -> None:
+        self.output_bindings[name] = src
+
+    # ------------------------------------------------------ validation
+    def in_edges(self, vertex: str) -> List[Edge]:
+        return [e for e in self.edges if e.dst.vertex == vertex]
+
+    def out_edges(self, vertex: str) -> List[Edge]:
+        return [e for e in self.edges if e.src.vertex == vertex]
+
+    def validate(self) -> None:
+        # acyclic
+        order = self.topo_order()
+        if len(order) != len(self.vertices):
+            raise ValueError(f"{self.name}: composition graph has a cycle")
+        for v in self.vertices.values():
+            fan = [e for e in self.in_edges(v.name) if e.mode in ("each", "key")]
+            if len(fan) > 1:
+                raise ValueError(
+                    f"{v.name}: at most one 'each'/'key' edge may target a vertex"
+                )
+            # every input set must be fed by an edge or a composition input
+            fed = {e.dst.set_name for e in self.in_edges(v.name)}
+            fed |= {
+                p.set_name for p in self.input_bindings.values()
+                if p.vertex == v.name
+            }
+            missing = set(v.inputs) - fed
+            if missing:
+                raise ValueError(f"{v.name}: unfed input sets {sorted(missing)}")
+            if v.kind == SUBGRAPH:
+                v.subgraph.validate()
+        for name, p in self.output_bindings.items():
+            v = self.vertices.get(p.vertex)
+            if v is None or p.set_name not in v.outputs:
+                raise ValueError(f"output binding {name!r} invalid")
+
+    def topo_order(self) -> List[str]:
+        indeg = {v: 0 for v in self.vertices}
+        for e in self.edges:
+            indeg[e.dst.vertex] += 1
+        ready = sorted(v for v, d in indeg.items() if d == 0)
+        order: List[str] = []
+        while ready:
+            v = ready.pop(0)
+            order.append(v)
+            for e in self.out_edges(v):
+                indeg[e.dst.vertex] -= 1
+                if indeg[e.dst.vertex] == 0:
+                    ready.append(e.dst.vertex)
+            ready.sort()
+        return order
+
+    def io_intensity(self) -> float:
+        """Fraction of vertices that are communication functions - the
+        signal the control plane uses for initial core allocation (SS3)."""
+        if not self.vertices:
+            return 0.0
+        comm = sum(1 for v in self.vertices.values() if v.kind == COMM)
+        return comm / len(self.vertices)

@@ -1,0 +1,317 @@
+"""Dispatcher: composition orchestration within a worker node (SS5, SS6.1).
+
+Tracks pending invocations, function readiness (all input sets fed),
+instance fan-out per edge keywords, data movement between contexts,
+context deallocation once all consumers have taken a function's outputs,
+idempotent re-execution on failure, and hedged backups for stragglers.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core.coldstart import ColdStartProfile
+from repro.core.dag import COMM, COMPUTE, SUBGRAPH, Composition, Edge, Vertex
+from repro.core.engines import EngineSet, Task
+from repro.core.http import IDEMPOTENT_METHODS, HttpRequest
+from repro.core.items import Item, ItemSet, SetDict, group_by_key
+from repro.core.registry import FunctionRegistry
+from repro.core.sim import EventLoop
+
+
+@dataclass
+class InstanceState:
+    idx: int
+    inputs: SetDict
+    done: bool = False
+    outputs: SetDict = field(default_factory=dict)
+
+
+@dataclass
+class VertexRun:
+    vertex: Vertex
+    delivered: Dict[str, ItemSet] = field(default_factory=dict)
+    pending_feeds: Dict[str, int] = field(default_factory=dict)
+    launched: bool = False
+    instances: List[InstanceState] = field(default_factory=list)
+    n_done: int = 0
+    outputs: SetDict = field(default_factory=dict)
+    contexts: List[Any] = field(default_factory=list)
+    consumers_left: int = 0
+    done_t: float = 0.0
+
+
+@dataclass
+class InvocationRun:
+    inv_id: int
+    comp: Composition
+    on_done: Optional[Callable[["InvocationRun"], None]]
+    t_start: float
+    vertex_runs: Dict[str, VertexRun] = field(default_factory=dict)
+    remaining: int = 0
+    outputs: SetDict = field(default_factory=dict)
+    done: bool = False
+    failed: Optional[str] = None
+    t_end: float = 0.0
+
+    @property
+    def latency(self) -> float:
+        return self.t_end - self.t_start
+
+
+class Dispatcher:
+    def __init__(
+        self,
+        loop: EventLoop,
+        engines: EngineSet,
+        registry: FunctionRegistry,
+        *,
+        profiles: Optional[Dict[str, ColdStartProfile]] = None,
+        comm_profile_cpu_only: bool = False,
+        max_retries: int = 2,
+        hedge_after_s: float = 0.0,   # 0 = hedging off
+        hedge_min_instances: int = 4,
+        cache_miss_rate: float = 0.0,  # fraction of requests loading from disk
+    ):
+        self.loop = loop
+        self.engines = engines
+        self.registry = registry
+        self.profiles = profiles or {}
+        self.max_retries = max_retries
+        self.hedge_after_s = hedge_after_s
+        self.hedge_min_instances = hedge_min_instances
+        self.cache_miss_rate = cache_miss_rate
+        self._ids = itertools.count()
+        self.completed_count = 0
+        self.active: Dict[int, InvocationRun] = {}
+        self.rng_seq = itertools.count()
+
+    # ------------------------------------------------------------------
+    def invoke(
+        self,
+        comp: Composition,
+        inputs: SetDict,
+        on_done: Optional[Callable[[InvocationRun], None]] = None,
+    ) -> InvocationRun:
+        inv = InvocationRun(
+            inv_id=next(self._ids), comp=comp, on_done=on_done,
+            t_start=self.loop.now, remaining=len(comp.vertices),
+        )
+        self.active[inv.inv_id] = inv
+        for name, v in comp.vertices.items():
+            vr = VertexRun(vertex=v)
+            for s in v.inputs:
+                feeds = sum(1 for e in comp.in_edges(name) if e.dst.set_name == s)
+                feeds += sum(
+                    1 for p in comp.input_bindings.values()
+                    if p.vertex == name and p.set_name == s
+                )
+                vr.pending_feeds[s] = feeds
+                vr.delivered[s] = []
+            vr.consumers_left = len({e.dst.vertex for e in comp.out_edges(name)})
+            inv.vertex_runs[name] = vr
+        # deliver composition-level inputs
+        for in_name, port in comp.input_bindings.items():
+            self._feed(inv, port.vertex, port.set_name, inputs.get(in_name, []))
+        return inv
+
+    # ------------------------------------------------------------------
+    def _feed(self, inv: InvocationRun, vertex: str, set_name: str, items: ItemSet):
+        vr = inv.vertex_runs[vertex]
+        vr.delivered[set_name].extend(items)
+        vr.pending_feeds[set_name] -= 1
+        if not vr.launched and all(c <= 0 for c in vr.pending_feeds.values()):
+            vr.launched = True
+            self._launch(inv, vr)
+
+    # ------------------------------------------------------------------
+    def _fan_edge(self, inv: InvocationRun, vr: VertexRun) -> Optional[Edge]:
+        for e in inv.comp.in_edges(vr.vertex.name):
+            if e.mode in ("each", "key"):
+                return e
+        return None
+
+    def _make_instances(self, inv: InvocationRun, vr: VertexRun) -> List[InstanceState]:
+        fan = self._fan_edge(inv, vr)
+        base = dict(vr.delivered)
+        if fan is None:
+            return [InstanceState(0, base)]
+        fan_set = fan.dst.set_name
+        fan_items = vr.delivered[fan_set]
+        insts = []
+        if fan.mode == "each":
+            for i, it in enumerate(fan_items):
+                d = dict(base)
+                d[fan_set] = [it]
+                insts.append(InstanceState(i, d))
+        else:  # key
+            for i, (k, items) in enumerate(sorted(group_by_key(fan_items).items())):
+                d = dict(base)
+                d[fan_set] = items
+                insts.append(InstanceState(i, d))
+        if not insts:  # empty fan-out: vertex produces empty outputs
+            insts = []
+        return insts
+
+    def _launch(self, inv: InvocationRun, vr: VertexRun):
+        # upstream contexts can be released once this consumer has copied
+        # its inputs (captured in the instance input dicts below)
+        for e in inv.comp.in_edges(vr.vertex.name):
+            up = inv.vertex_runs[e.src.vertex]
+            # only decrement once per (src, dst) pair
+            key = (e.src.vertex, vr.vertex.name)
+            seen = vr.__dict__.setdefault("_consumed_from", set())
+            if key not in seen:
+                seen.add(key)
+                up.consumers_left -= 1
+                if up.consumers_left == 0 and up.n_done == len(up.instances) and up.instances:
+                    self._free_vertex_contexts(up)
+
+        v = vr.vertex
+        if v.kind == SUBGRAPH:
+            self._launch_subgraph(inv, vr)
+            return
+        vr.instances = self._make_instances(inv, vr)
+        if not vr.instances:
+            self._vertex_done(inv, vr)
+            return
+        for inst in vr.instances:
+            self._submit_instance(inv, vr, inst)
+        if (
+            self.hedge_after_s > 0
+            and len(vr.instances) >= self.hedge_min_instances
+        ):
+            self.loop.after(self.hedge_after_s, lambda: self._hedge(inv, vr))
+
+    def _launch_subgraph(self, inv: InvocationRun, vr: VertexRun):
+        sub = vr.vertex.subgraph
+
+        def sub_done(sub_inv: InvocationRun):
+            if sub_inv.failed:
+                self._fail(inv, f"{vr.vertex.name}: {sub_inv.failed}")
+                return
+            vr.outputs = sub_inv.outputs
+            vr.instances = [InstanceState(0, {})]
+            vr.n_done = 1
+            self._vertex_done(inv, vr, merged=True)
+
+        self.invoke(sub, vr.delivered, on_done=sub_done)
+
+    # ------------------------------------------------------------------
+    def _submit_instance(
+        self, inv: InvocationRun, vr: VertexRun, inst: InstanceState,
+        attempts: int = 0,
+    ):
+        v = vr.vertex
+        kind = COMM if v.kind == COMM else COMPUTE
+        cached = True
+        if self.cache_miss_rate > 0:
+            cached = (next(self.rng_seq) % 1_000_000) / 1_000_000 >= self.cache_miss_rate
+        task = Task(
+            kind=kind,
+            fn_name=v.function if kind == COMPUTE else "http",
+            inputs=inst.inputs,
+            context_bytes=v.context_bytes,
+            profile=self.profiles.get(v.function),
+            cached=cached,
+            timeout_s=v.timeout_s,
+            attempts=attempts,
+            meta={"inv": inv, "vr": vr, "inst": inst},
+            on_complete=self._on_task_complete,
+            on_failed=self._on_task_failed,
+        )
+        self.engines.submit(task)
+
+    def _hedge(self, inv: InvocationRun, vr: VertexRun):
+        if inv.failed or vr.n_done == len(vr.instances):
+            return
+        for inst in vr.instances:
+            if not inst.done:
+                self._submit_instance(inv, vr, inst, attempts=0)
+
+    # ------------------------------------------------------------------
+    def _on_task_complete(self, task: Task, outputs: SetDict, ctx):
+        inv: InvocationRun = task.meta["inv"]
+        vr: VertexRun = task.meta["vr"]
+        inst: InstanceState = task.meta["inst"]
+        if inv.failed or inst.done:  # hedge loser or dead invocation
+            ctx.free()
+            return
+        inst.done = True
+        inst.outputs = outputs
+        vr.contexts.append(ctx)
+        vr.n_done += 1
+        if vr.n_done == len(vr.instances):
+            self._vertex_done(inv, vr)
+
+    def _on_task_failed(self, task: Task, reason: str):
+        inv: InvocationRun = task.meta["inv"]
+        vr: VertexRun = task.meta["vr"]
+        inst: InstanceState = task.meta["inst"]
+        if inv.failed or inst.done:
+            return
+        if reason == "timeout":
+            self._fail(inv, f"{vr.vertex.name}: timeout (preempted)")
+            return
+        idempotent = True
+        if vr.vertex.kind == COMM:
+            idempotent = all(
+                (it.data.method if isinstance(it.data, HttpRequest)
+                 else str(it.data).split()[0]) in IDEMPOTENT_METHODS
+                for it in inst.inputs.get("requests", [])
+                if it.data
+            )
+        if task.attempts < self.max_retries and idempotent:
+            self._submit_instance(inv, vr, inst, attempts=task.attempts + 1)
+        else:
+            self._fail(
+                inv,
+                f"{vr.vertex.name}: {reason}"
+                + ("" if idempotent else " (not idempotent; not retried)"),
+            )
+
+    # ------------------------------------------------------------------
+    def _vertex_done(self, inv: InvocationRun, vr: VertexRun, merged: bool = False):
+        if not merged:
+            vr.outputs = {}
+            for s in vr.vertex.outputs:
+                vr.outputs[s] = []
+                for inst in vr.instances:
+                    vr.outputs[s].extend(inst.outputs.get(s, []))
+        vr.done_t = self.loop.now
+
+        comp = inv.comp
+        for e in comp.out_edges(vr.vertex.name):
+            self._feed(inv, e.dst.vertex, e.dst.set_name, vr.outputs[e.src.set_name])
+        for out_name, port in comp.output_bindings.items():
+            if port.vertex == vr.vertex.name:
+                inv.outputs[out_name] = vr.outputs[port.set_name]
+        if vr.consumers_left <= 0:
+            self._free_vertex_contexts(vr)
+
+        inv.remaining -= 1
+        if inv.remaining == 0 and not inv.failed:
+            inv.done = True
+            inv.t_end = self.loop.now
+            self.completed_count += 1
+            self.active.pop(inv.inv_id, None)
+            if inv.on_done:
+                inv.on_done(inv)
+
+    def _free_vertex_contexts(self, vr: VertexRun):
+        for c in vr.contexts:
+            c.free()
+        vr.contexts = []
+
+    def _fail(self, inv: InvocationRun, reason: str):
+        if inv.failed:
+            return
+        inv.failed = reason
+        inv.t_end = self.loop.now
+        self.active.pop(inv.inv_id, None)
+        # release whatever is still held
+        for vr in inv.vertex_runs.values():
+            self._free_vertex_contexts(vr)
+        if inv.on_done:
+            inv.on_done(inv)

@@ -1,0 +1,271 @@
+"""Compute and communication engines (SS5, SS6.2-6.3).
+
+Engines abstract compute resources. Each engine slot corresponds to a CPU
+core; the control plane re-types slots between "compute" and "comm"
+(repro.core.controller). Compute slots run exactly one task to completion
+(run-to-completion, no interleaving). Comm slots are cooperative: the CPU
+cost of protocol handling occupies the slot, while I/O wait does not -
+one slot multiplexes up to ``max_inflight`` green tasks.
+
+Service durations: every task actually executes its payload (real outputs
+flow through the DAG); *virtual-time* durations come from the task's
+calibrated ColdStartProfile when present, else from the real measured
+execution. This keeps thousand-RPS sweeps faithful AND deterministic.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.coldstart import ColdStartProfile, cold_start
+from repro.core.context import MemoryContext, MemoryTracker
+from repro.core.http import SanitizationError, http_function
+from repro.core.items import SetDict, sets_bytes
+from repro.core.registry import FunctionRegistry
+from repro.core.sim import EventLoop
+
+COMPUTE, COMM = "compute", "comm"
+
+
+@dataclass
+class Task:
+    kind: str                       # compute | comm
+    fn_name: str                    # registry name (compute) / "http" (comm)
+    inputs: SetDict
+    context_bytes: int = 1 << 20
+    profile: Optional[ColdStartProfile] = None  # None -> measure real run
+    warm_context: Optional[MemoryContext] = None  # keep-warm platforms
+    cached: bool = True             # code in RAM cache?
+    timeout_s: float = 60.0
+    attempts: int = 0
+    cancelled: bool = False
+    enqueue_t: float = 0.0
+    meta: Dict[str, Any] = field(default_factory=dict)
+    on_complete: Optional[Callable[["Task", SetDict, MemoryContext], None]] = None
+    on_failed: Optional[Callable[["Task", str], None]] = None
+
+
+class EngineSlot:
+    def __init__(self, node: "EngineSet", slot_id: int, kind: str):
+        self.node = node
+        self.slot_id = slot_id
+        self.kind = kind
+        self.busy = False
+        self.retype_to: Optional[str] = None
+        self.inflight = 0           # comm green tasks in flight
+        self.max_inflight = 128
+
+    # ------------------------------------------------------------------
+    def maybe_dispatch(self):
+        if self.busy:
+            return
+        if self.retype_to and self.inflight == 0:
+            self.kind = self.retype_to
+            self.retype_to = None
+        q = self.node.queue(self.kind)
+        while q and q[0].cancelled:
+            q.popleft()
+        if not q:
+            return
+        if self.kind == COMM and self.inflight >= self.max_inflight:
+            return
+        task = q.popleft()
+        if self.kind == COMPUTE:
+            self._serve_compute(task)
+        else:
+            self._serve_comm(task)
+
+    # ------------------------------------------------------------------
+    def _serve_compute(self, task: Task):
+        node = self.node
+        loop = node.loop
+        self.busy = True
+        node.inflight_tasks.add(id(task))
+
+        if task.warm_context is not None:
+            # keep-warm platforms: sandbox already booted; execute only
+            ctx = task.warm_context
+            setup_s = 0.0
+            outputs, exec_s = node.execute_payload(task, ctx)
+        else:
+            ctx, bd, run = cold_start(
+                node.registry,
+                task.fn_name,
+                task.inputs,
+                backend=node.backend,
+                cached=task.cached,
+                tracker=node.tracker,
+            )
+            if task.profile is not None:
+                setup_s, exec_s = task.profile.sample(node.rng)
+                outputs = run()  # real outputs, modeled duration
+            else:
+                t0 = time.perf_counter()
+                outputs = run()
+                exec_s = time.perf_counter() - t0
+                setup_s = bd.total
+
+        total = setup_s + exec_s
+        timed_out = total > task.timeout_s
+        total = min(total, task.timeout_s)
+        node.stats_busy(COMPUTE, total)
+
+        def finish():
+            self.busy = False
+            node.inflight_tasks.discard(id(task))
+            if timed_out:
+                ctx.free()
+                if task.on_failed:
+                    task.on_failed(task, "timeout")
+            elif task.cancelled:
+                ctx.free()
+            else:
+                for name, items in outputs.items():
+                    if name not in ctx.outputs:
+                        ctx.write_set(name, items, into="outputs")
+                if task.on_complete:
+                    task.on_complete(task, outputs, ctx)
+            self.maybe_dispatch()
+            node.poke()
+
+        loop.after(total, finish)
+
+    # ------------------------------------------------------------------
+    def _serve_comm(self, task: Task):
+        node = self.node
+        loop = node.loop
+        self.busy = True
+        self.inflight += 1
+        node.inflight_tasks.add(id(task))
+
+        t0 = time.perf_counter()
+        try:
+            outputs, io_s, idempotent = http_function(node.services, task.inputs)
+            err = None
+        except SanitizationError as e:
+            outputs, io_s, idempotent = {}, 0.0, True
+            err = f"sanitization: {e}"
+        cpu_s = max(time.perf_counter() - t0 - 0.0, 2e-6)
+        task.meta["idempotent"] = idempotent
+        node.stats_busy(COMM, cpu_s)
+
+        def cpu_done():
+            # cooperative: slot is free for the next green task while this
+            # one waits on I/O
+            self.busy = False
+            self.maybe_dispatch()
+            node.poke()
+
+        def io_done():
+            self.inflight -= 1
+            node.inflight_tasks.discard(id(task))
+            if task.cancelled:
+                pass
+            elif err is not None:
+                if task.on_failed:
+                    task.on_failed(task, err)
+            else:
+                ctx = MemoryContext(task.context_bytes, tracker=node.tracker)
+                for name, items in task.inputs.items():
+                    ctx.write_set(name, items)
+                for name, items in outputs.items():
+                    ctx.write_set(name, items, into="outputs")
+                if task.on_complete:
+                    task.on_complete(task, outputs, ctx)
+            self.maybe_dispatch()
+            node.poke()
+
+        loop.after(cpu_s, cpu_done)
+        loop.after(cpu_s + io_s, io_done)
+
+
+class EngineSet:
+    """All engine slots of one worker node + the two typed queues."""
+
+    def __init__(
+        self,
+        loop: EventLoop,
+        registry: FunctionRegistry,
+        services,
+        *,
+        num_slots: int = 8,
+        comm_slots: int = 1,
+        backend: str = "dandelion",
+        tracker: Optional[MemoryTracker] = None,
+        seed: int = 0,
+    ):
+        self.loop = loop
+        self.registry = registry
+        self.services = services
+        self.backend = backend
+        self.tracker = tracker or MemoryTracker(loop)
+        self.rng = np.random.default_rng(seed)
+        self.compute_q: deque = deque()
+        self.comm_q: deque = deque()
+        self.slots: List[EngineSlot] = []
+        for i in range(num_slots):
+            kind = COMM if i < comm_slots else COMPUTE
+            self.slots.append(EngineSlot(self, i, kind))
+        self.busy_s = {COMPUTE: 0.0, COMM: 0.0}
+        self._arrivals = {COMPUTE: 0, COMM: 0}
+        self.inflight_tasks: set = set()
+
+    # ------------------------------------------------------------------
+    def queue(self, kind: str) -> deque:
+        return self.compute_q if kind == COMPUTE else self.comm_q
+
+    def submit(self, task: Task):
+        task.enqueue_t = self.loop.now
+        self.queue(task.kind).append(task)
+        self._arrivals[task.kind] += 1
+        self.poke()
+
+    def poke(self):
+        for s in self.slots:
+            s.maybe_dispatch()
+
+    def stats_busy(self, kind: str, seconds: float):
+        self.busy_s[kind] += seconds
+
+    # ----------------------------------------------------- controller API
+    def counts(self) -> Dict[str, int]:
+        return {
+            COMPUTE: sum(1 for s in self.slots if s.kind == COMPUTE and not s.retype_to),
+            COMM: sum(1 for s in self.slots if s.kind == COMM and not s.retype_to),
+        }
+
+    def queue_lengths(self) -> Dict[str, int]:
+        return {COMPUTE: len(self.compute_q), COMM: len(self.comm_q)}
+
+    def retype_one(self, frm: str, to: str) -> bool:
+        """Move one slot between engine types (finishes current task first)."""
+        counts = self.counts()
+        if counts[frm] <= 1:
+            return False
+        for s in self.slots:
+            if s.kind == frm and not s.retype_to:
+                if s.busy or s.inflight:
+                    s.retype_to = to
+                else:
+                    s.kind = to
+                self.poke()
+                return True
+        return False
+
+    def execute_payload(self, task: Task, ctx: MemoryContext):
+        """Warm-start execution (no cold-start phases)."""
+        cf = self.registry.get(task.fn_name)
+        for name, items in task.inputs.items():
+            ctx.write_set(name, items)
+        if task.profile is not None:
+            _, exec_s = task.profile.sample(self.rng)
+            outputs = cf.fn(task.inputs)
+        else:
+            t0 = time.perf_counter()
+            outputs = cf.fn(task.inputs)
+            exec_s = time.perf_counter() - t0
+        return outputs, exec_s

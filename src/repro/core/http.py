@@ -1,0 +1,152 @@
+"""Communication functions: HTTP protocol handling + service models.
+
+The container is offline, so remote services are in-process handlers
+behind deterministic latency/bandwidth models (DESIGN.md SS2). The
+*protocol* work is real: requests are parsed and sanitized exactly as the
+paper's communication engine does (SS6.3) - method and version checked
+against fixed sets, host extracted and validated - and handlers produce
+real payloads that flow on through the composition.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+from repro.core.items import Item, ItemSet, SetDict
+
+METHODS = ("GET", "PUT", "POST", "DELETE", "HEAD", "PATCH")
+IDEMPOTENT_METHODS = ("GET", "PUT", "DELETE", "HEAD")
+_VERSIONS = ("HTTP/1.0", "HTTP/1.1", "HTTP/2")
+_HOST_RE = re.compile(
+    r"^(?:[a-zA-Z0-9](?:[a-zA-Z0-9\-]{0,61}[a-zA-Z0-9])?)"
+    r"(?:\.[a-zA-Z0-9](?:[a-zA-Z0-9\-]{0,61}[a-zA-Z0-9])?)*$"
+)
+_IP_RE = re.compile(r"^\d{1,3}(?:\.\d{1,3}){3}$")
+
+
+@dataclass(frozen=True)
+class HttpRequest:
+    method: str
+    url: str
+    body: Any = b""
+
+    @property
+    def host(self) -> str:
+        m = re.match(r"^https?://([^/:]+)", self.url)
+        return m.group(1) if m else ""
+
+    @property
+    def nbytes(self) -> int:
+        if isinstance(self.body, (bytes, bytearray)):
+            return len(self.body)
+        if hasattr(self.body, "nbytes"):
+            return int(self.body.nbytes)
+        return len(str(self.body).encode())
+
+
+@dataclass(frozen=True)
+class HttpResponse:
+    status: int
+    body: Any = b""
+
+    @property
+    def nbytes(self) -> int:
+        if isinstance(self.body, (bytes, bytearray)):
+            return len(self.body)
+        if hasattr(self.body, "nbytes"):
+            return int(self.body.nbytes)
+        return len(str(self.body).encode())
+
+
+class SanitizationError(ValueError):
+    pass
+
+
+def sanitize(req: Any) -> HttpRequest:
+    """Untrusted-input validation (SS6.3): method + version from fixed
+    sets; host must be a valid name or IPv4 literal."""
+    if isinstance(req, HttpRequest):
+        method, url = req.method, req.url
+        parsed = req
+    elif isinstance(req, (str, bytes)):
+        text = req.decode() if isinstance(req, bytes) else req
+        first = text.split("\r\n", 1)[0].split("\n", 1)[0]
+        parts = first.strip().split()
+        if len(parts) == 3:
+            method, url, version = parts
+            if version not in _VERSIONS:
+                raise SanitizationError(f"bad HTTP version {version!r}")
+        elif len(parts) == 2:
+            method, url = parts
+        else:
+            raise SanitizationError(f"malformed request line {first!r}")
+        body = text.split("\r\n\r\n", 1)[1] if "\r\n\r\n" in text else b""
+        parsed = HttpRequest(method, url, body)
+    else:
+        raise SanitizationError(f"unsupported request type {type(req).__name__}")
+    if method not in METHODS:
+        raise SanitizationError(f"method {method!r} not allowed")
+    host = parsed.host
+    if not host or not (_HOST_RE.match(host) or _IP_RE.match(host)):
+        raise SanitizationError(f"invalid host {host!r}")
+    return parsed
+
+
+@dataclass
+class ServiceModel:
+    """One remote endpoint: handler + latency/bandwidth model."""
+
+    handler: Callable[[HttpRequest], HttpResponse]
+    base_latency_s: float = 0.5e-3
+    bandwidth_bps: float = 1.25e9  # 10 Gb/s
+
+    def io_time(self, req: HttpRequest, resp: HttpResponse) -> float:
+        wire = req.nbytes + resp.nbytes
+        return self.base_latency_s + wire / self.bandwidth_bps
+
+
+class ServiceRegistry:
+    """host -> ServiceModel. Shared by all communication engines."""
+
+    def __init__(self):
+        self.services: Dict[str, ServiceModel] = {}
+
+    def register(
+        self,
+        host: str,
+        handler: Callable[[HttpRequest], HttpResponse],
+        *,
+        base_latency_s: float = 0.5e-3,
+        bandwidth_bps: float = 1.25e9,
+    ) -> None:
+        self.services[host] = ServiceModel(handler, base_latency_s, bandwidth_bps)
+
+    def perform(self, req: HttpRequest) -> Tuple[HttpResponse, float]:
+        """Execute the request. Returns (response, modeled io seconds)."""
+        svc = self.services.get(req.host)
+        if svc is None:
+            return HttpResponse(502, b"no route to host"), 1e-3
+        resp = svc.handler(req)
+        return resp, svc.io_time(req, resp)
+
+
+def http_function(
+    services: ServiceRegistry, inputs: SetDict
+) -> Tuple[SetDict, float, bool]:
+    """The platform HTTP communication function body.
+
+    Sanitizes every request item, performs them (serially within one
+    instance - parallelism is expressed with 'each' fan-out in the DAG),
+    and returns (outputs, total io seconds, idempotent_all).
+    """
+    responses: ItemSet = []
+    io_total = 0.0
+    idempotent = True
+    for it in inputs.get("requests", []):
+        req = sanitize(it.data)  # raises SanitizationError on bad input
+        idempotent &= req.method in IDEMPOTENT_METHODS
+        resp, io_s = services.perform(req)
+        io_total += io_s
+        responses.append(Item(resp, key=it.key))
+    return {"responses": responses}, io_total, idempotent

@@ -1,0 +1,54 @@
+"""Data model for function I/O: items grouped into named sets.
+
+An Item is an immutable (key, data) pair; data is ``bytes`` or a numpy /
+jax array (arrays move through memory contexts without serialization -
+the TPU analogue of Dandelion's memory-mapped input sets). Keys are only
+used by 'key'-mode edge grouping, exactly as in the paper (SS4.1).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Item:
+    data: Any
+    key: str = ""
+
+    @property
+    def nbytes(self) -> int:
+        d = self.data
+        if isinstance(d, (bytes, bytearray)):
+            return len(d)
+        if hasattr(d, "nbytes"):
+            return int(d.nbytes)
+        if isinstance(d, str):
+            return len(d.encode())
+        return 64  # opaque python object: nominal
+
+
+ItemSet = List[Item]
+SetDict = Dict[str, ItemSet]
+
+
+def make_set(*values, keys: Optional[List[str]] = None) -> ItemSet:
+    keys = keys or [""] * len(values)
+    return [Item(v, k) for v, k in zip(values, keys)]
+
+
+def set_bytes(s: ItemSet) -> int:
+    return sum(it.nbytes for it in s)
+
+
+def sets_bytes(d: SetDict) -> int:
+    return sum(set_bytes(s) for s in d.values())
+
+
+def group_by_key(s: ItemSet) -> Dict[str, ItemSet]:
+    out: Dict[str, ItemSet] = {}
+    for it in s:
+        out.setdefault(it.key, []).append(it)
+    return out

@@ -1,0 +1,133 @@
+"""Worker node: engines + dispatcher + control plane + memory accounting.
+
+One ``WorkerNode`` is the unit Figure 4 draws: HTTP frontend (the
+``invoke`` entry point), dispatcher, typed engine queues, engine slots,
+and the PI control plane, all over one virtual-time event loop.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional
+
+from repro.core.coldstart import ColdStartProfile
+from repro.core.context import MemoryTracker
+from repro.core.controller import PIController
+from repro.core.dag import Composition
+from repro.core.dispatcher import Dispatcher, InvocationRun
+from repro.core.engines import EngineSet, Task
+from repro.core.http import ServiceRegistry
+from repro.core.items import SetDict
+from repro.core.registry import FunctionRegistry
+from repro.core.sim import EventLoop
+from repro.core.tracing import LatencyStats
+
+
+class WorkerNode:
+    def __init__(
+        self,
+        registry: FunctionRegistry,
+        services: Optional[ServiceRegistry] = None,
+        *,
+        loop: Optional[EventLoop] = None,
+        num_slots: int = 16,
+        comm_slots: int = 1,
+        backend: str = "dandelion",
+        profiles: Optional[Dict[str, ColdStartProfile]] = None,
+        controller_enabled: bool = True,
+        controller_interval_s: float = 0.030,
+        max_retries: int = 2,
+        hedge_after_s: float = 0.0,
+        cache_miss_rate: float = 0.0,
+        seed: int = 0,
+        name: str = "node0",
+    ):
+        self.name = name
+        self.loop = loop or EventLoop()
+        self.registry = registry
+        self.services = services or ServiceRegistry()
+        self.tracker = MemoryTracker(self.loop)
+        self.engines = EngineSet(
+            self.loop,
+            registry,
+            self.services,
+            num_slots=num_slots,
+            comm_slots=comm_slots,
+            backend=backend,
+            tracker=self.tracker,
+            seed=seed,
+        )
+        self.controller = PIController(
+            self.engines,
+            self.loop,
+            interval_s=controller_interval_s,
+            enabled=controller_enabled,
+        )
+        self.dispatcher = Dispatcher(
+            self.loop,
+            self.engines,
+            registry,
+            profiles=profiles,
+            max_retries=max_retries,
+            hedge_after_s=hedge_after_s,
+            cache_miss_rate=cache_miss_rate,
+        )
+        self.latency = LatencyStats()
+        self.failed_count = 0
+        self.alive = True
+
+    # -------------------------------------------------------- frontend
+    def invoke(
+        self,
+        comp: Composition,
+        inputs: SetDict,
+        on_done: Optional[Callable[[InvocationRun], None]] = None,
+    ) -> InvocationRun:
+        """HTTP-frontend entry: schedule a composition invocation now."""
+        self.controller.start()
+
+        def done(inv: InvocationRun):
+            if inv.failed:
+                self.failed_count += 1
+            else:
+                self.latency.add(inv.latency)
+            if on_done:
+                on_done(inv)
+
+        return self.dispatcher.invoke(comp, inputs, on_done=done)
+
+    def invoke_at(
+        self,
+        t: float,
+        comp: Composition,
+        inputs: SetDict,
+        on_done: Optional[Callable[[InvocationRun], None]] = None,
+    ):
+        self.loop.at(t, lambda: self.invoke(comp, inputs, on_done))
+
+    def run(self, until: Optional[float] = None):
+        self.loop.run(until=until)
+
+    # -------------------------------------------------- fault injection
+    def fail(self):
+        """Node dies: every queued and in-flight task is lost, and every
+        live invocation fails with "node_failure" (the cluster manager
+        re-executes them on survivors - pure functions are idempotent)."""
+        self.alive = False
+        for q in (self.engines.compute_q, self.engines.comm_q):
+            for task in q:
+                task.cancelled = True
+            q.clear()
+        # in-flight tasks: their completion events will observe done flags
+        for inv in list(self.dispatcher.active.values()):
+            for vr in inv.vertex_runs.values():
+                for inst in vr.instances:
+                    inst.done = True  # suppress straggling completions
+            self.dispatcher._fail(inv, "node_failure")
+
+    @property
+    def committed_avg_bytes(self) -> float:
+        return self.tracker.timeline.average(self.loop.now)
+
+    @property
+    def committed_peak_bytes(self) -> float:
+        return self.tracker.timeline.peak()

@@ -1,0 +1,90 @@
+"""Deterministic discrete-event loop with a virtual clock.
+
+All platform benchmarks run in virtual time: service durations come either
+from real measured executions (the cold-start code paths and jitted
+compute functions actually run; see repro.core.coldstart) or from seeded
+latency models (remote HTTP services). Virtual time makes thousand-RPS
+load sweeps reproducible and fast on a single-core container while
+preserving true queueing behaviour.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Callable, List, Optional, Tuple
+
+
+class EventLoop:
+    def __init__(self):
+        self._now = 0.0
+        self._heap: List[Tuple[float, int, bool, Callable[[], None]]] = []
+        self._seq = itertools.count()
+        self._live = 0  # non-daemon events outstanding
+
+    @property
+    def now(self) -> float:
+        return self._now
+
+    def at(self, time: float, fn: Callable[[], None], daemon: bool = False) -> None:
+        """Schedule ``fn``. Daemon events (periodic controller/reaper ticks)
+        do not keep the loop alive: ``run()`` stops once only daemons remain."""
+        if time < self._now - 1e-12:
+            raise ValueError(f"event in the past: {time} < {self._now}")
+        heapq.heappush(self._heap, (time, next(self._seq), daemon, fn))
+        if not daemon:
+            self._live += 1
+
+    def after(self, delay: float, fn: Callable[[], None], daemon: bool = False) -> None:
+        self.at(self._now + max(0.0, delay), fn, daemon=daemon)
+
+    def step(self) -> bool:
+        if not self._heap:
+            return False
+        t, _, daemon, fn = heapq.heappop(self._heap)
+        self._now = t
+        if not daemon:
+            self._live -= 1
+        fn()
+        return True
+
+    def run(self, until: Optional[float] = None, max_events: int = 50_000_000):
+        n = 0
+        while self._heap and n < max_events:
+            if until is None and self._live == 0:
+                return
+            if until is not None and self._heap[0][0] > until:
+                self._now = until
+                return
+            self.step()
+            n += 1
+        if n >= max_events:
+            raise RuntimeError("event budget exhausted (livelock?)")
+
+    def empty(self) -> bool:
+        return self._live == 0
+
+
+class Timeline:
+    """Append-only (t, value) series with step-function integration."""
+
+    def __init__(self):
+        self.points: List[Tuple[float, float]] = []
+
+    def record(self, t: float, value: float):
+        self.points.append((t, value))
+
+    def average(self, t_end: Optional[float] = None) -> float:
+        if not self.points:
+            return 0.0
+        pts = self.points
+        t_end = t_end if t_end is not None else pts[-1][0]
+        total = 0.0
+        for (t0, v), (t1, _) in zip(pts, pts[1:]):
+            total += v * (t1 - t0)
+        if t_end > pts[-1][0]:
+            total += pts[-1][1] * (t_end - pts[-1][0])
+        span = t_end - pts[0][0]
+        return total / span if span > 0 else pts[-1][1]
+
+    def peak(self) -> float:
+        return max((v for _, v in self.points), default=0.0)

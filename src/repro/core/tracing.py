@@ -1,0 +1,53 @@
+"""Latency / memory instrumentation shared by benchmarks and tests."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclass
+class LatencyStats:
+    samples: List[float] = field(default_factory=list)
+
+    def add(self, seconds: float):
+        self.samples.append(seconds)
+
+    def percentile(self, p: float) -> float:
+        if not self.samples:
+            return 0.0
+        return float(np.percentile(np.asarray(self.samples), p))
+
+    @property
+    def p50(self) -> float:
+        return self.percentile(50)
+
+    @property
+    def p95(self) -> float:
+        return self.percentile(95)
+
+    @property
+    def p99(self) -> float:
+        return self.percentile(99)
+
+    @property
+    def mean(self) -> float:
+        return float(np.mean(self.samples)) if self.samples else 0.0
+
+    @property
+    def relative_variance(self) -> float:
+        """Variance / mean^2 in percent (the paper's SS7.6 metric)."""
+        if len(self.samples) < 2 or self.mean == 0:
+            return 0.0
+        return float(np.var(self.samples) / self.mean**2) * 100.0
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "n": len(self.samples),
+            "mean_ms": self.mean * 1e3,
+            "p50_ms": self.p50 * 1e3,
+            "p95_ms": self.p95 * 1e3,
+            "p99_ms": self.p99 * 1e3,
+            "rel_var_pct": self.relative_variance,
+        }

@@ -1,0 +1,6 @@
+# Pallas TPU kernels for the model-payload hot spots: flash/decode
+# attention, Mamba2 SSD scan, MoE grouped matmul, fused RMSNorm.
+# Each <name>.py is a pl.pallas_call with explicit BlockSpec VMEM tiling;
+# ops.py is the jit'd dispatch layer; ref.py holds the pure-jnp oracles.
+# (The Dandelion paper itself has no kernel-level contribution - these
+# cover the compute layers its platform serves; see DESIGN.md SS6.)

@@ -1,0 +1,171 @@
+"""Flash attention (prefill/train) Pallas TPU kernel.
+
+TPU-native adaptation (DESIGN.md SS6): no warp-level shuffles - the online
+softmax is blocked for VMEM residency and the MXU sees
+(G*q_block, dh) x (dh, kv_block) matmuls. GQA is handled by packing the
+q-head *group* into the sublane dimension (G*q_block rows), so a kv_head's
+whole query group rides one grid cell and K/V tiles are loaded once per
+group rather than once per query head.
+
+Grid: (B*Hkv, num_q_blocks, num_kv_blocks); the kv dimension is innermost
+(sequentially revisited on TPU), carrying the running max / denominator /
+accumulator in VMEM scratch. Causal and sliding-window masks skip fully
+masked kv blocks via ``pl.when``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref,    # [1, G, qb, dh]
+    k_ref,    # [1, kb, dh]
+    v_ref,    # [1, kb, dh]
+    o_ref,    # [1, G, qb, dh]
+    m_ref,    # scratch [G*qb]
+    l_ref,    # scratch [G*qb]
+    acc_ref,  # scratch [G*qb, dh]
+    *,
+    scale: float,
+    causal: bool,
+    window: int,
+    qb: int,
+    kb: int,
+    nk: int,
+    sk_valid: int,
+):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+    g = q_ref.shape[1]
+    dh = q_ref.shape[3]
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qpos = iq * qb + jax.lax.iota(jnp.int32, qb)
+    kpos = ik * kb + jax.lax.iota(jnp.int32, kb)
+
+    # block-level early exit for fully-masked tiles
+    run = jnp.asarray(ik * kb < sk_valid)  # kv block entirely padding
+    if causal:
+        run &= (ik * kb) <= (iq * qb + qb - 1)
+    if window:
+        run &= (iq * qb) - (ik * kb + kb - 1) < window
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].reshape(g * qb, dh).astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * scale                                       # [G*qb, kb]
+
+        mask = jnp.broadcast_to(kpos[None, :] < sk_valid, (qb, kb))
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window:
+            mask &= qpos[:, None] - kpos[None, :] < window
+        maskg = jnp.broadcast_to(mask[None], (g, qb, kb)).reshape(g * qb, kb)
+        s = jnp.where(maskg, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _final():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        out = (acc_ref[...] / l[:, None]).reshape(1, g, qb, dh)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "q_block", "kv_block", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,   # [B, Sq, Hq, dh]
+    k: jax.Array,   # [B, Sk, Hkv, dh]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: Optional[float] = None,
+    q_block: int = 128,
+    kv_block: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, sq, hq, dh = q.shape
+    _, sk, hkv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    scale = float(scale if scale is not None else dh**-0.5)
+
+    qb = min(q_block, sq)
+    kb = min(kv_block, sk)
+    pad_q = (-sq) % qb
+    pad_k = (-sk) % kb
+    # [B, K, G, Sq, dh] with padded sequence
+    qg = q.reshape(b, sq, hkv, g, dh).transpose(0, 2, 3, 1, 4)
+    if pad_q:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, 0), (0, pad_q), (0, 0)))
+    kk = k.transpose(0, 2, 1, 3)  # [B, K, Sk, dh]
+    vv = v.transpose(0, 2, 1, 3)
+    if pad_k:
+        kk = jnp.pad(kk, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        vv = jnp.pad(vv, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    sqp, skp = sq + pad_q, sk + pad_k
+    nq, nk = sqp // qb, skp // kb
+
+    qg = qg.reshape(b * hkv, g, sqp, dh)
+    kk = kk.reshape(b * hkv, skp, dh)
+    vv = vv.reshape(b * hkv, skp, dh)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel,
+            scale=scale,
+            causal=causal,
+            window=window,
+            qb=qb,
+            kb=kb,
+            nk=nk,
+            sk_valid=sk,  # padded kv rows are masked in-kernel
+        ),
+        grid=(b * hkv, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, g, qb, dh), lambda bk, iq, ik: (bk, 0, iq, 0)),
+            pl.BlockSpec((1, kb, dh), lambda bk, iq, ik: (bk, ik, 0)),
+            pl.BlockSpec((1, kb, dh), lambda bk, iq, ik: (bk, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g, qb, dh), lambda bk, iq, ik: (bk, 0, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hkv, g, sqp, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g * qb,), jnp.float32),
+            pltpu.VMEM((g * qb,), jnp.float32),
+            pltpu.VMEM((g * qb, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, kk, vv)
+
+    out = out.reshape(b, hkv, g, sqp, dh)[:, :, :, :sq]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, dh)

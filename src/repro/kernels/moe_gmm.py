@@ -1,0 +1,77 @@
+"""Grouped (per-expert) matmul Pallas kernel for MoE expert FFNs.
+
+MegaBlocks-style grouped GEMM adapted to the MXU: the expert dimension is
+the outermost grid axis, and each expert's [capacity, D] x [D, F] product
+is tiled into (128-aligned) VMEM blocks with a f32 accumulator carried
+across the contraction grid axis. On TPU the expert loop costs nothing
+extra when an expert's capacity block is empty of real tokens - dispatch
+produces zero rows, and 0-blocks multiply to 0 - so no ragged-boundary
+bookkeeping is needed at the kernel level (the dispatch layer owns it).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(x_ref, w_ref, o_ref, acc_ref, *, nd: int):
+    idd = pl.program_id(3)
+
+    @pl.when(idd == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0]                # [cb, db]
+    w = w_ref[0]                # [db, fb]
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(idd == nd - 1)
+    def _final():
+        o_ref[...] = acc_ref[...][None].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_c", "block_f", "block_d", "interpret")
+)
+def moe_gmm(
+    xe: jax.Array,  # [E, C, D]
+    we: jax.Array,  # [E, D, F]
+    *,
+    block_c: int = 128,
+    block_f: int = 128,
+    block_d: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    e, c, d = xe.shape
+    _, _, f = we.shape
+    cb, fb, db = min(block_c, c), min(block_f, f), min(block_d, d)
+
+    pad_c, pad_f, pad_d = (-c) % cb, (-f) % fb, (-d) % db
+    if pad_c or pad_d:
+        xe = jnp.pad(xe, ((0, 0), (0, pad_c), (0, pad_d)))
+    if pad_d or pad_f:
+        we = jnp.pad(we, ((0, 0), (0, pad_d), (0, pad_f)))
+    cp, dp, fp = c + pad_c, d + pad_d, f + pad_f
+    nc, nf, nd = cp // cb, fp // fb, dp // db
+
+    out = pl.pallas_call(
+        functools.partial(_gmm_kernel, nd=nd),
+        grid=(e, nc, nf, nd),
+        in_specs=[
+            pl.BlockSpec((1, cb, db), lambda ie, ic, if_, id_: (ie, ic, id_)),
+            pl.BlockSpec((1, db, fb), lambda ie, ic, if_, id_: (ie, id_, if_)),
+        ],
+        out_specs=pl.BlockSpec((1, cb, fb), lambda ie, ic, if_, id_: (ie, ic, if_)),
+        out_shape=jax.ShapeDtypeStruct((e, cp, fp), xe.dtype),
+        scratch_shapes=[pltpu.VMEM((cb, fb), jnp.float32)],
+        interpret=interpret,
+    )(xe, we)
+    if pad_c or pad_f:
+        out = out[:, :c, :f]
+    return out

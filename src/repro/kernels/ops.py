@@ -1,0 +1,89 @@
+"""Unified kernel entry points with a pallas/reference switch.
+
+Model code calls these; ``use_pallas`` selects the Pallas TPU kernel
+(default on TPU) or the pure-jnp chunked reference (default on CPU, and
+what the dry-run lowers so roofline bytes stay honest). ``interpret``
+forces the Pallas interpreter - how the CPU test suite validates the
+kernels' semantics.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+from repro.kernels import (
+    decode_attention as _decode_k,
+    flash_attention as _flash_k,
+    moe_gmm as _gmm_k,
+    rmsnorm as _rms_k,
+    ssd_scan as _ssd_k,
+)
+from repro.kernels import ref as _ref
+from repro.models.attention import chunked_attention as _chunked_ref
+
+
+def default_use_pallas() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def rmsnorm(x, scale, *, eps: float = 1e-5, use_pallas: Optional[bool] = None,
+            interpret: bool = False):
+    use_pallas = default_use_pallas() if use_pallas is None else use_pallas
+    if use_pallas or interpret:
+        return _rms_k.rmsnorm(x, scale, eps=eps, interpret=interpret)
+    return _ref.rmsnorm(x, scale, eps)
+
+
+def flash_attention(
+    q, k, v, *, causal: bool = True, window: int = 0,
+    scale: Optional[float] = None, use_pallas: Optional[bool] = None,
+    interpret: bool = False, q_block: int = 128, kv_block: int = 128,
+):
+    use_pallas = default_use_pallas() if use_pallas is None else use_pallas
+    if use_pallas or interpret:
+        return _flash_k.flash_attention(
+            q, k, v, causal=causal, window=window, scale=scale,
+            q_block=q_block, kv_block=kv_block, interpret=interpret,
+        )
+    # CPU / lowering path: O(S) chunked reference (same math)
+    return _chunked_ref(q, k, v, causal=causal, window=window, scale=scale)
+
+
+def decode_attention(
+    q, k_cache, v_cache, slot_pos, cur_pos, *, window: int = 0,
+    scale: Optional[float] = None, use_pallas: Optional[bool] = None,
+    interpret: bool = False, kv_block: int = 256,
+):
+    use_pallas = default_use_pallas() if use_pallas is None else use_pallas
+    if use_pallas or interpret:
+        return _decode_k.decode_attention(
+            q, k_cache, v_cache, slot_pos, cur_pos, window=window,
+            scale=scale, kv_block=kv_block, interpret=interpret,
+        )
+    return _ref.decode_attention(
+        q, k_cache, v_cache, slot_pos, cur_pos, window=window, scale=scale
+    )
+
+
+def ssd(
+    x, a, b, c, *, chunk: int = 128, use_pallas: Optional[bool] = None,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    use_pallas = default_use_pallas() if use_pallas is None else use_pallas
+    if use_pallas or interpret:
+        return _ssd_k.ssd(x, a, b, c, chunk=chunk, interpret=interpret)
+    return _ref.ssd(x, a, b, c, chunk)
+
+
+def moe_gmm(
+    xe, we, *, use_pallas: Optional[bool] = None, interpret: bool = False,
+    block_c: int = 128, block_f: int = 128, block_d: int = 256,
+):
+    use_pallas = default_use_pallas() if use_pallas is None else use_pallas
+    if use_pallas or interpret:
+        return _gmm_k.moe_gmm(
+            xe, we, block_c=block_c, block_f=block_f, block_d=block_d,
+            interpret=interpret,
+        )
+    return _ref.moe_gmm(xe, we)

@@ -1,0 +1,98 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the semantics; the kernels must match them (tests sweep shapes
+and dtypes with ``assert_allclose`` in interpret mode). Where the model
+code already contains the reference implementation (attention, SSD), we
+re-export it so there is exactly one source of truth.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import decode_attention as decode_attention_ref
+from repro.models.attention import naive_attention
+from repro.models.layers import rms_norm as _rms_norm_layers
+from repro.models.ssm import ssd_chunked
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """[..., D] -> [..., D]; f32 statistics regardless of dtype."""
+    return _rms_norm_layers(x, scale, eps)
+
+
+def flash_attention(
+    q: jax.Array,  # [B, Sq, Hq, dh]
+    k: jax.Array,  # [B, Sk, Hkv, dh]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    return naive_attention(q, k, v, causal=causal, window=window, scale=scale)
+
+
+def decode_attention(
+    q: jax.Array,          # [B, Hq, dh]
+    k_cache: jax.Array,    # [B, S, Hkv, dh]
+    v_cache: jax.Array,
+    slot_pos: jax.Array,   # [B, S] int32, -1 = empty
+    cur_pos: jax.Array,    # [B] int32
+    *,
+    window: int = 0,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    return decode_attention_ref(
+        q, k_cache, v_cache, slot_pos, cur_pos, window=window, scale=scale
+    )
+
+
+def ssd(
+    x: jax.Array,   # [B, S, H, P] (dt-weighted inputs)
+    a: jax.Array,   # [B, S, H]    log-decay per step
+    b: jax.Array,   # [B, S, N]
+    c: jax.Array,   # [B, S, N]
+    chunk: int,
+    h0: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked state-space dual form; returns (y [B,S,H,P], h_final)."""
+    return ssd_chunked(x, a, b, c, chunk, h0)
+
+
+def ssd_sequential(x, a, b, c, h0=None):
+    """O(S) sequential recurrence - the ground-truth semantics of SSD:
+    h_t = exp(a_t) h_{t-1} + b_t^T x_t ; y_t = c_t h_t."""
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(carry, inp):
+        xt, at, bt, ct = inp
+        decay = jnp.exp(at.astype(jnp.float32))  # [B, H]
+        upd = jnp.einsum(
+            "bhp,bn->bhpn", xt.astype(jnp.float32), bt.astype(jnp.float32)
+        )
+        hn = carry * decay[..., None, None] + upd
+        yt = jnp.einsum("bhpn,bn->bhp", hn, ct.astype(jnp.float32))
+        return hn, yt
+
+    xs = (
+        jnp.moveaxis(x, 1, 0),
+        jnp.moveaxis(a, 1, 0),
+        jnp.moveaxis(b, 1, 0),
+        jnp.moveaxis(c, 1, 0),
+    )
+    hf, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), hf
+
+
+def moe_gmm(
+    xe: jax.Array,  # [E, C, D] expert-dispatched tokens
+    we: jax.Array,  # [E, D, F] per-expert weights
+) -> jax.Array:
+    """Grouped (per-expert batched) matmul -> [E, C, F]."""
+    return jnp.einsum("ecd,edf->ecf", xe, we)

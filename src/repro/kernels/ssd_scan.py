@@ -1,0 +1,126 @@
+"""Mamba2 SSD (state-space dual) chunked-scan Pallas kernel.
+
+TPU adaptation of the SSD algorithm (Dao & Gu 2024): within a chunk the
+recurrence is evaluated in its quadratic dual form - three MXU matmuls on
+(chunk x chunk) / (chunk x P) tiles resident in VMEM - while the
+inter-chunk state recurrence rides the innermost (sequential) grid
+dimension, carrying the [P, N] state in VMEM scratch. Chunk length is the
+natural 128 so every matmul dimension is MXU-aligned.
+
+Grid: (B, H, num_chunks). B/C projections are shared across heads
+(ngroups=1), expressed through index maps that ignore the head axis.
+Inputs follow ``repro.models.ssm.ssd_chunked``: x is dt-weighted, ``a`` is
+the per-step log decay.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _ssd_kernel(
+    x_ref,     # [1, l, 1, P]
+    a_ref,     # [1, l, 1]
+    b_ref,     # [1, l, N]
+    c_ref,     # [1, l, N]
+    y_ref,     # [1, l, 1, P]
+    hf_ref,    # [1, 1, P, N] final state (written on the last chunk)
+    h_ref,     # scratch [P, N] f32
+    *,
+    nc: int,
+):
+    ic = pl.program_id(2)
+    l = x_ref.shape[1]
+    p = x_ref.shape[3]
+    n = b_ref.shape[2]
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)          # [l, P]
+    a = a_ref[0, :, 0].astype(jnp.float32)             # [l]
+    bm = b_ref[0].astype(jnp.float32)                  # [l, N]
+    cm = c_ref[0].astype(jnp.float32)                  # [l, N]
+
+    cum = jnp.cumsum(a)                                # [l]
+    # segsum: seg[i, j] = cum[i] - cum[j] for j <= i else -inf
+    seg = cum[:, None] - cum[None, :]
+    tri = (
+        jax.lax.iota(jnp.int32, l)[:, None]
+        >= jax.lax.iota(jnp.int32, l)[None, :]
+    )
+    L = jnp.exp(jnp.where(tri, seg, NEG_INF))          # [l, l]
+
+    scores = jax.lax.dot_general(
+        cm, bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                  # [l, l]
+    y_diag = jax.lax.dot_general(
+        L * scores, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                  # [l, P]
+
+    h = h_ref[...]                                     # [P, N]
+    y_off = jax.lax.dot_general(
+        cm, h, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * jnp.exp(cum)[:, None]                          # [l, P]
+
+    decay_states = jnp.exp(cum[-1] - cum)              # [l]
+    state_new = jax.lax.dot_general(
+        x * decay_states[:, None], bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                  # [P, N]
+    h_new = h * jnp.exp(cum[-1]) + state_new
+    h_ref[...] = h_new
+
+    y_ref[...] = (y_diag + y_off)[None, :, None, :].astype(y_ref.dtype)
+
+    @pl.when(ic == nc - 1)
+    def _final():
+        hf_ref[...] = h_new[None, None].astype(hf_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(
+    x: jax.Array,   # [B, S, H, P]  dt-weighted inputs
+    a: jax.Array,   # [B, S, H]     log decay
+    b: jax.Array,   # [B, S, N]
+    c: jax.Array,   # [B, S, N]
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    l = min(chunk, s)
+    assert s % l == 0, (s, l)
+    nc = s // l
+
+    y, hf = pl.pallas_call(
+        functools.partial(_ssd_kernel, nc=nc),
+        grid=(bsz, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, l, 1, p), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, l, 1), lambda ib, ih, ic: (ib, ic, ih)),
+            pl.BlockSpec((1, l, n), lambda ib, ih, ic: (ib, ic, 0)),
+            pl.BlockSpec((1, l, n), lambda ib, ih, ic: (ib, ic, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, l, 1, p), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda ib, ih, ic: (ib, ih, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, h, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, a, b, c)
+    return y, hf

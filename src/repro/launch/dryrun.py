@@ -1,0 +1,277 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves the distribution config is coherent (sharding
+propagates, collectives legal, memory fits) and extracts the roofline
+inputs: cost_analysis FLOPs/bytes + collective bytes parsed from the
+optimized HLO.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun \
+        --arch all --shape all --mesh both --out results/dryrun
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.config.parallel import TPU_V5E, HardwareSpec, ParallelPlan
+from repro.config.shapes import SHAPES, SHAPE_ORDER, ShapeConfig, applicability
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.hlo_analysis import RooflineTerms, parse_collectives
+from repro.launch.hlo_counter import corrected_costs
+from repro.launch.mesh import make_production_mesh, mesh_devices
+from repro.launch.specs import (
+    extras_for,
+    prefill_input_specs,
+    train_batch_specs,
+)
+from repro.models.model import ModelApi, build
+from repro.serving.engine import jit_serve_steps
+from repro.training.train_step import jit_train_step
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference), N = active params."""
+    n = cfg.num_active_params()
+    if shape.kind == "train":
+        return 6.0 * n * shape.tokens
+    return 2.0 * n * shape.tokens
+
+
+def default_plan(shape: ShapeConfig, mesh) -> ParallelPlan:
+    if shape.kind == "train":
+        plan = ParallelPlan(remat="full", zero3=True)
+    else:
+        plan = ParallelPlan(remat="none", zero3=False)
+    return plan.restrict_to(mesh.axis_names)
+
+
+def lower_cell(
+    cfg: ModelConfig,
+    shape: ShapeConfig,
+    mesh,
+    plan: Optional[ParallelPlan] = None,
+    constrain_acts: bool = False,
+):
+    """Build + lower one cell; returns the jax ``Lowered``.
+
+    ``constrain_acts`` enables the beyond-paper activation sharding
+    constraints (repro.sharding.constraints) at trace time.
+    """
+    import contextlib
+
+    from repro.sharding.constraints import activation_constraints
+
+    api = build(cfg)
+    plan = plan or default_plan(shape, mesh)
+    extras = tuple(extras_for(cfg, shape.global_batch).keys())
+    ctx = (
+        activation_constraints(mesh, plan)
+        if constrain_acts
+        else contextlib.nullcontext()
+    )
+    with mesh, ctx:
+        if shape.kind == "train":
+            fn, abstract_state, _, _ = jit_train_step(
+                api, plan, mesh, train_batch_specs(cfg, shape)
+            )
+            return fn.lower(abstract_state, train_batch_specs(cfg, shape))
+        prefill_jit, decode_jit, _ = jit_serve_steps(
+            api, plan, mesh, shape.global_batch, shape.seq_len, extras=extras
+        )
+        ap = api.abstract_params()
+        if shape.kind == "prefill":
+            return prefill_jit.lower(ap, *prefill_input_specs(cfg, shape))
+        cache = api.abstract_cache(shape.global_batch, shape.seq_len)
+        tokens = jax.ShapeDtypeStruct((shape.global_batch,), jax.numpy.int32)
+        return decode_jit.lower(ap, cache, tokens)
+
+
+def analyse_compiled(
+    compiled, mesh, cfg: ModelConfig, shape: ShapeConfig, hw: HardwareSpec
+) -> Dict[str, Any]:
+    ndev = mesh_devices(mesh)
+    out: Dict[str, Any] = {"devices": ndev}
+
+    try:
+        mem = compiled.memory_analysis()
+        out["memory"] = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        }
+        arg = out["memory"]["argument_bytes"] or 0
+        outb = out["memory"]["output_bytes"] or 0
+        tmp = out["memory"]["temp_bytes"] or 0
+        alias = out["memory"]["alias_bytes"] or 0
+        out["memory"]["peak_bytes_per_device"] = arg + outb + tmp - alias
+    except Exception as e:  # CPU backend may not implement it
+        out["memory"] = {"error": str(e)}
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    raw_flops = float(cost.get("flops", 0.0))
+    raw_bytes = float(cost.get("bytes accessed", 0.0))
+    out["cost_raw"] = {"flops": raw_flops, "bytes_accessed": raw_bytes}
+
+    hlo = compiled.as_text()
+    # flat (uncorrected) collective scan - kept for comparison
+    stats = parse_collectives(hlo, ndev)
+    out["collectives_flat"] = stats.to_json()
+    # while-corrected accounting: scan bodies x trip count (raw
+    # cost_analysis counts each while body ONCE - see hlo_counter docs)
+    cc = corrected_costs(hlo, ndev)
+    out["cost_corrected"] = {
+        "flops": cc.flops,
+        "hbm_bytes": cc.hbm_bytes,
+        "collectives": cc.collectives_json(),
+    }
+
+    terms = RooflineTerms(
+        chips=ndev,
+        flops_per_device=cc.flops,
+        hbm_bytes_per_device=cc.hbm_bytes,
+        collective_link_bytes_per_device=cc.collective_link_bytes,
+        collective_operand_bytes_per_device=cc.collective_operand_bytes,
+        peak_flops=hw.peak_flops,
+        hbm_bw=hw.hbm_bandwidth,
+        ici_bw=hw.ici_bandwidth,
+        model_flops=model_flops(cfg, shape),
+    )
+    out["roofline"] = terms.to_json()
+    return out
+
+
+def run_cell(
+    arch_id: str,
+    shape_name: str,
+    mesh,
+    mesh_name: str,
+    hw: HardwareSpec = TPU_V5E,
+    plan: Optional[ParallelPlan] = None,
+    keep_hlo: Optional[str] = None,
+    constrain_acts: bool = False,
+) -> Dict[str, Any]:
+    cfg = get_config(arch_id)
+    shape = SHAPES[shape_name]
+    cell = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name}
+    skip = applicability(cfg, shape)
+    if skip:
+        cell["skipped"] = skip
+        return cell
+    t0 = time.time()
+    lowered = lower_cell(cfg, shape, mesh, plan, constrain_acts=constrain_acts)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    cell.update(analyse_compiled(compiled, mesh, cfg, shape, hw))
+    cell["lower_s"] = round(t1 - t0, 2)
+    cell["compile_s"] = round(t2 - t1, 2)
+    if keep_hlo:
+        with open(keep_hlo, "w") as f:
+            f.write(compiled.as_text())
+    return cell
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--keep-hlo", action="store_true")
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--grad-accum", type=int, default=0)
+    ap.add_argument("--constrain-acts", action="store_true",
+                    help="enable activation sharding constraints (SSPerf)")
+    ap.add_argument("--pure-dp", action="store_true",
+                    help="drop tensor parallelism (small-model plan: the "
+                         "model axis joins data; SSPerf mamba2 iteration)")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPE_ORDER) if args.shape == "all" else args.shape.split(",")
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single_pod_16x16", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi_pod_2x16x16", make_production_mesh(multi_pod=True)))
+
+    os.makedirs(args.out, exist_ok=True)
+    n_ok = n_skip = n_fail = 0
+    for mesh_name, mesh in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                tag = f"{arch}_{shape_name}_{mesh_name}".replace(".", "p")
+                path = os.path.join(args.out, tag + ".json")
+                import dataclasses
+
+                plan = None
+                shape = SHAPES[shape_name]
+                overrides = {}
+                if args.remat and shape.kind == "train":
+                    overrides["remat"] = args.remat
+                if args.grad_accum and shape.kind == "train":
+                    overrides["grad_accum"] = args.grad_accum
+                if args.pure_dp:
+                    # fold the model axis into data parallelism: no TP
+                    overrides["tensor_axes"] = ()
+                    overrides["expert_axes"] = ()
+                    overrides["data_axes"] = ("pod", "data", "model")
+                    overrides["fsdp_axes"] = ("pod", "data", "model")
+                if overrides:
+                    plan = dataclasses.replace(
+                        default_plan(shape, mesh), **overrides
+                    ).restrict_to(mesh.axis_names)
+                try:
+                    cell = run_cell(
+                        arch, shape_name, mesh, mesh_name,
+                        plan=plan,
+                        keep_hlo=(
+                            os.path.join(args.out, tag + ".hlo.txt")
+                            if args.keep_hlo else None
+                        ),
+                        constrain_acts=args.constrain_acts,
+                    )
+                    if "skipped" in cell:
+                        n_skip += 1
+                        print(f"SKIP {tag}: {cell['skipped']}")
+                    else:
+                        n_ok += 1
+                        r = cell["roofline"]
+                        print(
+                            f"OK   {tag}: compute={r['compute_s']:.3e}s "
+                            f"memory={r['memory_s']:.3e}s "
+                            f"collective={r['collective_s']:.3e}s "
+                            f"bottleneck={r['bottleneck']} "
+                            f"(lower {cell['lower_s']}s compile {cell['compile_s']}s)"
+                        )
+                except Exception as e:
+                    n_fail += 1
+                    cell = {
+                        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+                        "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc()[-4000:],
+                    }
+                    print(f"FAIL {tag}: {type(e).__name__}: {e}")
+                with open(path, "w") as f:
+                    json.dump(cell, f, indent=1)
+    print(f"\ndry-run done: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,214 @@
+"""Post-SPMD HLO analysis: collective-byte accounting + roofline terms.
+
+``cost_analysis()`` does not report collective traffic, so we parse the
+optimized HLO text: every instruction's output shape gives a name->bytes
+map; collective instructions then contribute their operand/output bytes.
+
+Per-chip link-traffic model (ring schedules on a 2D/3D torus):
+    all-reduce        2 x bytes   (reduce-scatter + all-gather phases)
+    all-gather        1 x output bytes
+    reduce-scatter    1 x operand bytes
+    all-to-all        1 x operand bytes
+    collective-permute 1 x operand bytes
+The assignment-literal term (sum of operand sizes / (chips x link_bw)) is
+reported alongside; the ring-model term is used for bottleneck calls.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%?[\w\.\-]+)\s*=\s*(.+)$")
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+# all-gather-start, all-reduce-start etc. (async) share the prefix match.
+
+
+def _shape_bytes(type_str: str) -> float:
+    """Bytes of one HLO type string (handles tuples)."""
+    total = 0.0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, num_devices: int) -> int:
+    """Parse replica_groups to the participant count per group."""
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return num_devices
+
+
+@dataclass
+class CollectiveStats:
+    counts: Dict[str, int] = field(default_factory=dict)
+    operand_bytes: Dict[str, float] = field(default_factory=dict)
+    output_bytes: Dict[str, float] = field(default_factory=dict)
+    link_bytes: Dict[str, float] = field(default_factory=dict)
+    group_sizes: Dict[str, List[int]] = field(default_factory=dict)
+
+    @property
+    def total_operand_bytes(self) -> float:
+        return sum(self.operand_bytes.values())
+
+    @property
+    def total_link_bytes(self) -> float:
+        return sum(self.link_bytes.values())
+
+    def to_json(self) -> dict:
+        return {
+            "counts": self.counts,
+            "operand_bytes": self.operand_bytes,
+            "output_bytes": self.output_bytes,
+            "link_bytes": self.link_bytes,
+            "total_operand_bytes": self.total_operand_bytes,
+            "total_link_bytes": self.total_link_bytes,
+        }
+
+
+def parse_collectives(hlo_text: str, num_devices: int = 1) -> CollectiveStats:
+    """Scan optimized HLO for collective ops and account their bytes."""
+    from repro.launch.hlo_counter import split_rhs
+
+    # pass 1: name -> output bytes (tuple-typed outputs handled by split_rhs)
+    sizes: Dict[str, float] = {}
+    parsed = []
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1).lstrip("%"), m.group(2)
+        type_str, opcode, operands, _ = split_rhs(rhs)
+        sizes[name] = _shape_bytes(type_str)
+        parsed.append((name, opcode, operands, line))
+
+    stats = CollectiveStats()
+    for name, op, operand_names, line in parsed:
+        base = None
+        for c in _COLLECTIVES:
+            if op == c or op == c + "-start":
+                base = c
+                break
+        if base is None:
+            continue
+        ob = sum(sizes.get(o, 0.0) for o in operand_names)
+        out_b = sizes.get(name, 0.0)
+        gs = _group_size(line, num_devices)
+
+        stats.counts[base] = stats.counts.get(base, 0) + 1
+        stats.operand_bytes[base] = stats.operand_bytes.get(base, 0.0) + ob
+        stats.output_bytes[base] = stats.output_bytes.get(base, 0.0) + out_b
+        stats.group_sizes.setdefault(base, []).append(gs)
+        if base == "all-reduce":
+            link = 2.0 * out_b * max(0, gs - 1) / max(1, gs)
+        elif base == "all-gather":
+            link = out_b * max(0, gs - 1) / max(1, gs)
+        elif base == "reduce-scatter":
+            link = ob * max(0, gs - 1) / max(1, gs)
+        else:  # all-to-all / collective-permute
+            link = ob
+        stats.link_bytes[base] = stats.link_bytes.get(base, 0.0) + link
+    return stats
+
+
+@dataclass
+class RooflineTerms:
+    """Three-term roofline for one compiled (arch x shape x mesh) cell.
+
+    All *_s values are seconds for one step execution on the target HW.
+    FLOPs/bytes from cost_analysis are per-device (the SPMD module);
+    global = per_device x chips.
+    """
+
+    chips: int
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    collective_link_bytes_per_device: float
+    collective_operand_bytes_per_device: float
+    peak_flops: float
+    hbm_bw: float
+    ici_bw: float
+    model_flops: float = 0.0  # 6*N*D useful-compute reference
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / self.peak_flops
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes_per_device / self.hbm_bw
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_link_bytes_per_device / self.ici_bw
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step time = max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        if self.model_flops <= 0:
+            return 0.0
+        return self.model_flops / (self.flops_per_device * self.chips)
+
+    @property
+    def mfu(self) -> float:
+        """Model FLOPs / (chips x peak x roofline step time)."""
+        t = self.step_time_s
+        if t <= 0 or self.model_flops <= 0:
+            return 0.0
+        return self.model_flops / (self.chips * self.peak_flops * t)
+
+    def to_json(self) -> dict:
+        return {
+            "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "hbm_bytes_per_device": self.hbm_bytes_per_device,
+            "collective_link_bytes_per_device": self.collective_link_bytes_per_device,
+            "collective_operand_bytes_per_device": self.collective_operand_bytes_per_device,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "step_time_s": self.step_time_s,
+            "model_flops": self.model_flops,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "mfu": self.mfu,
+        }

@@ -1,0 +1,499 @@
+"""While-corrected HLO FLOP/byte accounting.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any
+scan-over-layers program (all our train steps) under-reports FLOPs by
+~num_layers x. This module re-derives compute/memory totals from the
+optimized HLO text with loop trip counts applied:
+
+  * The module is split into named computations; a call graph is built
+    from ``while`` (body/condition), ``fusion`` (calls=), ``call``
+    (to_apply=) edges, and multiplicities are propagated from ENTRY with
+    while-trip counts parsed from each loop condition's ROOT compare
+    against an integer constant.
+  * FLOPs: every ``dot`` contributes 2 * prod(output dims) * prod(lhs
+    contracting dims) (batched dims fall out naturally since they appear
+    in the output). Elementwise FLOPs are ignored (sub-1% for these
+    models).
+  * Bytes: per computation, the sum of operand + output bytes over its
+    *top-level* instructions only - fusion instructions count as single
+    ops (their internals never touch HBM), which models TPU HBM traffic
+    far better than the unfused per-op accounting cost_analysis does.
+
+Validated against analytic 6*N*D in tests (within ~15% for dense LMs).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^\s*(ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*)$")
+
+
+def _shapes_in(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(text):
+        dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+        out.append((m.group(1), dims))
+    return out
+
+
+def split_rhs(rhs: str) -> Tuple[str, str, List[str], str]:
+    """Split an instruction RHS into (type_str, opcode, operands, attrs).
+
+    Handles tuple-typed outputs: ``(bf16[..], s32[..]) while(%t), body=..``.
+    """
+    rhs = rhs.strip()
+    if rhs.startswith("("):
+        depth = 0
+        type_end = len(rhs)
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    type_end = i + 1
+                    break
+        type_str, rest = rhs[:type_end], rhs[type_end:].strip()
+    else:
+        sp = rhs.find(" ")
+        if sp < 0:
+            return rhs, "", [], ""
+        type_str, rest = rhs[:sp], rhs[sp + 1 :].strip()
+    paren = rest.find("(")
+    if paren < 0:
+        return type_str, rest.strip(), [], ""
+    opcode = rest[:paren].strip()
+    depth, end = 1, len(rest)
+    for i in range(paren + 1, len(rest)):
+        if rest[i] == "(":
+            depth += 1
+        elif rest[i] == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    operands = re.findall(r"%([\w\.\-]+)", rest[paren + 1 : end])
+    attrs = rest[end + 1 :]
+    return type_str, opcode, operands, attrs
+
+
+def _nbytes(shapes: List[Tuple[str, List[int]]]) -> float:
+    total = 0.0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    out_shapes: List[Tuple[str, List[int]]]
+    operands: List[str]
+    rhs: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    is_entry: bool = False
+
+
+def parse_module(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            # computation headers are lines ending in '{' containing '->'
+            # (params may contain nested tuple parens and /*index=N*/
+            # comments, so match only the leading name)
+            if line.endswith("{") and "->" in line:
+                m = _COMP_HDR.match(line)
+                if m:
+                    cur = Computation(
+                        m.group(2), is_entry=bool(m.group(1))
+                        or line.lstrip().startswith("ENTRY"),
+                    )
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        type_str, opcode, operands, _attrs = split_rhs(rhs)
+        out_shapes = _shapes_in(type_str)
+        cur.instrs.append(Instr(name, opcode, out_shapes, operands, rhs))
+    return comps
+
+
+def _attr_comp(rhs: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=%?([\w\.\-]+)", rhs)
+    return m.group(1) if m else None
+
+
+def _trip_count(cond: Computation, comps: Optional[Dict[str, "Computation"]] = None) -> int:
+    """Trip count from the loop condition's compare-against-constant.
+
+    Handles both a direct ``compare`` ROOT and the common post-optimization
+    form where the compare is wrapped in a kLoop fusion
+    (``ROOT %wrapped_compare = pred[] fusion(%iter, %const), calls=...``).
+    Falls back to the largest integer constant in the condition, which for
+    canonical 0..N-1 counted loops is N.
+    """
+    consts: Dict[str, int] = {}
+    for ins in cond.instrs:
+        if ins.opcode == "constant":
+            m = re.search(r"constant\((-?\d+)\)", ins.rhs)
+            if m:
+                consts[ins.name] = int(m.group(1))
+
+    def from_compare(ins: Instr) -> Optional[int]:
+        vals = [consts[o] for o in ins.operands if o in consts]
+        if not vals:
+            return None
+        direction = re.search(r"direction=(\w+)", ins.rhs)
+        d = direction.group(1) if direction else "LT"
+        v = max(vals)
+        return v + 1 if d == "LE" else v
+
+    direction_hint = "LT"
+    for ins in reversed(cond.instrs):
+        if ins.opcode == "compare":
+            got = from_compare(ins)
+            if got is not None:
+                return got
+        if ins.opcode == "fusion" and comps is not None:
+            callee = _attr_comp(ins.rhs, "calls")
+            if callee in comps:
+                for sub in comps[callee].instrs:
+                    if sub.opcode == "compare":
+                        m = re.search(r"direction=(\w+)", sub.rhs)
+                        if m:
+                            direction_hint = m.group(1)
+    if consts:
+        v = max(consts.values())
+        return v + 1 if direction_hint == "LE" else max(v, 1)
+    return 1
+
+
+def _dot_flops(ins: Instr, sizes: Dict[str, List[Tuple[str, List[int]]]]) -> float:
+    out_n = 1.0
+    for _, dims in ins.out_shapes:
+        for d in dims:
+            out_n *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rhs)
+    cdims = [int(x) for x in m.group(1).split(",")] if m and m.group(1) else []
+    # lhs shape: inline operand type if present, else lookup by name
+    type_str, _, _, _ = split_rhs(ins.rhs)
+    opseg = ins.rhs[len(type_str) :]
+    paren = opseg.find("(")
+    inline = _shapes_in(opseg[paren:]) if paren >= 0 else []
+    lhs_dims: List[int] = []
+    if inline:
+        lhs_dims = inline[0][1]
+    elif ins.operands:
+        got = sizes.get(ins.operands[0])
+        if got:
+            lhs_dims = got[0][1]
+    k = 1.0
+    for c in cdims:
+        if c < len(lhs_dims):
+            k *= lhs_dims[c]
+    return 2.0 * out_n * k
+
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+# ops that move no HBM bytes (views, tuple plumbing, metadata)
+_FREE_OPS = frozenset({
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "reshape",
+})
+
+
+def _collective_base(opcode: str) -> Optional[str]:
+    for c in _COLLECTIVES:
+        if opcode == c or opcode == c + "-start":
+            return c
+    return None
+
+
+def _group_size(rhs: str, num_devices: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=", rhs)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", rhs)
+    if m:
+        return len(m.group(1).split(","))
+    return num_devices
+
+
+def _merge_coll(dst: Dict[str, List[float]], src: Dict[str, List[float]],
+                scale: float = 1.0):
+    for k, v in src.items():
+        cur = dst.setdefault(k, [0.0, 0.0, 0.0, 0.0])
+        for i in range(4):
+            cur[i] += v[i] * scale
+
+
+def _fusion_bytes(
+    callee: Computation,
+    sizes: Dict[str, List[Tuple[str, List[int]]]],
+) -> float:
+    """HBM traffic of one fusion execution.
+
+    Reads: each parameter counts at full size UNLESS every consumer inside
+    the fusion is a slicing op (then only the slices are read - XLA fuses
+    dynamic-slice into the loop body so the full loop-carried stack is
+    never touched). Writes: the root output, except dynamic-update-slice
+    roots which alias in place and write only the update.
+
+    TPU-faithfulness: XLA *CPU* legalizes bf16 by round-tripping through
+    f32 (convert -> dynamic-update-slice -> convert over the whole
+    loop-carried KV stack, breaking in-place aliasing). TPUs execute bf16
+    natively and alias the DUS, so when the root reduces - through
+    convert/bitcast only - to a DUS whose target chain reduces to a
+    parameter, the fusion is charged 2 x update bytes (the in-place
+    semantics), not the full-stack round trip.
+    """
+    by_name = {ins.name: ins for ins in callee.instrs}
+
+    def resolve(name: str) -> Optional[Instr]:
+        ins = by_name.get(name)
+        while ins is not None and ins.opcode in ("convert", "bitcast", "copy"):
+            if not ins.operands:
+                return ins
+            ins = by_name.get(ins.operands[0])
+        return ins
+
+    consumers: Dict[str, List[Instr]] = {}
+    for ins in callee.instrs:
+        for o in ins.operands:
+            consumers.setdefault(o, []).append(ins)
+
+    root = callee.instrs[-1] if callee.instrs else None
+    aliased_dus = None
+    if root is not None:
+        r = resolve(root.name)
+        if r is not None and r.opcode in ("dynamic-update-slice", "scatter") \
+                and r.operands:
+            target = resolve(r.operands[0])
+            if target is not None and target.opcode == "parameter":
+                aliased_dus = (r, target)
+
+    if aliased_dus is not None:
+        r, target = aliased_dus
+        update = (
+            _nbytes(sizes.get(r.operands[1], []))
+            if len(r.operands) > 1 else 0.0
+        )
+        # other parameters still count (e.g. the update value, indices)
+        extra = 0.0
+        for ins in callee.instrs:
+            if ins.opcode == "parameter" and ins.name != target.name:
+                extra += min(_nbytes(ins.out_shapes), update or
+                             _nbytes(ins.out_shapes))
+        return 2.0 * update + extra
+
+    reads = 0.0
+    for ins in callee.instrs:
+        if ins.opcode != "parameter":
+            continue
+        cons = consumers.get(ins.name, [])
+        if cons and all(
+            c.opcode in ("slice", "dynamic-slice", "gather") for c in cons
+        ):
+            reads += sum(_nbytes(c.out_shapes) for c in cons)
+        else:
+            reads += _nbytes(ins.out_shapes)
+    writes = 0.0
+    if root is not None:
+        if root.opcode in ("dynamic-update-slice", "scatter") and len(root.operands) > 1:
+            writes = _nbytes(sizes.get(root.operands[1], []))
+        else:
+            writes = _nbytes(root.out_shapes)
+    return reads + writes
+
+
+@dataclass
+class CorrectedCosts:
+    """While-corrected per-device totals for one compiled module.
+
+    collectives: base-op -> [count, operand_bytes, output_bytes, link_bytes]
+    (link bytes use the ring-schedule model; see hlo_analysis).
+    """
+
+    flops: float
+    hbm_bytes: float
+    collectives: Dict[str, List[float]] = field(default_factory=dict)
+    warnings: List[str] = field(default_factory=list)
+
+    @property
+    def collective_link_bytes(self) -> float:
+        return sum(v[3] for v in self.collectives.values())
+
+    @property
+    def collective_operand_bytes(self) -> float:
+        return sum(v[1] for v in self.collectives.values())
+
+    def collectives_json(self) -> dict:
+        return {
+            k: {
+                "count": v[0], "operand_bytes": v[1],
+                "output_bytes": v[2], "link_bytes": v[3],
+            }
+            for k, v in self.collectives.items()
+        }
+
+
+def corrected_costs(hlo: str, num_devices: int = 1) -> CorrectedCosts:
+    comps = parse_module(hlo)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return CorrectedCosts(0.0, 0.0, warnings=["no ENTRY computation found"])
+
+    # name -> output shapes (module-wide; HLO names are unique)
+    sizes: Dict[str, List[Tuple[str, List[int]]]] = {}
+    for c in comps.values():
+        for ins in c.instrs:
+            sizes[ins.name] = ins.out_shapes
+
+    memo: Dict[str, Tuple[float, float, Dict[str, List[float]]]] = {}
+    warnings: List[str] = []
+    in_progress: set = set()
+
+    def visit(comp_name: str) -> Tuple[float, float, Dict[str, List[float]]]:
+        """(flops, hbm_bytes, collectives) for ONE execution of the
+        computation, including callees with loop multiplicities."""
+        if comp_name in memo:
+            return memo[comp_name]
+        if comp_name in in_progress or comp_name not in comps:
+            return 0.0, 0.0, {}
+        in_progress.add(comp_name)
+        comp = comps[comp_name]
+        fl = 0.0
+        by = 0.0
+        coll: Dict[str, List[float]] = {}
+        for ins in comp.instrs:
+            if ins.opcode in _FREE_OPS:
+                continue
+            # HBM-traffic model per top-level op (fusions are single ops):
+            #   slicing reads/writes only the slice; dynamic-update-slice
+            #   is aliased in place (touches 2x the update, not the buffer);
+            #   tuple plumbing (gte/tuple/bitcast/while carry) is free.
+            if ins.opcode in ("slice", "dynamic-slice", "gather"):
+                by += 2.0 * _nbytes(ins.out_shapes)
+            elif ins.opcode in ("dynamic-update-slice", "scatter"):
+                upd = (
+                    _nbytes(sizes.get(ins.operands[1], []))
+                    if len(ins.operands) > 1
+                    else _nbytes(ins.out_shapes)
+                )
+                by += 2.0 * upd
+            elif ins.opcode == "broadcast":
+                by += _nbytes(ins.out_shapes) + sum(
+                    _nbytes(sizes.get(o, [])) for o in ins.operands
+                )
+            elif ins.opcode == "fusion":
+                callee_name = _attr_comp(ins.rhs, "calls")
+                if callee_name in comps:
+                    by += _fusion_bytes(comps[callee_name], sizes)
+                else:
+                    by += _nbytes(ins.out_shapes) + sum(
+                        _nbytes(sizes.get(o, [])) for o in ins.operands
+                    )
+            elif ins.opcode not in ("while", "conditional", "call"):
+                by += _nbytes(ins.out_shapes)
+                for o in ins.operands:
+                    by += _nbytes(sizes.get(o, []))
+
+            base = _collective_base(ins.opcode)
+            if base is not None:
+                ob = sum(_nbytes(sizes.get(o, [])) for o in ins.operands)
+                out_b = _nbytes(ins.out_shapes)
+                gs = _group_size(ins.rhs, num_devices)
+                if base == "all-reduce":
+                    link = 2.0 * out_b * max(0, gs - 1) / max(1, gs)
+                elif base == "all-gather":
+                    link = out_b * max(0, gs - 1) / max(1, gs)
+                elif base == "reduce-scatter":
+                    link = ob * max(0, gs - 1) / max(1, gs)
+                else:
+                    link = ob
+                _merge_coll(coll, {base: [1.0, ob, out_b, link]})
+
+            if ins.opcode == "dot":
+                fl += _dot_flops(ins, sizes)
+            elif ins.opcode in ("while", "while-start"):
+                body = _attr_comp(ins.rhs, "body")
+                cond = _attr_comp(ins.rhs, "condition")
+                trips = _trip_count(comps[cond], comps) if cond in comps else 1
+                if body:
+                    bf, bb, bc = visit(body)
+                    fl += bf * trips
+                    by += bb * trips
+                    _merge_coll(coll, bc, trips)
+                if cond in comps:
+                    cf, cb, _ = visit(cond)
+                    fl += cf * trips
+            elif ins.opcode == "fusion":
+                callee = _attr_comp(ins.rhs, "calls")
+                if callee:
+                    cf, _, cc = visit(callee)  # bytes: fusion = single op
+                    fl += cf
+                    _merge_coll(coll, cc)
+            elif ins.opcode in ("call", "custom-call", "reduce", "map",
+                                "scatter", "sort", "reduce-window",
+                                "select-and-scatter", "all-reduce",
+                                "reduce-scatter", "async-start"):
+                callee = _attr_comp(ins.rhs, "to_apply") or _attr_comp(
+                    ins.rhs, "calls"
+                )
+                if callee:
+                    cf, cb, cc = visit(callee)
+                    fl += cf
+                    _merge_coll(coll, cc)
+                    if ins.opcode in ("call", "async-start"):
+                        by += cb
+            elif ins.opcode == "conditional":
+                for key in ("true_computation", "false_computation"):
+                    callee = _attr_comp(ins.rhs, key)
+                    if callee:
+                        cf, cb, cc = visit(callee)
+                        fl += cf
+                        by += cb
+                        _merge_coll(coll, cc)
+        in_progress.discard(comp_name)
+        memo[comp_name] = (fl, by, coll)
+        return fl, by, coll
+
+    fl, by, coll = visit(entry.name)
+    return CorrectedCosts(
+        flops=fl, hbm_bytes=by, collectives=coll, warnings=warnings
+    )

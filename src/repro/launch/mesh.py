@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module-level constants) so importing this module
+never touches jax device state - the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first jax
+init, and everything else must see the real single-device CPU.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def _auto(n):
+    from jax.sharding import AxisType
+
+    return (AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh for tests (e.g. (2,2) on 4 forced host devices)."""
+    return jax.make_mesh(tuple(shape), tuple(axes), axis_types=_auto(len(axes)))
+
+
+def mesh_devices(mesh) -> int:
+    return int(np.prod(mesh.devices.shape))

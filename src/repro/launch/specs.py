@@ -1,0 +1,76 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) cell.
+
+``input_specs`` returns abstract inputs only - weak-type-correct,
+shardable, zero device allocation - exactly what ``jax.jit(...).lower()``
+needs for the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.config.shapes import ShapeConfig
+from repro.models.model import ModelApi, build
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def extras_for(cfg: ModelConfig, batch: int) -> Dict[str, Any]:
+    """Modality-frontend stubs: precomputed frame/patch embeddings."""
+    if cfg.family == "encdec":
+        return {"frames": _sds((batch, cfg.encoder_frames, cfg.d_model), cfg.dtype)}
+    if cfg.family == "vlm":
+        return {"patches": _sds((batch, cfg.num_patches, cfg.d_model), cfg.dtype)}
+    return {}
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": _sds((b, s), "int32"),
+        "targets": _sds((b, s), "int32"),
+    }
+    batch.update(extras_for(cfg, b))
+    return batch
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[Any, ...]:
+    """(tokens, prompt_lens, *extras) for the prefill serve_step."""
+    b, s = shape.global_batch, shape.seq_len
+    base = (
+        _sds((b, s), "int32"),
+        _sds((b,), "int32"),
+    )
+    return base + tuple(extras_for(cfg, b).values())
+
+
+def decode_input_specs(api: ModelApi, shape: ShapeConfig) -> Tuple[Any, Any]:
+    """(cache, tokens) for the single-new-token serve_step.
+
+    The cache covers ``seq_len`` context per the assignment ("one new token
+    with a KV cache of seq_len").
+    """
+    b, s = shape.global_batch, shape.seq_len
+    cache = api.abstract_cache(b, s)
+    tokens = _sds((b,), "int32")
+    return cache, tokens
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, api: ModelApi = None):
+    """Uniform entry: returns a dict keyed by step-input name."""
+    api = api or build(cfg)
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        toks, plens, *extras = prefill_input_specs(cfg, shape)
+        out = {"tokens": toks, "prompt_lens": plens}
+        for name, v in zip(extras_for(cfg, shape.global_batch), extras):
+            out[name] = v
+        return out
+    cache, tokens = decode_input_specs(api, shape)
+    return {"cache": cache, "tokens": tokens}

@@ -1,0 +1,109 @@
+"""End-to-end training driver.
+
+Runs real steps on the host devices (CPU here; the same code path drives
+a TPU slice - only the mesh changes). Includes the full fault-tolerance
+loop: async checkpointing every ``--ckpt-every`` steps, automatic restore
+from the latest checkpoint at startup, and bitwise-resumable data order.
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch granite-8b --smoke --steps 50 --batch 8 --seq 256
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.parallel import ParallelPlan
+from repro.config.shapes import ShapeConfig
+from repro.configs import ARCH_IDS, get_config, get_smoke
+from repro.launch.mesh import make_mesh
+from repro.models.model import build
+from repro.sharding.rules import batch_sharding, param_shardings, replicated
+from repro.training.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
+from repro.training.data import PrefetchingLoader, make_batch
+from repro.training.train_step import (
+    abstract_train_state,
+    build_train_step,
+    init_train_state,
+    make_train_state_specs,
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-8b", choices=ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--remat", default="none", choices=["none", "full", "dots"])
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    api = build(cfg)
+    ndev = len(jax.devices())
+    mesh = make_mesh((ndev, 1), ("data", "model"))
+    plan = ParallelPlan(
+        remat=args.remat,
+        grad_accum=args.grad_accum,
+        compress_grads=args.compress_grads,
+        zero3=ndev > 1,
+    ).restrict_to(mesh.axis_names)
+    shape = ShapeConfig("cli", seq_len=args.seq, global_batch=args.batch, kind="train")
+
+    print(f"arch={cfg.name} params={api.param_count()/1e6:.1f}M devices={ndev}")
+
+    step_fn = build_train_step(api, plan, lr=args.lr, total_steps=args.steps)
+    abstract, state_sh = make_train_state_specs(api, plan, mesh)
+    jitted = jax.jit(step_fn, donate_argnums=(0,))
+
+    start_step = 0
+    if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        state, start_step = restore_checkpoint(args.ckpt_dir, None, abstract)
+        print(f"restored checkpoint at step {start_step}")
+    else:
+        state = init_train_state(api, jax.random.PRNGKey(args.seed), plan)
+
+    ckpt = AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
+    loader = PrefetchingLoader(
+        cfg, shape, start_step=start_step,
+        num_steps=args.steps - start_step, seed=args.seed,
+    )
+
+    t0 = time.time()
+    tokens_done = 0
+    for step, host_batch in loader:
+        batch = jax.tree_util.tree_map(jnp.asarray, host_batch)
+        if cfg.dtype == "bfloat16":
+            for k in ("frames", "patches"):
+                if k in batch:
+                    batch[k] = batch[k].astype(jnp.bfloat16)
+        state, metrics = jitted(state, batch)
+        tokens_done += args.batch * args.seq
+        if (step + 1) % args.log_every == 0 or step == start_step:
+            loss = float(metrics["loss"])
+            gn = float(metrics["grad_norm"])
+            dt = time.time() - t0
+            print(
+                f"step {step+1:5d} loss {loss:7.4f} grad_norm {gn:8.3f} "
+                f"tok/s {tokens_done/dt:,.0f}"
+            )
+        if ckpt and (step + 1) % args.ckpt_every == 0:
+            ckpt.save(step + 1, state)
+    if ckpt:
+        ckpt.close()
+        print(f"final checkpoint at {args.ckpt_dir}")
+    print("training done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Model zoo: all assigned architecture families as pure-JAX modules."""
+from repro.models.model import ModelApi, build
+
+__all__ = ["ModelApi", "build"]

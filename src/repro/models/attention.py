@@ -1,0 +1,271 @@
+"""Attention: GQA with RoPE, chunked (flash-style) prefill, cache decode.
+
+Three implementations with one math:
+
+  * ``naive_attention``   -- O(S^2) memory; oracle for tests, tiny shapes.
+  * ``chunked_attention`` -- nested-scan online-softmax (flash in jnp);
+                             O(block^2) score memory; used by train/prefill
+                             on CPU and as the lowering-friendly path.
+  * ``kernels.ops.flash_attention`` -- Pallas TPU kernel (selected via
+                             ``use_pallas``; validated against these).
+
+Shape conventions:
+  q        [B, Sq, Hq, dh]
+  k, v     [B, Sk, Hkv, dh]      (Hq % Hkv == 0; G = Hq // Hkv)
+  output   [B, Sq, Hq, dh]
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def _gqa_split(q: jax.Array, num_kv: int) -> jax.Array:
+    b, s, hq, dh = q.shape
+    return q.reshape(b, s, num_kv, hq // num_kv, dh)
+
+
+def _window_mask(qpos, kpos, window):
+    """Sliding-window mask that accepts a static int OR a traced scalar.
+
+    A dynamic window (e.g. a per-layer value scanned over a hybrid stack)
+    uses window <= 0 to mean "full attention"."""
+    if isinstance(window, (int, np.integer)):
+        if window == 0:
+            return None
+        return qpos - kpos < window
+    return (window <= 0) | (qpos - kpos < window)
+
+
+def naive_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window=0,
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Reference attention. Materializes [B, Hkv, G, Sq, Sk] scores."""
+    b, sq, hq, dh = q.shape
+    _, sk, hkv, _ = k.shape
+    scale = scale if scale is not None else dh**-0.5
+    qg = _gqa_split(q, hkv)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) * scale
+    qpos = q_offset + jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    wm = _window_mask(qpos, kpos, window)
+    if wm is not None:
+        mask &= wm
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v)
+    return out.reshape(b, sq, hq, dh)
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window=0,
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+    q_block: int = 512,
+    kv_block: int = 512,
+) -> jax.Array:
+    """Flash-style online-softmax attention in pure jnp.
+
+    Outer ``lax.map`` over query blocks, inner ``lax.scan`` over KV blocks
+    carrying (running max, running denominator, accumulator). Never
+    materializes more than [B, Hkv, G, q_block, kv_block] scores, so the
+    compiled HLO stays O(S) in memory at 32k/500k context.
+    """
+    b, sq, hq, dh = q.shape
+    _, sk, hkv, _ = k.shape
+    g = hq // hkv
+    scale = scale if scale is not None else dh**-0.5
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, sk)
+    # pad to block multiples (e.g. whisper's 1500 encoder frames, vlm's
+    # 4096+256 patch-prefixed rows); padded kv columns are masked below,
+    # padded q rows are sliced away at the end
+    sq_orig, sk_orig = sq, sk
+    pad_q = (-sq) % q_block
+    pad_k = (-sk) % kv_block
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        sq += pad_q
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        sk += pad_k
+    nq, nk = sq // q_block, sk // kv_block
+
+    qg = _gqa_split(q, hkv).reshape(b, nq, q_block, hkv, g, dh)
+    qg = jnp.moveaxis(qg, 1, 0)  # [nq, b, qb, k, g, dh]
+    ks = jnp.moveaxis(k.reshape(b, nk, kv_block, hkv, dh), 1, 0)
+    vs = jnp.moveaxis(v.reshape(b, nk, kv_block, hkv, dh), 1, 0)
+
+    def q_step(qi_qblk):
+        qi, qblk = qi_qblk  # qblk [b, qb, k, g, dh]
+        qpos = q_offset + qi * q_block + jnp.arange(q_block)
+
+        def kv_step(carry, kj_kv):
+            m, l, acc = carry
+            kj, kblk, vblk = kj_kv
+            kpos = kj * kv_block + jnp.arange(kv_block)
+            s = (
+                jnp.einsum("bqkgd,bskd->bkgqs", qblk, kblk).astype(jnp.float32)
+                * scale
+            )
+            mask = jnp.broadcast_to(kpos[None, :] < sk_orig, (q_block, kv_block))
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            wm = _window_mask(qpos[:, None], kpos[None, :], window)
+            if wm is not None:
+                mask &= wm
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(vblk.dtype), vblk)
+            acc_new = acc * corr[..., None].astype(acc.dtype) + pv.astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_block), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, q_block, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), ks, vs)
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        # [b, k, g, qb, dh] -> [b, qb, k, g, dh]
+        return jnp.moveaxis(out, 3, 1)
+
+    outs = jax.lax.map(q_step, (jnp.arange(nq), qg))  # [nq, b, qb, k, g, dh]
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, sq, hq, dh)
+    if pad_q:
+        out = out[:, :sq_orig]
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    slot_pos: jax.Array,
+    cur_pos: jax.Array,
+    *,
+    window=0,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Single-token attention against a (possibly ring-buffer) KV cache.
+
+    q        [B, Hq, dh]       query for the new token
+    k_cache  [B, S, Hkv, dh]   keys, already rotated at their write position
+    v_cache  [B, S, Hkv, dh]
+    slot_pos [B, S] int32      absolute position stored in each slot; -1 empty
+    cur_pos  [B]    int32      position of the query token
+    """
+    b, hq, dh = q.shape
+    _, s, hkv, _ = k_cache.shape
+    scale = scale if scale is not None else dh**-0.5
+    qg = q.reshape(b, hkv, hq // hkv, dh)
+    scores = (
+        jnp.einsum("bkgd,bskd->bkgs", qg, k_cache).astype(jnp.float32) * scale
+    )
+    valid = (slot_pos >= 0) & (slot_pos <= cur_pos[:, None])
+    if window:
+        valid &= cur_pos[:, None] - slot_pos < window
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, hq, dh)
+
+
+class KVCache(NamedTuple):
+    """Per-layer-stacked KV cache with slot-position bookkeeping.
+
+    k, v      [L, B, S, Hkv, dh]
+    slot_pos  [L, B, S] int32 (-1 = empty). For ring (sliding-window) caches
+              S == window and slots are written at ``pos % S``.
+    """
+
+    k: jax.Array
+    v: jax.Array
+    slot_pos: jax.Array
+
+    @property
+    def size(self) -> int:
+        return self.k.shape[2]
+
+
+def cache_write_prefill(
+    cache_k: jax.Array,
+    cache_v: jax.Array,
+    slot_pos: jax.Array,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    ring: bool,
+) -> tuple:
+    """Write a full prefill segment [B, S_new, ...] into a single-layer cache
+    [B, S_cache, ...] starting at position 0. If ``ring`` and S_new exceeds
+    the cache, keep the trailing window."""
+    b, s_new = k_new.shape[0], k_new.shape[1]
+    s_cache = cache_k.shape[1]
+    if s_new >= s_cache:
+        start = s_new - s_cache
+        kw = jax.lax.dynamic_slice_in_dim(k_new, start, s_cache, axis=1)
+        vw = jax.lax.dynamic_slice_in_dim(v_new, start, s_cache, axis=1)
+        pos = start + jnp.arange(s_cache)
+        if ring:
+            # place entry with absolute position p at slot p % S
+            idx = pos % s_cache
+            order = jnp.argsort(idx)
+            kw, vw, pos = kw[:, order], vw[:, order], pos[order]
+        new_pos = jnp.broadcast_to(pos[None, :], (b, s_cache)).astype(jnp.int32)
+        return kw, vw, new_pos
+    ck = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new, 0, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new, 0, axis=1)
+    pos = jnp.concatenate(
+        [jnp.arange(s_new), jnp.full((s_cache - s_new,), -1, jnp.int32)]
+    ).astype(jnp.int32)
+    sp = jnp.broadcast_to(pos[None, :], (b, s_cache))
+    return ck, cv, sp
+
+
+def cache_write_decode(
+    cache_k: jax.Array,
+    cache_v: jax.Array,
+    slot_pos: jax.Array,
+    k_new: jax.Array,
+    v_new: jax.Array,
+    pos: jax.Array,
+    ring: bool,
+) -> tuple:
+    """Write one token [B, Hkv, dh] at position ``pos`` [B] (ring -> pos % S).
+
+    Uses scatter (``.at[].set``) so only the touched rows move through HBM --
+    a one-hot blend would rewrite the entire cache every decode step and
+    double the memory-roofline term.
+    """
+    b, s = slot_pos.shape
+    slot = pos % s if ring else jnp.minimum(pos, s - 1)
+    bidx = jnp.arange(b)
+    ck = cache_k.at[bidx, slot].set(k_new.astype(cache_k.dtype))
+    cv = cache_v.at[bidx, slot].set(v_new.astype(cache_v.dtype))
+    sp = slot_pos.at[bidx, slot].set(pos.astype(jnp.int32))
+    return ck, cv, sp

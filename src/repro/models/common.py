@@ -1,0 +1,121 @@
+"""Shared parameter-template machinery.
+
+Models declare their parameters as trees of ``ParamSpec`` (shape, dtype,
+logical axes, initializer). From one template we derive:
+
+  * ``abstract_params``  -- ShapeDtypeStruct tree (dry-run, no allocation)
+  * ``init_params``      -- materialized arrays (smoke tests / examples)
+  * ``logical_axes``     -- logical-axis tree consumed by repro.sharding
+
+Logical axis vocabulary (mapped to mesh axes in ``repro.sharding.rules``):
+  "layers"  -- stacked layer dim (scan dim; never mesh-sharded)
+  "vocab"   -- vocabulary dim
+  "embed"   -- d_model dim
+  "heads"   -- attention head dim (q heads * head_dim fused)
+  "kv_heads"-- kv head dim
+  "ffn"     -- FFN hidden dim
+  "experts" -- MoE expert dim
+  "ssm_in"  -- SSM inner channel dim
+  None      -- replicated / unsharded dim
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ParamSpec(NamedTuple):
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"       # normal | zeros | ones | scaled | ssm_a | embed
+    dtype: Optional[str] = None  # None -> model default
+
+    def with_layers(self, num_layers: int) -> "ParamSpec":
+        return ParamSpec(
+            (num_layers,) + self.shape,
+            ("layers",) + self.axes,
+            self.init,
+            self.dtype,
+        )
+
+
+def is_spec(x: Any) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_map_specs(fn: Callable[[ParamSpec], Any], template):
+    return jax.tree_util.tree_map(fn, template, is_leaf=is_spec)
+
+
+def abstract_params(template, default_dtype: str = "bfloat16"):
+    def to_sds(s: ParamSpec):
+        dt = jnp.dtype(s.dtype or default_dtype)
+        return jax.ShapeDtypeStruct(s.shape, dt)
+
+    return tree_map_specs(to_sds, template)
+
+
+def logical_axes(template):
+    return tree_map_specs(lambda s: s.axes, template)
+
+
+def _fan_in(shape: Tuple[int, ...]) -> int:
+    if len(shape) == 1:
+        return shape[0]
+    # treat all but the last dim as fan-in (matches our [in, out] convention)
+    return int(np.prod(shape[:-1]))
+
+
+def init_params(template, rng: jax.Array, default_dtype: str = "bfloat16"):
+    """Materialize the template. Deterministic given ``rng``.
+
+    Each leaf gets an independent key derived from its tree path, so adding
+    parameters does not perturb the init of existing ones.
+    """
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(
+        template, is_leaf=is_spec
+    )[0]
+    treedef = jax.tree_util.tree_structure(template, is_leaf=is_spec)
+
+    out = []
+    for path, spec in leaves_with_paths:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        key = jax.random.fold_in(rng, int(abs(hash(name)) % (2**31)))
+        dt = jnp.dtype(spec.dtype or default_dtype)
+        if spec.init == "zeros":
+            arr = jnp.zeros(spec.shape, dt)
+        elif spec.init == "ones":
+            arr = jnp.ones(spec.shape, dt)
+        elif spec.init == "ssm_a":
+            # A_log init: log of uniform [1, 16] (mamba2 convention)
+            u = jax.random.uniform(key, spec.shape, jnp.float32, 1.0, 16.0)
+            arr = jnp.log(u).astype(dt)
+        elif spec.init == "embed":
+            arr = (jax.random.normal(key, spec.shape, jnp.float32) * 0.02).astype(dt)
+        else:  # normal / scaled: truncated-normal fan-in scaled
+            scale = 1.0 / math.sqrt(max(1, _fan_in(spec.shape)))
+            arr = (
+                jax.random.truncated_normal(key, -2.0, 2.0, spec.shape, jnp.float32)
+                * scale
+            ).astype(dt)
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def param_bytes(template, default_dtype: str = "bfloat16") -> int:
+    total = 0
+    for s in jax.tree_util.tree_leaves(template, is_leaf=is_spec):
+        dt = jnp.dtype(s.dtype or default_dtype)
+        total += int(np.prod(s.shape)) * dt.itemsize
+    return total
+
+
+def param_count(template) -> int:
+    return sum(
+        int(np.prod(s.shape))
+        for s in jax.tree_util.tree_leaves(template, is_leaf=is_spec)
+    )

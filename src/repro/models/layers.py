@@ -1,0 +1,135 @@
+"""Primitive layers: norms, MLPs, embeddings, rotary embeddings.
+
+All computations that are numerically sensitive (norm statistics, softmax)
+run in float32 regardless of the parameter/activation dtype.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.constraints import shard_act
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(
+    x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5
+) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array) -> jax.Array:
+    """SwiGLU MLP: down( silu(x @ gate) * (x @ up) )."""
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    if g.ndim == 3:
+        g, u = shard_act(g, "bsf"), shard_act(u, "bsf")
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, w_down)
+
+
+def gelu_mlp(
+    x: jax.Array,
+    w_in: jax.Array,
+    b_in: jax.Array,
+    w_out: jax.Array,
+    b_out: jax.Array,
+) -> jax.Array:
+    h = jnp.einsum("...d,df->...f", x, w_in) + b_in
+    h = jax.nn.gelu(h, approximate=True)
+    return jnp.einsum("...f,fd->...d", h, w_out) + b_out
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies [head_dim//2], float32."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotate ``x`` [..., seq, heads, head_dim] by ``positions`` [..., seq].
+
+    Uses the split-half convention (rotate_half), matching llama.
+    """
+    dt = x.dtype
+    half = x.shape[-1] // 2
+    inv = rope_freqs(x.shape[-1], theta)  # [half]
+    ang = positions.astype(jnp.float32)[..., None] * inv  # [..., seq, half]
+    cos = jnp.cos(ang)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dt)
+
+
+def sinusoidal_positions(length: int, d_model: int) -> jax.Array:
+    """Classic transformer sinusoidal embeddings [length, d_model], f32."""
+    pos = jnp.arange(length, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d_model // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2.0 * dim / d_model)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Vocabulary / loss
+# ---------------------------------------------------------------------------
+def embed_tokens(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def chunked_softmax_xent(
+    h: jax.Array,
+    lm_head: jax.Array,
+    targets: jax.Array,
+    mask: Optional[jax.Array] = None,
+    chunk: int = 512,
+) -> jax.Array:
+    """Cross-entropy without materializing [B, S, V] logits.
+
+    Scans over sequence chunks; per-chunk logits are [B, chunk, V], which is
+    bounded, and the sum-loss is accumulated in f32. ``mask`` (if given) is
+    [B, S] with 1.0 for counted tokens.
+
+    Returns mean loss over counted tokens.
+    """
+    b, s, d = h.shape
+    assert s % chunk == 0, f"seq {s} not divisible by loss chunk {chunk}"
+    n_chunks = s // chunk
+    hs = h.reshape(b, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    ts = targets.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+    if mask is None:
+        ms = jnp.ones((n_chunks, b, chunk), jnp.float32)
+    else:
+        ms = mask.reshape(b, n_chunks, chunk).transpose(1, 0, 2).astype(jnp.float32)
+
+    def body(carry, xs):
+        loss_sum, count = carry
+        hc, tc, mc = xs
+        logits = jnp.einsum("bsd,dv->bsv", hc, lm_head).astype(jnp.float32)
+        logits = shard_act(logits, "bsv")
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        loss_sum = loss_sum + jnp.sum((logz - gold) * mc)
+        count = count + jnp.sum(mc)
+        return (loss_sum, count), None
+
+    (loss_sum, count), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.float32(0.0)), (hs, ts, ms)
+    )
+    return loss_sum / jnp.maximum(count, 1.0)

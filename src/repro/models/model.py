@@ -1,0 +1,82 @@
+"""Unified model API: one factory for every architecture family.
+
+``build(cfg)`` returns a ``ModelApi`` whose members are pure functions
+suitable for jit/pjit.  Parameters are never materialized unless
+``init_params`` is called -- the dry-run uses ``abstract_params`` only.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import common, encdec, transformer
+from repro.models.common import ParamSpec
+
+
+@dataclass(frozen=True)
+class ModelApi:
+    cfg: ModelConfig
+    param_template: Dict[str, Any]
+    train_loss: Callable
+    prefill: Callable
+    decode_step: Callable
+    cache_spec: Callable  # (batch, cache_len) -> ParamSpec tree
+
+    def abstract_params(self):
+        return common.abstract_params(self.param_template, self.cfg.dtype)
+
+    def init_params(self, rng: jax.Array):
+        return common.init_params(self.param_template, rng, self.cfg.dtype)
+
+    def logical_axes(self):
+        return common.logical_axes(self.param_template)
+
+    def abstract_cache(self, batch: int, cache_len: int):
+        return common.abstract_params(self.cache_spec(batch, cache_len), self.cfg.dtype)
+
+    def cache_logical_axes(self, batch: int, cache_len: int):
+        return common.logical_axes(self.cache_spec(batch, cache_len))
+
+    def init_cache(self, batch: int, cache_len: int):
+        if self.cfg.family == "encdec":
+            spec = self.cache_spec(batch, cache_len)
+
+            def mk(s: ParamSpec):
+                dt = jnp.dtype(s.dtype or self.cfg.dtype)
+                if s.dtype == "int32":
+                    fill = -1 if len(s.shape) >= 3 else 0
+                    return jnp.full(s.shape, fill, dt)
+                return jnp.zeros(s.shape, dt)
+
+            return jax.tree_util.tree_map(mk, spec, is_leaf=common.is_spec)
+        return transformer.empty_cache(self.cfg, batch, cache_len)
+
+    def param_count(self) -> int:
+        return common.param_count(self.param_template)
+
+    def param_bytes(self) -> int:
+        return common.param_bytes(self.param_template, self.cfg.dtype)
+
+
+def build(cfg: ModelConfig) -> ModelApi:
+    if cfg.family == "encdec":
+        return ModelApi(
+            cfg=cfg,
+            param_template=encdec.param_template(cfg),
+            train_loss=lambda p, b, **kw: encdec.train_loss(p, b, cfg, **kw),
+            prefill=lambda p, t, pl, **kw: encdec.prefill(p, t, pl, cfg, **kw),
+            decode_step=lambda p, c, t, **kw: encdec.decode_step(p, c, t, cfg, **kw),
+            cache_spec=lambda batch, cache_len: encdec.cache_spec(cfg, batch, cache_len),
+        )
+    return ModelApi(
+        cfg=cfg,
+        param_template=transformer.param_template(cfg),
+        train_loss=lambda p, b, **kw: transformer.train_loss(p, b, cfg, **kw),
+        prefill=lambda p, t, pl, **kw: transformer.prefill(p, t, pl, cfg, **kw),
+        decode_step=lambda p, c, t, **kw: transformer.decode_step(p, c, t, cfg, **kw),
+        cache_spec=lambda batch, cache_len: transformer.cache_spec(cfg, batch, cache_len),
+    )

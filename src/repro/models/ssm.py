@@ -1,0 +1,257 @@
+"""Mamba2 (SSD, state-space duality) block: chunked train/prefill + O(1) decode.
+
+Follows the ssd_minimal discrete form of Dao & Gu (arXiv:2405.21060):
+within a chunk the recurrence is evaluated in its quadratic "attention-like"
+dual form (MXU-friendly 128x128 matmuls); across chunks a linear ``lax.scan``
+carries the [H, P, N] state, so prefill is O(S) memory and decode is O(1) in
+context length -- which is why ``long_500k`` runs for the SSM/hybrid archs.
+
+The Pallas TPU kernel for the intra-chunk dual form lives in
+``repro.kernels.ssd_scan`` and is validated against ``ssd_chunked`` here.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.common import ParamSpec
+from repro.models.layers import rms_norm
+from repro.sharding.constraints import shard_act
+
+NEG_INF = -1e30
+
+
+def param_template(cfg: ModelConfig) -> Dict[str, ParamSpec]:
+    d, d_in = cfg.d_model, cfg.d_inner
+    h, n, wc = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_conv_dim
+    conv_ch = d_in + 2 * n  # x, B, C channels (ngroups = 1)
+    return {
+        "in_proj": ParamSpec((d, 2 * d_in + 2 * n + h), ("embed", "ssm_in")),
+        "conv_w": ParamSpec((wc, conv_ch), (None, "ssm_in")),
+        "conv_b": ParamSpec((conv_ch,), ("ssm_in",), init="zeros"),
+        "A_log": ParamSpec((h,), (None,), init="ssm_a", dtype="float32"),
+        "D": ParamSpec((h,), (None,), init="ones", dtype="float32"),
+        "dt_bias": ParamSpec((h,), (None,), init="zeros", dtype="float32"),
+        "norm": ParamSpec((d_in,), ("ssm_in",), init="ones"),
+        "out_proj": ParamSpec((d_in, d), ("ssm_in", "embed")),
+    }
+
+
+class SSMState(NamedTuple):
+    """Decode-time recurrent state (per layer stack).
+
+    h          [L, B, H, P, N]  SSD state
+    conv_buf   [L, B, wc-1, conv_ch]  trailing conv inputs
+    """
+
+    h: jax.Array
+    conv_buf: jax.Array
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a [..., l] -> [..., l, l] with out[i, j] = sum_{j<k<=i} a_k (j<=i)."""
+    l = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(mask, diff, NEG_INF)
+
+
+def ssd_chunked(
+    x: jax.Array,      # [B, S, H, P]  (already dt-weighted: x * dt)
+    a: jax.Array,      # [B, S, H]     log-decay per step (dt * A, negative)
+    b: jax.Array,      # [B, S, N]     input matrix (ngroups=1)
+    c: jax.Array,      # [B, S, N]     output matrix
+    chunk: int,
+    h0: jax.Array = None,  # [B, H, P, N] initial state
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD. Returns (y [B, S, H, P], final state [B, H, P, N]).
+
+    The intra-chunk quadratic dual form is evaluated INSIDE the
+    inter-chunk ``lax.scan``, so the working set is one chunk's
+    [B, H, l, l] decay/score tensors rather than all ``nc`` chunks at
+    once - the O(nc) memory reduction this buys is the dominant term of
+    the hymba/mamba2 train cells (EXPERIMENTS.md SSPerf iteration 2; the
+    Pallas ssd_scan kernel is the same structure with VMEM-resident
+    tiles).
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    l = chunk
+    # chunk-major scan inputs
+    xc = jnp.moveaxis(x.reshape(bsz, nc, l, h, p), 1, 0)   # [nc, B, l, H, P]
+    ac = jnp.moveaxis(a.reshape(bsz, nc, l, h), 1, 0)      # [nc, B, l, H]
+    bc = jnp.moveaxis(b.reshape(bsz, nc, l, n), 1, 0)      # [nc, B, l, N]
+    cc = jnp.moveaxis(c.reshape(bsz, nc, l, n), 1, 0)
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    tri = jnp.tril(jnp.ones((l, l), bool))
+
+    def step(h_prev, inp):
+        xl, al, bl, cl = inp
+        xl = xl.astype(jnp.float32)                        # [B, l, H, P]
+        af = al.astype(jnp.float32).transpose(0, 2, 1)     # [B, H, l]
+        bf = bl.astype(jnp.float32)                        # [B, l, N]
+        cf = cl.astype(jnp.float32)
+        cum = jnp.cumsum(af, axis=-1)                      # [B, H, l]
+        seg = cum[..., :, None] - cum[..., None, :]
+        L = jnp.exp(jnp.where(tri, seg, NEG_INF))          # [B, H, l, l]
+        scores = jnp.einsum("bln,bsn->bls", cf, bf)        # [B, l, l]
+        y_diag = jnp.einsum("bhls,bls,bshp->blhp", L, scores, xl)
+        y_off = jnp.einsum(
+            "bln,bhpn,bhl->blhp", cf, h_prev, jnp.exp(cum)
+        )
+        decay_states = jnp.exp(cum[..., -1:] - cum)        # [B, H, l]
+        state = jnp.einsum("bln,bhl,blhp->bhpn", bf, decay_states, xl)
+        h_new = h_prev * jnp.exp(cum[..., -1])[..., None, None] + state
+        return h_new, (y_diag + y_off).astype(x.dtype)
+
+    final, ys = jax.lax.scan(step, h0.astype(jnp.float32), (xc, ac, bc, cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, h, p)
+    return y, final
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over [B, S, C] with kernel [wc, C]."""
+    wc = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (wc - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    s = x.shape[1]
+    for i in range(wc):
+        out = out + pad[:, i : i + s].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    d_in, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in : 2 * d_in + 2 * n]
+    dt = zxbcdt[..., 2 * d_in + 2 * n :]
+    return z, xbc, dt
+
+
+def apply_ssm(
+    x_in: jax.Array,
+    p: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    prompt_lens: jax.Array = None,
+) -> Tuple[jax.Array, "SSMState"]:
+    """Full-sequence SSM block body (train/prefill). x_in [B, S, D].
+
+    Returns (y [B, S, D], final per-layer state) -- the state feeds decode.
+    ``prompt_lens`` [B] (prefill with right-padding): positions >= the
+    prompt length get dt = 0, so x*dt = 0 and log-decay = 0 -- the state
+    passes through padding unchanged and the final state equals the state
+    after exactly ``prompt_lens`` real tokens.
+    """
+    bsz, s, _ = x_in.shape
+    d_in, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ph = cfg.ssm_head_dim
+    wc = cfg.ssm_conv_dim
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x_in, p["in_proj"])
+    z, xbc_raw, dt_raw = _split_proj(cfg, zxbcdt)
+
+    xbc = jax.nn.silu(_causal_conv(xbc_raw, p["conv_w"], p["conv_b"]))
+    xs = xbc[..., :d_in].reshape(bsz, s, h, ph)
+    b_mat = xbc[..., d_in : d_in + n]
+    c_mat = xbc[..., d_in + n :]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+    if prompt_lens is not None:
+        valid = (jnp.arange(s)[None, :] < prompt_lens[:, None]).astype(jnp.float32)
+        dt = dt * valid[..., None]
+    a_neg = -jnp.exp(p["A_log"])  # [H]
+    log_decay = dt * a_neg  # [B, S, H]
+
+    # pad S to a chunk multiple: zero x*dt and zero log-decay (decay=1)
+    # pass the state through padding untouched.
+    # NOTE: a "bshp" P-dim sharding constraint here was tried and REVERTED:
+    # it added resharding collectives without reducing HBM traffic
+    # (EXPERIMENTS.md SSPerf, hymba iteration 3 - refuted).
+    pad = (-s) % cfg.ssm_chunk
+    xdt = xs * dt[..., None].astype(xs.dtype)
+    ld, bm, cm = log_decay, b_mat, c_mat
+    if pad:
+        zpad = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        xdt, ld, bm, cm = zpad(xdt), zpad(ld), zpad(bm), zpad(cm)
+    y, final = ssd_chunked(xdt, ld, bm, cm, min(cfg.ssm_chunk, xdt.shape[1]))
+    if pad:
+        y = y[:, :s]
+    y = y + (p["D"][:, None] * xs.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(bsz, s, d_in)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+
+    if prompt_lens is None:
+        if s >= wc - 1:
+            conv_buf = xbc_raw[:, s - (wc - 1) :]
+        else:
+            conv_buf = jnp.pad(xbc_raw, ((0, 0), (wc - 1 - s, 0), (0, 0)))
+    else:
+        # per-row trailing window: raw conv inputs at plen-(wc-1) .. plen-1
+        idx = prompt_lens[:, None] - (wc - 1) + jnp.arange(wc - 1)[None, :]
+        ok = idx >= 0
+        idx = jnp.clip(idx, 0, s - 1)
+        conv_buf = jnp.take_along_axis(xbc_raw, idx[..., None], axis=1)
+        conv_buf = jnp.where(ok[..., None], conv_buf, 0)
+    return out, SSMState(h=final, conv_buf=conv_buf)
+
+
+def apply_ssm_decode(
+    x_in: jax.Array,           # [B, D] single token
+    state: SSMState,           # single-layer state: h [B,H,P,N], conv [B,wc-1,C]
+    p: Dict[str, jax.Array],
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, SSMState]:
+    d_in, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    ph = cfg.ssm_head_dim
+    wc = cfg.ssm_conv_dim
+
+    zxbcdt = jnp.einsum("bd,de->be", x_in, p["in_proj"])
+    z, xbc_raw, dt_raw = _split_proj(cfg, zxbcdt)
+
+    # conv over [state..., new]
+    hist = jnp.concatenate([state.conv_buf, xbc_raw[:, None]], axis=1)  # [B,wc,C]
+    conv = jnp.einsum("bwc,wc->bc", hist.astype(jnp.float32), p["conv_w"].astype(jnp.float32))
+    xbc = jax.nn.silu(conv + p["conv_b"].astype(jnp.float32)).astype(x_in.dtype)
+
+    xs = xbc[..., :d_in].reshape(-1, h, ph)
+    b_mat = xbc[..., d_in : d_in + n].astype(jnp.float32)
+    c_mat = xbc[..., d_in + n :].astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B, H]
+    decay = jnp.exp(dt * -jnp.exp(p["A_log"]))  # [B, H]
+
+    dx = xs.astype(jnp.float32) * dt[..., None]  # [B, H, P]
+    h_new = state.h * decay[..., None, None] + jnp.einsum("bhp,bn->bhpn", dx, b_mat)
+    y = jnp.einsum("bhpn,bn->bhp", h_new, c_mat)
+    y = y + p["D"][:, None] * xs.astype(jnp.float32)
+    y = y.reshape(-1, d_in).astype(x_in.dtype)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y, p["out_proj"])
+
+    conv_buf = jnp.concatenate([state.conv_buf[:, 1:], xbc_raw[:, None]], axis=1)
+    return out, SSMState(h=h_new, conv_buf=conv_buf)
+
+
+def init_state(cfg: ModelConfig, batch: int, num_layers: int = None) -> SSMState:
+    """Zero decode state; if num_layers given, leaves are layer-stacked."""
+    h = (cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state)
+    cbuf = (cfg.ssm_conv_dim - 1, cfg.d_inner + 2 * cfg.ssm_state)
+    if num_layers is None:
+        return SSMState(
+            h=jnp.zeros((batch,) + h, jnp.float32),
+            conv_buf=jnp.zeros((batch,) + cbuf, jnp.bfloat16),
+        )
+    return SSMState(
+        h=jnp.zeros((num_layers, batch) + h, jnp.float32),
+        conv_buf=jnp.zeros((num_layers, batch) + cbuf, jnp.bfloat16),
+    )

@@ -1,0 +1,8 @@
+"""Serving substrate: step builders, continuous batching, generation."""
+from repro.serving.engine import (
+    ServeSteps,
+    build_serve_steps,
+    jit_serve_steps,
+)
+
+__all__ = ["ServeSteps", "build_serve_steps", "jit_serve_steps"]

@@ -1,0 +1,18 @@
+"""Logical-axis -> mesh-axis sharding rules and NamedSharding derivation."""
+from repro.sharding.rules import (
+    AxisRules,
+    batch_spec,
+    cache_shardings,
+    default_rules,
+    param_shardings,
+    spec_for_axes,
+)
+
+__all__ = [
+    "AxisRules",
+    "batch_spec",
+    "cache_shardings",
+    "default_rules",
+    "param_shardings",
+    "spec_for_axes",
+]

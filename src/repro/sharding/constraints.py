@@ -1,0 +1,90 @@
+"""Opt-in activation sharding constraints (beyond-paper optimization).
+
+The baseline lets GSPMD propagate shardings from parameters/inputs alone.
+That leaves big gaps: the HLO analysis (EXPERIMENTS.md SSPerf) shows XLA
+*replicating the attention-head dimension* inside the layer scan and
+all-reducing gradients in pre-contraction [B, S, F] form - 10-30x
+compute/byte waste. These helpers pin the intent:
+
+  * activations carry batch over the data axes;
+  * the head / ffn / vocab dimension of intermediates carries the model
+    axis (when divisible);
+
+Constraints are no-ops unless a ``activation_constraints(mesh, plan)``
+context is active at trace time, so CPU tests and the paper-faithful
+baseline lower unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar(
+    "activation_constraints", default=None
+)
+
+
+@contextlib.contextmanager
+def activation_constraints(mesh: Mesh, plan):
+    token = _CTX.set({
+        "mesh": mesh,
+        "data": tuple(plan.data_axes),
+        "model": tuple(plan.tensor_axes),
+    })
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def _axes_for(ctx, names: Tuple[str, ...], dim: int):
+    names = tuple(a for a in names if a in ctx["mesh"].axis_names)
+    if not names:
+        return None
+    prod = int(np.prod([ctx["mesh"].shape[a] for a in names]))
+    if prod <= 1 or dim % prod != 0:
+        return None
+    return names if len(names) > 1 else names[0]
+
+
+def shard_act(x: jax.Array, kind: str) -> jax.Array:
+    """Constrain one activation. kinds:
+    bsd   [B,S,D]    batch->data
+    bshd  [B,S,H,dh] batch->data, heads->model
+    bsf   [B,S,F]    batch->data, features->model
+    bsv   [B,S,V]    batch->data, vocab->model
+    bd    [B,D]      batch->data
+    bhd   [B,H,dh]   batch->data, heads->model
+    """
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    d, m = ctx["data"], ctx["model"]
+    if kind == "bsd":
+        spec = P(_axes_for(ctx, d, x.shape[0]))
+    elif kind in ("bshd",):
+        spec = P(_axes_for(ctx, d, x.shape[0]), None,
+                 _axes_for(ctx, m, x.shape[2]), None)
+    elif kind in ("bsf", "bsv"):
+        spec = P(_axes_for(ctx, d, x.shape[0]), None,
+                 _axes_for(ctx, m, x.shape[2]))
+    elif kind == "bd":
+        spec = P(_axes_for(ctx, d, x.shape[0]))
+    elif kind == "bhd":
+        spec = P(_axes_for(ctx, d, x.shape[0]), _axes_for(ctx, m, x.shape[1]))
+    elif kind == "bshp":
+        # SSD inputs [B, S, H, P]: SSM head counts rarely divide the model
+        # axis, but the head_dim P does - sharding P shards every SSD
+        # einsum (state, y_diag, y_off) without touching the recurrence
+        spec = P(_axes_for(ctx, d, x.shape[0]), None, None,
+                 _axes_for(ctx, m, x.shape[3]))
+    else:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx["mesh"], spec)
+    )

@@ -1,0 +1,156 @@
+"""Logical-axis -> mesh-axis mapping.
+
+Parameter/cache templates carry *logical* axis names (see
+``repro.models.common``). This module turns them into concrete
+``PartitionSpec``s for a given mesh and ``ParallelPlan``.
+
+Design rules (all enforced mechanically, so every (arch x shape x mesh)
+cell lowers without hand-tuning):
+
+  * Each logical axis has an ordered list of *candidate* mesh-axis groups.
+  * A candidate is taken only if (a) none of its mesh axes is already used
+    by another dim of the same tensor, and (b) the dim size is divisible by
+    the product of the candidate's mesh-axis sizes. Otherwise we fall
+    through to the next candidate, and finally to replication.
+  * Candidates are filtered to axes present in the mesh, so one rule set
+    serves both the single-pod ("data","model") and multi-pod
+    ("pod","data","model") meshes.
+
+The fallback-to-replication rule is what makes e.g. GQA caches with
+kv_heads=8 on a 16-way model axis work: the ``cache_seq`` dim (which is
+always a large power of two) takes the model axis instead, turning decode
+attention into a flash-decode-style partial-softmax + all-reduce - the
+TPU-native analogue of sharding over heads.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig
+from repro.config.parallel import ParallelPlan
+from repro.models.common import is_spec
+
+AxisRules = Dict[Optional[str], Tuple[Tuple[str, ...], ...]]
+
+
+def default_rules(plan: ParallelPlan, kind: str = "train") -> AxisRules:
+    """Build the logical->mesh candidate table.
+
+    kind="train": ZeRO-3 FSDP (embed dim sharded over fsdp axes; weights are
+    all-gathered per layer inside the scan) x TP over the model axis.
+
+    kind="serve": weights replicated over data axes (no per-step gather on
+    the latency path), TP over the model axis; MoE expert FFN dims fall
+    through to the data axes when the model axis is taken by the expert dim
+    (keeps 235B-scale expert stacks under per-chip HBM).
+    """
+    t = tuple(plan.tensor_axes)
+    d = tuple(plan.data_axes)
+    f = tuple(plan.fsdp_axes)
+    e = tuple(plan.expert_axes)
+    if kind == "train":
+        embed = (f,) if plan.zero3 else ()
+        ffn: Tuple[Tuple[str, ...], ...] = (t, f)
+        vocab = (t,)
+    else:  # serve
+        embed = ()
+        ffn = (t, d)
+        vocab = (t,)
+    return {
+        None: (),
+        "layers": (),
+        "vocab": vocab,
+        "embed": embed,
+        "heads": (t,),
+        "kv_heads": (t,),
+        "ffn": ffn,
+        "experts": (e,),
+        "ssm_in": (t,),
+        "ssm_state": (t,),
+        "batch": (d,),
+        "cache_seq": (t,),
+        "window": (t,),
+    }
+
+
+def spec_for_axes(
+    shape: Sequence[int],
+    axes: Sequence[Optional[str]],
+    rules: AxisRules,
+    mesh: Mesh,
+) -> P:
+    """Assign mesh axes to one tensor's dims (first-fit with divisibility)."""
+    used: set = set()
+    entries: list = []
+    for size, name in zip(shape, axes):
+        assigned = None
+        for cand in rules.get(name, ()):
+            cand = tuple(a for a in cand if a in mesh.axis_names and a not in used)
+            if not cand:
+                continue
+            prod = int(np.prod([mesh.shape[a] for a in cand]))
+            if prod > 1 and size % prod == 0:
+                assigned = cand if len(cand) > 1 else cand[0]
+                used.update(cand)
+                break
+        entries.append(assigned)
+    # strip trailing Nones for tidier HLO annotations
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def _tree_shardings(template, rules: AxisRules, mesh: Mesh):
+    """ParamSpec tree -> NamedSharding tree."""
+
+    def one(s):
+        return NamedSharding(mesh, spec_for_axes(s.shape, s.axes, rules, mesh))
+
+    return jax.tree_util.tree_map(one, template, is_leaf=is_spec)
+
+
+def param_shardings(template, mesh: Mesh, plan: ParallelPlan, kind: str = "train"):
+    return _tree_shardings(template, default_rules(plan, kind), mesh)
+
+
+def cache_shardings(cache_template, mesh: Mesh, plan: ParallelPlan):
+    return _tree_shardings(cache_template, default_rules(plan, "serve"), mesh)
+
+
+def batch_spec(plan: ParallelPlan, mesh: Mesh, batch_size: int) -> P:
+    """PartitionSpec for [B, ...] host batches (tokens/targets/frames)."""
+    axes = tuple(a for a in plan.data_axes if a in mesh.axis_names)
+    if not axes:
+        return P()
+    prod = int(np.prod([mesh.shape[a] for a in axes]))
+    if batch_size % prod != 0:
+        # shed trailing axes until divisible (e.g. global_batch=1 long-ctx)
+        while axes:
+            prod = int(np.prod([mesh.shape[a] for a in axes]))
+            if batch_size % prod == 0:
+                break
+            axes = axes[:-1]
+        if not axes:
+            return P()
+    return P(axes if len(axes) > 1 else axes[0])
+
+
+def batch_sharding(plan: ParallelPlan, mesh: Mesh, batch_size: int) -> NamedSharding:
+    return NamedSharding(mesh, batch_spec(plan, mesh, batch_size))
+
+
+def tree_batch_shardings(abstract_batch, plan: ParallelPlan, mesh: Mesh):
+    """Shard every leaf of a batch tree over the data axes (dim 0)."""
+
+    def one(x):
+        return batch_sharding(plan, mesh, x.shape[0])
+
+    return jax.tree_util.tree_map(one, abstract_batch)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

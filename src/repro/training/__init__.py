@@ -1,0 +1,12 @@
+"""Training substrate: optimizer, step builder, checkpointing, data."""
+from repro.training.optimizer import AdamWState, adamw_init, adamw_update
+from repro.training.train_step import TrainState, build_train_step, make_train_state_specs
+
+__all__ = [
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "TrainState",
+    "build_train_step",
+    "make_train_state_specs",
+]

@@ -1,0 +1,101 @@
+"""int8 error-feedback gradient compression.
+
+Used in two places:
+
+  * **Grad-accum accumulator** - when ``grad_accum > 1``, per-microbatch
+    gradients are accumulated in int8 + per-tensor f32 scale with an
+    error-feedback residual, halving the HBM footprint and bandwidth of the
+    accumulator loop relative to an f32 buffer (the dominant memory-term
+    cost of large accumulation counts).
+
+  * **Cross-replica all-reduce** (``compress_psum``) - inside ``shard_map``
+    regions the gradient all-reduce over a (slow, cross-pod) axis can be
+    performed on the int8 payload: quantize -> psum(int8-as-int32) ->
+    dequantize, with the quantization error fed back into the next step's
+    gradient. This is the classic 1-bit-Adam-family trick adapted to int8.
+
+Error feedback guarantees the *time-averaged* gradient is unbiased: the
+residual e_t = g_t - dq(q(g_t + e_{t-1})) is added to the next gradient, so
+quantization error does not accumulate as bias (Karimireddy et al., 2019).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressedState(NamedTuple):
+    """Error-feedback residual tree (same structure/dtype=f32 as grads)."""
+
+    residual: Any
+
+
+def init_residual(params) -> CompressedState:
+    return CompressedState(
+        residual=jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+    )
+
+
+def quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization. Returns (q int8, scale f32)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf))
+    scale = jnp.maximum(amax / 127.0, 1e-30)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(g: jax.Array, residual: jax.Array):
+    """Quantize g+residual; return (q, scale, new_residual)."""
+    corrected = g.astype(jnp.float32) + residual
+    q, scale = quantize(corrected)
+    new_residual = corrected - dequantize(q, scale)
+    return q, scale, new_residual
+
+
+def tree_compress_with_feedback(grads, state: CompressedState):
+    """Apply error-feedback int8 compression leaf-wise.
+
+    Returns (dequantized grads tree, new CompressedState). The round trip
+    through int8 is what a cross-link transfer would carry; callers that
+    own a ``shard_map`` axis can psum the int8 payload instead.
+    """
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = jax.tree_util.tree_leaves(state.residual)
+    outs = [compress_with_feedback(g, r) for g, r in zip(flat_g, flat_r)]
+    dq = jax.tree_util.tree_unflatten(
+        treedef, [dequantize(q, s) for q, s, _ in outs]
+    )
+    new_res = jax.tree_util.tree_unflatten(treedef, [r for _, _, r in outs])
+    return dq, CompressedState(residual=new_res)
+
+
+def compress_psum(g: jax.Array, residual: jax.Array, axis_name: str):
+    """Error-feedback int8 all-reduce over ``axis_name`` (shard_map only).
+
+    The int8 payload is widened to int32 for the integer psum (TPU ICI
+    reduces int32 natively); the *communicated* volume in a real bucketed
+    implementation is the int8 tensor + one f32 scale. We also psum the
+    scale and use the max scale across replicas so dequantization is
+    consistent.
+    """
+    corrected = g.astype(jnp.float32) + residual
+    q, scale = quantize(corrected)
+    new_residual = corrected - dequantize(q, scale)
+    scale_max = jax.lax.pmax(scale, axis_name)
+    # requantize against the shared scale so the integer sum is coherent
+    q_shared = jnp.clip(
+        jnp.round(corrected / scale_max), -127, 127
+    ).astype(jnp.int32)
+    summed = jax.lax.psum(q_shared, axis_name)
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+    mean = summed.astype(jnp.float32) * scale_max / n
+    return mean, new_residual

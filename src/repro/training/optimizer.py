@@ -1,0 +1,102 @@
+"""AdamW with decoupled weight decay and f32 master moments.
+
+Implemented from scratch (no optax in the container). Moments are kept in
+float32 regardless of the parameter dtype; the update math runs in f32 and
+is cast back to the parameter dtype at the end, which is the standard
+mixed-precision recipe for bf16 training.
+
+State sharding: each moment tensor inherits the *parameter's* sharding, so
+under ZeRO-3 the optimizer state is fully sharded too (this is what makes
+95-layer x 8192-width training fit the 16 GB/chip budget).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array       # scalar int32
+    mu: Any               # first moment tree (f32)
+    nu: Any               # second moment tree (f32)
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree_util.tree_map(zeros, params),
+        nu=jax.tree_util.tree_map(zeros, params),
+    )
+
+
+def abstract_adamw_state(abstract_params) -> AdamWState:
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return AdamWState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        mu=jax.tree_util.tree_map(f32, abstract_params),
+        nu=jax.tree_util.tree_map(f32, abstract_params),
+    )
+
+
+def _cosine_lr(step, base_lr, warmup, total):
+    warm = base_lr * (step + 1) / max(1, warmup)
+    prog = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+    cos = base_lr * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    *,
+    lr: float = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    warmup_steps: int = 100,
+    total_steps: int = 10000,
+    grad_clip: float = 1.0,
+):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state.step
+    lr_t = _cosine_lr(step.astype(jnp.float32), lr, warmup_steps, total_steps)
+
+    # global-norm clip in f32
+    sq = sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree_util.tree_leaves(grads)
+    )
+    gnorm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - b1**t
+    bc2 = 1.0 - b2**t
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32) * scale
+        m2 = b1 * m + (1.0 - b1) * gf
+        v2 = b2 * v + (1.0 - b2) * jnp.square(gf)
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        step_ = mhat / (jnp.sqrt(vhat) + eps)
+        # decoupled weight decay on matrices only (ndim >= 2)
+        wd = weight_decay if p.ndim >= 2 else 0.0
+        new_p = p.astype(jnp.float32) - lr_t * (step_ + wd * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), m2, v2
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state.mu)
+    flat_v = jax.tree_util.tree_leaves(state.nu)
+    outs = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    new_mu = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    new_nu = jax.tree_util.tree_unflatten(treedef, [o[2] for o in outs])
+    metrics = {"grad_norm": gnorm, "lr": lr_t}
+    return new_params, AdamWState(step + 1, new_mu, new_nu), metrics

@@ -1,0 +1,181 @@
+"""Train-step builder: value_and_grad + AdamW with FSDP/TP shardings.
+
+``build_train_step`` returns a pure ``step(state, batch) -> (state, metrics)``
+plus the NamedSharding trees for state and batch, ready for
+``jax.jit(step, in_shardings=..., out_shardings=..., donate_argnums=0)``.
+
+Scale features folded in:
+  * remat policy from the ParallelPlan ("none" | "full" | "dots");
+  * gradient accumulation via ``lax.scan`` over microbatches (the scan keeps
+    HLO size O(1) in the accumulation count);
+  * optional int8 error-feedback gradient compression round-trip (models the
+    cross-pod link payload; see repro.training.compress);
+  * ZeRO-3: parameter/optimizer sharding comes from repro.sharding rules -
+    XLA inserts the per-layer all-gathers inside the layer scan, which is
+    where compute/communication overlap happens (latency hiding over the
+    scan's sequential dimension).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config.parallel import ParallelPlan
+from repro.models.model import ModelApi
+from repro.sharding.rules import (
+    batch_sharding,
+    param_shardings,
+    replicated,
+)
+from repro.training import compress as compress_lib
+from repro.training.optimizer import (
+    AdamWState,
+    abstract_adamw_state,
+    adamw_init,
+    adamw_update,
+)
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    residual: Any  # CompressedState or None (compression off)
+
+
+def init_train_state(api: ModelApi, rng: jax.Array, plan: ParallelPlan) -> TrainState:
+    params = api.init_params(rng)
+    residual = (
+        compress_lib.init_residual(params) if plan.compress_grads else None
+    )
+    return TrainState(params=params, opt=adamw_init(params), residual=residual)
+
+
+def abstract_train_state(api: ModelApi, plan: ParallelPlan) -> TrainState:
+    ap = api.abstract_params()
+    residual = None
+    if plan.compress_grads:
+        residual = compress_lib.CompressedState(
+            residual=jax.tree_util.tree_map(
+                lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), ap
+            )
+        )
+    return TrainState(params=ap, opt=abstract_adamw_state(ap), residual=residual)
+
+
+def make_train_state_specs(
+    api: ModelApi, plan: ParallelPlan, mesh: Mesh
+) -> Tuple[TrainState, TrainState]:
+    """Returns (abstract_state, state_shardings)."""
+    abstract = abstract_train_state(api, plan)
+    pshard = param_shardings(api.param_template, mesh, plan, kind="train")
+    f32_shard = pshard  # moments/residual inherit the parameter sharding
+    shardings = TrainState(
+        params=pshard,
+        opt=AdamWState(step=replicated(mesh), mu=f32_shard, nu=f32_shard),
+        residual=(
+            compress_lib.CompressedState(residual=f32_shard)
+            if plan.compress_grads
+            else None
+        ),
+    )
+    return abstract, shardings
+
+
+def _split_microbatches(batch, accum: int):
+    def split(x):
+        b = x.shape[0]
+        assert b % accum == 0, f"batch {b} not divisible by grad_accum {accum}"
+        return x.reshape(accum, b // accum, *x.shape[1:])
+
+    return jax.tree_util.tree_map(split, batch)
+
+
+def build_train_step(
+    api: ModelApi,
+    plan: ParallelPlan,
+    *,
+    lr: float = 3e-4,
+    weight_decay: float = 0.1,
+    warmup_steps: int = 100,
+    total_steps: int = 10000,
+) -> Callable:
+    """Pure (state, batch) -> (state, metrics). Not yet jitted."""
+
+    def loss_fn(params, mb):
+        return api.train_loss(params, mb, remat=plan.remat)
+
+    def step(state: TrainState, batch) -> Tuple[TrainState, dict]:
+        accum = max(1, plan.grad_accum)
+        if accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(state.params, batch)
+        else:
+            mbs = _split_microbatches(batch, accum)
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+
+            def body(carry, mb):
+                loss_acc, g_acc = carry
+                l, g = jax.value_and_grad(loss_fn)(state.params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g
+                )
+                return (loss_acc + l, g_acc), None
+
+            (loss, grads), _ = jax.lax.scan(body, (jnp.float32(0.0), zero), mbs)
+            loss = loss / accum
+            grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
+
+        residual = state.residual
+        if plan.compress_grads and residual is not None:
+            grads, residual = compress_lib.tree_compress_with_feedback(
+                grads, residual
+            )
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads,
+            state.opt,
+            state.params,
+            lr=lr,
+            weight_decay=weight_decay,
+            warmup_steps=warmup_steps,
+            total_steps=total_steps,
+        )
+        metrics = {"loss": loss.astype(jnp.float32), **opt_metrics}
+        return TrainState(new_params, new_opt, residual), metrics
+
+    return step
+
+
+def jit_train_step(
+    api: ModelApi,
+    plan: ParallelPlan,
+    mesh: Mesh,
+    abstract_batch,
+    **kw,
+):
+    """AOT-ready jitted train step with explicit in/out shardings.
+
+    Returns (jitted_fn, abstract_state, state_shardings, batch_shardings).
+    """
+    step = build_train_step(api, plan, **kw)
+    abstract, state_sh = make_train_state_specs(api, plan, mesh)
+    batch_sh = jax.tree_util.tree_map(
+        lambda x: batch_sharding(plan, mesh, x.shape[0]), abstract_batch
+    )
+    metrics_sh = {
+        "loss": replicated(mesh),
+        "grad_norm": replicated(mesh),
+        "lr": replicated(mesh),
+    }
+    fn = jax.jit(
+        step,
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, metrics_sh),
+        donate_argnums=(0,),
+    )
+    return fn, abstract, state_sh, batch_sh

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests must see the single real CPU device (the dry-run's 512-device
+# override is process-local to repro.launch.dryrun runs)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,81 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward /
+train step / prefill+decode on CPU, asserting shapes and finiteness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke
+from repro.config.shapes import SHAPES, applicability
+from repro.models.model import build
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _extras(cfg, b, s=8):
+    if cfg.family == "encdec":
+        return {"frames": jax.random.normal(RNG, (b, 16, cfg.d_model), jnp.bfloat16)}
+    if cfg.family == "vlm":
+        return {"patches": jax.random.normal(RNG, (b, 8, cfg.d_model), jnp.bfloat16)}
+    return {}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    cfg = get_config(arch)  # validates internally
+    assert cfg.num_layers > 0 and cfg.d_model > 0 and cfg.vocab_size > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_smoke(arch):
+    cfg = get_smoke(arch)
+    api = build(cfg)
+    params = api.init_params(RNG)
+    B, S = 2, 32
+    tokens = jax.random.randint(RNG, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "targets": tokens, **_extras(cfg, B)}
+    loss, grads = jax.jit(jax.value_and_grad(lambda p: api.train_loss(p, batch)))(params)
+    assert np.isfinite(float(loss)), f"{arch}: non-finite loss"
+    gnorm = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32)))) for g in jax.tree_util.tree_leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, f"{arch}: bad grads"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_smoke(arch):
+    cfg = get_smoke(arch)
+    api = build(cfg)
+    params = api.init_params(RNG)
+    B, S = 2, 32
+    tokens = jax.random.randint(RNG, (B, S), 0, cfg.vocab_size)
+    plens = jnp.array([S, S // 2], jnp.int32)
+    kw = _extras(cfg, B)
+    logits, cache = jax.jit(lambda p, t, pl: api.prefill(p, t, pl, **kw))(params, tokens, plens)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+    logits2, cache = jax.jit(api.decode_step)(params, cache, nxt)
+    assert logits2.shape == (B, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits2)))
+    assert int(cache["pos"][0]) == S + 1
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_long_context_applicability(arch):
+    """long_500k must be skipped exactly for pure full-attention archs."""
+    cfg = get_config(arch)
+    skip = applicability(cfg, SHAPES["long_500k"])
+    if cfg.family in ("ssm", "hybrid"):
+        assert skip is None, f"{arch} is sub-quadratic; long_500k must run"
+    else:
+        assert skip is not None, f"{arch} is full-attention; long_500k must skip"
+
+
+@pytest.mark.parametrize("arch", ["deepseek-67b", "qwen3-moe-235b-a22b", "mamba2-130m"])
+def test_param_count_matches_template(arch):
+    """Analytic param formula must agree with the template tree."""
+    cfg = get_config(arch)
+    api = build(cfg)
+    analytic = cfg.num_params()
+    template = api.param_count()
+    rel = abs(analytic - template) / template
+    assert rel < 0.01, f"{arch}: analytic {analytic:.3e} vs template {template:.3e}"

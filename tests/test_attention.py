@@ -1,0 +1,95 @@
+"""Attention math: chunked == naive; cache semantics; decode consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import (
+    cache_write_decode,
+    cache_write_prefill,
+    chunked_attention,
+    decode_attention,
+    naive_attention,
+)
+
+RNG = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("sq,sk,hq,hkv,dh,window", [
+    (64, 64, 4, 2, 16, 0),
+    (64, 64, 4, 4, 32, 0),
+    (128, 128, 8, 2, 16, 24),
+    (32, 96, 4, 1, 16, 0),
+])
+def test_chunked_matches_naive(sq, sk, hq, hkv, dh, window):
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (2, sq, hq, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (2, sk, hkv, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (2, sk, hkv, dh), jnp.float32)
+    got = chunked_attention(q, k, v, causal=True, window=window, q_block=16, kv_block=32)
+    want = naive_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=2e-3)
+
+
+@given(
+    sq=st.sampled_from([16, 32, 48]),
+    hkv=st.sampled_from([1, 2]),
+    g=st.sampled_from([1, 2, 4]),
+    dh=st.sampled_from([8, 16]),
+    qb=st.sampled_from([8, 16]),
+)
+@settings(max_examples=12, deadline=None)
+def test_chunked_matches_naive_property(sq, hkv, g, dh, qb):
+    hq = hkv * g
+    ks = jax.random.split(jax.random.PRNGKey(sq * 1000 + hq * 10 + dh), 3)
+    q = jax.random.normal(ks[0], (1, sq, hq, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (1, sq, hkv, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (1, sq, hkv, dh), jnp.float32)
+    got = chunked_attention(q, k, v, q_block=qb, kv_block=qb)
+    want = naive_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-3, atol=3e-3)
+
+
+def test_decode_matches_full_attention():
+    """Decoding token t against the cache == row t of full attention."""
+    b, s, hq, hkv, dh = 2, 24, 4, 2, 16
+    ks = jax.random.split(RNG, 3)
+    q_all = jax.random.normal(ks[0], (b, s, hq, dh), jnp.float32)
+    k_all = jax.random.normal(ks[1], (b, s, hkv, dh), jnp.float32)
+    v_all = jax.random.normal(ks[2], (b, s, hkv, dh), jnp.float32)
+    full = naive_attention(q_all, k_all, v_all, causal=True)
+
+    t = s - 1
+    slot = jnp.broadcast_to(jnp.arange(s)[None], (b, s)).astype(jnp.int32)
+    cur = jnp.full((b,), t, jnp.int32)
+    got = decode_attention(q_all[:, t], k_all, v_all, slot, cur)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(full[:, t]), rtol=2e-3, atol=2e-3)
+
+
+def test_ring_cache_write_decode():
+    """Ring writes land at pos % S and evict the oldest entry."""
+    b, s, hkv, dh = 1, 4, 1, 8
+    ck = jnp.zeros((b, s, hkv, dh))
+    cv = jnp.zeros((b, s, hkv, dh))
+    sp = jnp.full((b, s), -1, jnp.int32)
+    for pos in range(7):
+        k_new = jnp.full((b, hkv, dh), float(pos))
+        ck, cv, sp = cache_write_decode(ck, cv, sp, k_new, k_new, jnp.array([pos]), ring=True)
+    # positions 3..6 should be resident (7 writes into 4 slots)
+    assert sorted(np.asarray(sp[0]).tolist()) == [3, 4, 5, 6]
+    slot_of_6 = int(np.argmax(np.asarray(sp[0]) == 6))
+    assert float(ck[0, slot_of_6, 0, 0]) == 6.0
+
+
+def test_cache_write_prefill_overflow_keeps_tail():
+    b, s_new, s_cache, hkv, dh = 1, 8, 4, 1, 2
+    k_new = jnp.arange(s_new, dtype=jnp.float32)[None, :, None, None] * jnp.ones((b, s_new, hkv, dh))
+    ck = jnp.zeros((b, s_cache, hkv, dh))
+    sp = jnp.full((b, s_cache), -1, jnp.int32)
+    ck2, _, sp2 = cache_write_prefill(ck, ck, sp, k_new, k_new, ring=True)
+    assert sorted(np.asarray(sp2[0]).tolist()) == [4, 5, 6, 7]
+    # ring invariant: entry with absolute position p sits at slot p % S
+    for slot in range(s_cache):
+        p = int(sp2[0, slot])
+        assert p % s_cache == slot

@@ -1,0 +1,78 @@
+"""Composition IR: DSL construction, validation, fan-out semantics."""
+import pytest
+
+from repro.core.dag import Composition
+from repro.core.items import Item, group_by_key
+
+
+def _simple_comp():
+    c = Composition("c")
+    a = c.compute("a", "fa", inputs=("x",), outputs=("y",))
+    b = c.compute("b", "fb", inputs=("y",), outputs=("z",))
+    c.edge(a["y"], b["y"], "all")
+    c.bind_input("x", a["x"])
+    c.bind_output("z", b["z"])
+    return c
+
+
+def test_validate_ok():
+    _simple_comp().validate()
+
+
+def test_cycle_detected():
+    c = Composition("cyc")
+    a = c.compute("a", "fa", inputs=("x",), outputs=("y",))
+    b = c.compute("b", "fb", inputs=("y",), outputs=("z",))
+    c.edge(a["y"], b["y"])
+    c.edges.append(type(c.edges[0])(b["z"], a["x"], "all"))
+    c.bind_input("x", a["x"])
+    with pytest.raises(ValueError, match="cycle"):
+        c.validate()
+
+
+def test_unfed_input_rejected():
+    c = Composition("u")
+    c.compute("a", "fa", inputs=("x",), outputs=("y",))
+    with pytest.raises(ValueError, match="unfed"):
+        c.validate()
+
+
+def test_double_fan_in_rejected():
+    c = Composition("d")
+    a = c.compute("a", "fa", inputs=("x",), outputs=("y", "w"))
+    b = c.compute("b", "fb", inputs=("y", "w"), outputs=("z",))
+    c.edge(a["y"], b["y"], "each")
+    c.edge(a["w"], b["w"], "key")
+    c.bind_input("x", a["x"])
+    with pytest.raises(ValueError, match="each"):
+        c.validate()
+
+
+def test_bad_edge_set_rejected():
+    c = Composition("e")
+    a = c.compute("a", "fa", inputs=("x",), outputs=("y",))
+    b = c.compute("b", "fb", inputs=("y",), outputs=("z",))
+    with pytest.raises(ValueError, match="no output set"):
+        c.edge(a["x"], b["y"])  # x is an input, not an output
+
+
+def test_topo_order():
+    c = _simple_comp()
+    order = c.topo_order()
+    assert order.index("a") < order.index("b")
+
+
+def test_io_intensity():
+    c = Composition("i")
+    a = c.compute("a", "fa", inputs=("x",), outputs=("y",))
+    h = c.http("h")
+    c.edge(a["y"], h["requests"])
+    c.bind_input("x", a["x"])
+    assert c.io_intensity() == 0.5
+
+
+def test_group_by_key():
+    items = [Item(1, "a"), Item(2, "b"), Item(3, "a")]
+    g = group_by_key(items)
+    assert sorted(g) == ["a", "b"]
+    assert [i.data for i in g["a"]] == [1, 3]

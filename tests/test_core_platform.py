@@ -1,0 +1,205 @@
+"""Dandelion execution-system behaviour: dispatch, fan-out, engines,
+PI controller, memory accounting, failures, hedging, keep-warm baseline."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    ColdStartProfile,
+    Composition,
+    EventLoop,
+    FunctionRegistry,
+    HttpRequest,
+    HttpResponse,
+    Item,
+    KeepWarmPlatform,
+    SanitizationError,
+    ServiceRegistry,
+    WorkerNode,
+    sanitize,
+)
+from repro.core.cluster import ClusterManager
+
+
+def _registry():
+    reg = FunctionRegistry()
+    reg.register_function(
+        "double", lambda ins: {"out": [Item(i.data * 2, i.key) for i in ins["x"]]}
+    )
+    reg.register_function(
+        "fan", lambda ins: {"out": [Item(j, key=str(j)) for j in range(int(ins["x"][0].data))]}
+    )
+    reg.register_function(
+        "sum", lambda ins: {"out": [Item(sum(i.data for i in ins["x"]))]}
+    )
+    return reg
+
+
+def _chain_comp():
+    c = Composition("chain")
+    f = c.compute("fan", "fan", inputs=("x",), outputs=("out",))
+    d = c.compute("double", "double", inputs=("x",), outputs=("out",))
+    s = c.compute("sum", "sum", inputs=("x",), outputs=("out",))
+    c.edge(f["out"], d["x"], "each")
+    c.edge(d["out"], s["x"], "all")
+    c.bind_input("x", f["x"])
+    c.bind_output("result", s["out"])
+    c.validate()
+    return c
+
+
+def test_each_fanout_semantics():
+    """fan(4) -> double each -> sum == 2*(0+1+2+3) = 12."""
+    node = WorkerNode(_registry(), num_slots=4)
+    done = []
+    node.invoke(_chain_comp(), {"x": [Item(4)]}, on_done=done.append)
+    node.run()
+    assert len(done) == 1 and not done[0].failed
+    assert done[0].outputs["result"][0].data == 12
+
+
+def test_key_fanout_groups():
+    reg = _registry()
+    reg.register_function(
+        "emit", lambda ins: {"out": [Item(1, "a"), Item(2, "b"), Item(3, "a")]}
+    )
+    reg.register_function(
+        "count", lambda ins: {"out": [Item(len(ins["x"]))]}
+    )
+    c = Composition("k")
+    e = c.compute("emit", "emit", inputs=("x",), outputs=("out",))
+    g = c.compute("count", "count", inputs=("x",), outputs=("out",))
+    c.edge(e["out"], g["x"], "key")
+    c.bind_input("x", e["x"])
+    c.bind_output("counts", g["out"])
+    node = WorkerNode(reg, num_slots=2)
+    done = []
+    node.invoke(c, {"x": [Item(0)]}, on_done=done.append)
+    node.run()
+    counts = sorted(i.data for i in done[0].outputs["counts"])
+    assert counts == [1, 2]  # group 'a' has 2 items, group 'b' has 1
+
+
+def test_memory_contexts_freed_after_completion():
+    node = WorkerNode(_registry(), num_slots=2)
+    for i in range(5):
+        node.invoke(_chain_comp(), {"x": [Item(3)]})
+    node.run()
+    assert node.tracker.committed == 0
+    assert node.committed_peak_bytes > 0
+
+
+def test_http_communication_function_and_sanitization():
+    services = ServiceRegistry()
+    services.register("svc.local", lambda req: HttpResponse(200, b"ok" * 10))
+    reg = FunctionRegistry()
+    reg.register_function(
+        "mk", lambda ins: {"out": [Item(HttpRequest("GET", "http://svc.local/x"))]}
+    )
+    c = Composition("h")
+    m = c.compute("mk", "mk", inputs=("x",), outputs=("out",))
+    h = c.http("call")
+    c.edge(m["out"], h["requests"])
+    c.bind_input("x", m["x"])
+    c.bind_output("resp", h["responses"])
+    node = WorkerNode(reg, services, num_slots=2)
+    done = []
+    node.invoke(c, {"x": [Item(0)]}, on_done=done.append)
+    node.run()
+    assert done[0].outputs["resp"][0].data.status == 200
+
+    # sanitization rejects bad methods / hosts
+    with pytest.raises(SanitizationError):
+        sanitize("BREW http://svc.local/x HTTP/1.1")
+    with pytest.raises(SanitizationError):
+        sanitize(HttpRequest("GET", "http://bad_host!/x"))
+    assert sanitize("GET http://svc.local/x HTTP/1.1").method == "GET"
+
+
+def test_pi_controller_rebalances_under_compute_load():
+    """Flood with compute-heavy work: controller must convert comm slots."""
+    reg = FunctionRegistry()
+    reg.register_function("work", lambda ins: {"out": [Item(1)]})
+    c = Composition("w")
+    w = c.compute("work", "work", inputs=("x",), outputs=("out",))
+    c.bind_input("x", w["x"])
+    c.bind_output("r", w["out"])
+    profiles = {"work": ColdStartProfile(setup_s=1e-4, execute_s=20e-3, jitter_sigma=0.0)}
+    node = WorkerNode(
+        reg, num_slots=8, comm_slots=4,
+        profiles=profiles, controller_interval_s=0.03,
+    )
+    for i in range(400):
+        node.invoke_at(i * 0.001, c, {"x": [Item(i)]})
+    node.run()
+    peak_compute = max(h[1] for h in node.controller.history)
+    final = node.engines.counts()
+    assert peak_compute > 4, f"controller failed to re-assign under load: {peak_compute}"
+    assert final["comm"] >= 1  # never starves an engine type
+    # after the backlog drains, cores flow back toward communication
+    assert final["compute"] < peak_compute
+
+
+def test_node_failure_reexecutes_on_survivor():
+    reg = _registry()
+    profiles = {"fan": ColdStartProfile(1e-4, 1e-3, 0.0),
+                "double": ColdStartProfile(1e-4, 1e-3, 0.0),
+                "sum": ColdStartProfile(1e-4, 1e-3, 0.0)}
+    loop = EventLoop()
+    nodes = [
+        WorkerNode(reg, loop=loop, num_slots=2, profiles=profiles, name=f"n{i}")
+        for i in range(2)
+    ]
+    cluster = ClusterManager(nodes, loop)
+    done = []
+    for i in range(8):
+        cluster.invoke_at(i * 1e-4, _chain_comp(), {"x": [Item(3)]},
+                          on_done=done.append)
+    cluster.fail_node_at(5e-4, 0)
+    cluster.run()
+    ok = [d for d in done if not d.failed]
+    assert len(ok) == 8, f"{len(ok)} ok, restarts={cluster.restarts}"
+    assert cluster.restarts > 0  # some work really was re-executed
+
+
+def test_hedging_duplicates_stragglers():
+    reg = _registry()
+    node = WorkerNode(
+        reg, num_slots=8,
+        profiles={
+            "fan": ColdStartProfile(1e-5, 1e-4, 0.0),
+            "double": ColdStartProfile(1e-5, 1e-3, 2.0),  # huge jitter
+            "sum": ColdStartProfile(1e-5, 1e-4, 0.0),
+        },
+        hedge_after_s=2e-3,
+    )
+    node.dispatcher.hedge_min_instances = 2
+    done = []
+    node.invoke(_chain_comp(), {"x": [Item(6)]}, on_done=done.append)
+    node.run()
+    assert done and not done[0].failed
+    assert done[0].outputs["result"][0].data == 2 * sum(range(6))
+
+
+def test_keepwarm_commits_more_memory_than_dandelion():
+    loop = EventLoop()
+    kw = KeepWarmPlatform(loop, cores=4, guest_os_bytes=64 << 20, keepalive_s=30.0)
+    kw.register("f", ColdStartProfile(setup_s=5e-3, execute_s=2e-3, jitter_sigma=0.0),
+                context_bytes=16 << 20)
+    for i in range(50):
+        kw.request_at(i * 0.01, "f")
+    loop.run(until=10.0)
+    assert kw.committed_avg_bytes > (64 << 20) * 0.5  # sandboxes stay warm
+    assert kw.warm_count > 0 and kw.cold_count >= 1
+
+
+def test_keepwarm_forced_hot_ratio():
+    loop = EventLoop()
+    kw = KeepWarmPlatform(loop, cores=8, hot_ratio=0.5, seed=1)
+    kw.register("f", ColdStartProfile(setup_s=20e-3, execute_s=1e-3, jitter_sigma=0.0))
+    for i in range(200):
+        kw.request_at(i * 0.01, "f")
+    loop.run(until=30.0)
+    frac_cold = kw.cold_count / (kw.cold_count + kw.warm_count)
+    assert 0.3 < frac_cold < 0.7
+    # cold latencies bimodal: p99 >> p50
+    assert kw.latency.p99 > kw.latency.p50 * 3

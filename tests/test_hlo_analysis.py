@@ -1,0 +1,107 @@
+"""HLO analysis: while-corrected FLOP counting validated against programs
+with analytically known costs, and collective parsing on synthetic HLO."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import parse_collectives
+from repro.launch.hlo_counter import corrected_costs, parse_module, split_rhs
+
+
+def _compile_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_split_rhs_tuple_type():
+    t, op, operands, attrs = split_rhs(
+        "(bf16[8,4]{1,0}, s32[]) while(%tuple.1), condition=%c, body=%b"
+    )
+    assert op == "while" and operands == ["tuple.1"]
+    assert "condition=%c" in attrs
+
+
+def test_matmul_flops_exact():
+    m, k, n = 64, 128, 32
+    a = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    b = jax.ShapeDtypeStruct((k, n), jnp.float32)
+    hlo = _compile_text(lambda x, y: x @ y, a, b)
+    cc = corrected_costs(hlo)
+    assert cc.flops == 2 * m * k * n
+
+
+def test_scan_multiplies_body_flops():
+    """A scan of L matmuls must count L x the body, not 1 x."""
+    L, d = 16, 64
+    ws = jax.ShapeDtypeStruct((L, d, d), jnp.float32)
+    x0 = jax.ShapeDtypeStruct((d, d), jnp.float32)
+
+    def f(ws, x0):
+        def body(x, w):
+            return jnp.tanh(x @ w), None
+        y, _ = jax.lax.scan(body, x0, ws)
+        return y
+
+    hlo = _compile_text(f, ws, x0)
+    cc = corrected_costs(hlo)
+    want = L * 2 * d * d * d
+    assert want * 0.95 <= cc.flops <= want * 1.3, (cc.flops, want)
+
+
+def test_nested_scan_multiplies_through():
+    L1, L2, d = 4, 8, 32
+    ws = jax.ShapeDtypeStruct((L1, L2, d, d), jnp.float32)
+    x0 = jax.ShapeDtypeStruct((d, d), jnp.float32)
+
+    def f(ws, x0):
+        def outer(x, w2):
+            def inner(xx, w):
+                return jnp.tanh(xx @ w), None
+            y, _ = jax.lax.scan(inner, x, w2)
+            return y, None
+        y, _ = jax.lax.scan(outer, x0, ws)
+        return y
+
+    hlo = _compile_text(f, ws, x0)
+    cc = corrected_costs(hlo)
+    want = L1 * L2 * 2 * d**3
+    assert want * 0.95 <= cc.flops <= want * 1.3, (cc.flops, want)
+
+
+def test_memory_bytes_reasonable_for_matmul():
+    """HBM traffic of a big matmul ~= inputs + output (within small factor)."""
+    m = 512
+    a = jax.ShapeDtypeStruct((m, m), jnp.float32)
+    hlo = _compile_text(lambda x, y: x @ y, a, a)
+    cc = corrected_costs(hlo)
+    ideal = 3 * m * m * 4
+    assert ideal <= cc.hbm_bytes <= 4 * ideal
+
+
+_SYNTH_HLO = """
+HloModule synth
+
+ENTRY %main.1 (p0: f32[16,128]) -> f32[16,128] {
+  %p0 = f32[16,128]{1,0} parameter(0)
+  %ag = f32[64,128]{1,0} all-gather(%p0), replica_groups=[4,4]<=[16], dimensions={0}
+  %slice = f32[16,128]{1,0} slice(%ag), slice={[0:16], [0:128]}
+  ROOT %ar = f32[16,128]{1,0} all-reduce(%slice), replica_groups={{0,1,2,3}}, to_apply=%add
+}
+"""
+
+
+def test_parse_collectives_synthetic():
+    stats = parse_collectives(_SYNTH_HLO, 16)
+    assert stats.counts == {"all-gather": 1, "all-reduce": 1}
+    assert stats.operand_bytes["all-gather"] == 16 * 128 * 4
+    assert stats.output_bytes["all-gather"] == 64 * 128 * 4
+    # ring model: all-reduce moves 2 x bytes x (g-1)/g
+    want_ar = 2 * 16 * 128 * 4 * 3 / 4
+    assert abs(stats.link_bytes["all-reduce"] - want_ar) < 1
+
+
+def test_collectives_inside_scan_multiplied():
+    """psum inside a scanned body must count once per iteration."""
+    import os
+    if jax.device_count() < 2:
+        pytest.skip("needs >1 device (covered by the dry-run itself)")

@@ -1,0 +1,132 @@
+"""Per-kernel interpret-mode validation: shape/dtype sweeps vs ref oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-3, atol=2e-3)
+
+
+# ------------------------------------------------------------- rmsnorm
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(4, 128), (2, 37, 64), (3, 5, 7, 32)])
+def test_rmsnorm_kernel(shape, dtype):
+    x = jax.random.normal(RNG, shape, dtype)
+    s = jax.random.normal(jax.random.PRNGKey(1), shape[-1:], dtype)
+    got = ops.rmsnorm(x, s, interpret=True)
+    want = ref.rmsnorm(x, s)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+# ------------------------------------------------------ flash attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("sq,sk,hq,hkv,dh,causal,window", [
+    (64, 64, 4, 2, 32, True, 0),
+    (100, 100, 6, 2, 16, True, 0),     # non-multiple of block
+    (128, 128, 8, 2, 64, True, 48),    # sliding window
+    (64, 96, 4, 2, 32, False, 0),      # cross attention
+    (32, 32, 4, 4, 16, True, 0),       # MHA
+])
+def test_flash_attention_kernel(sq, sk, hq, hkv, dh, causal, window, dtype):
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (2, sq, hq, dh), dtype)
+    k = jax.random.normal(ks[1], (2, sk, hkv, dh), dtype)
+    v = jax.random.normal(ks[2], (2, sk, hkv, dh), dtype)
+    got = ops.flash_attention(
+        q, k, v, causal=causal, window=window, q_block=32, kv_block=32,
+        interpret=True, use_pallas=True,
+    )
+    want = ref.flash_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+@given(
+    g=st.sampled_from([1, 2, 4]),
+    hkv=st.sampled_from([1, 2]),
+    sq=st.sampled_from([32, 64]),
+    qb=st.sampled_from([16, 32]),
+)
+@settings(max_examples=8, deadline=None)
+def test_flash_attention_property(g, hkv, sq, qb):
+    ks = jax.random.split(jax.random.PRNGKey(g * 37 + hkv * 11 + sq), 3)
+    q = jax.random.normal(ks[0], (1, sq, hkv * g, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (1, sq, hkv, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (1, sq, hkv, 16), jnp.float32)
+    got = ops.flash_attention(q, k, v, q_block=qb, kv_block=qb, interpret=True, use_pallas=True)
+    want = ref.flash_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-3, atol=3e-3)
+
+
+# ------------------------------------------------------ decode attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("s,hq,hkv,dh,window,fill", [
+    (128, 8, 2, 64, 0, 128),
+    (128, 8, 2, 64, 0, 77),
+    (96, 4, 4, 32, 32, 96),
+    (100, 6, 2, 16, 0, 50),
+])
+def test_decode_attention_kernel(s, hq, hkv, dh, window, fill, dtype):
+    b = 2
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (b, hq, dh), dtype)
+    kc = jax.random.normal(ks[1], (b, s, hkv, dh), dtype)
+    vc = jax.random.normal(ks[2], (b, s, hkv, dh), dtype)
+    slot = jnp.where(jnp.arange(s)[None] < fill, jnp.arange(s)[None], -1)
+    slot = jnp.broadcast_to(slot, (b, s)).astype(jnp.int32)
+    cur = jnp.full((b,), fill, jnp.int32)
+    got = ops.decode_attention(
+        q, kc, vc, slot, cur, window=window, kv_block=32, interpret=True,
+        use_pallas=True,
+    )
+    want = ref.decode_attention(q, kc, vc, slot, cur, window=window)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+# --------------------------------------------------------------- ssd
+@pytest.mark.parametrize("dtype", [jnp.float32])
+@pytest.mark.parametrize("s,h,p,n,chunk", [
+    (64, 3, 16, 8, 16),
+    (128, 4, 32, 16, 32),
+    (96, 2, 8, 4, 16),
+])
+def test_ssd_kernel(s, h, p, n, chunk, dtype):
+    b = 2
+    ks = jax.random.split(RNG, 4)
+    x = jax.random.normal(ks[0], (b, s, h, p), dtype) * 0.5
+    a = -jnp.abs(jax.random.normal(ks[1], (b, s, h), jnp.float32)) * 0.3
+    bm = jax.random.normal(ks[2], (b, s, n), dtype) * 0.5
+    cm = jax.random.normal(ks[3], (b, s, n), dtype) * 0.5
+    y1, h1 = ops.ssd(x, a, bm, cm, chunk=chunk, interpret=True, use_pallas=True)
+    y2, h2 = ref.ssd(x, a, bm, cm, chunk)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), rtol=1e-3, atol=1e-3)
+
+
+# ------------------------------------------------------------- moe gmm
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("e,c,d,f", [(4, 32, 64, 48), (8, 40, 100, 72)])
+def test_moe_gmm_kernel(e, c, d, f, dtype):
+    ks = jax.random.split(RNG, 2)
+    xe = jax.random.normal(ks[0], (e, c, d), dtype)
+    we = jax.random.normal(ks[1], (e, d, f), dtype)
+    got = ops.moe_gmm(xe, we, block_c=32, block_f=32, block_d=32,
+                      interpret=True, use_pallas=True)
+    want = ref.moe_gmm(xe, we)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=5e-2 if dtype == jnp.bfloat16 else 1e-3,
+        atol=5e-1 if dtype == jnp.bfloat16 else 1e-2,
+    )

@@ -1,0 +1,91 @@
+"""Sharding rules: divisibility fallback, axis dedup, batch specs.
+
+Uses a duck-typed mesh stub so the single-CPU test process can exercise
+the 16x16 production-mesh logic without 256 devices.
+"""
+from types import SimpleNamespace
+
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.config.parallel import ParallelPlan
+from repro.sharding.rules import batch_spec, default_rules, spec_for_axes
+
+
+class _MeshStub(SimpleNamespace):
+    pass
+
+
+def mesh_stub(**axes):
+    return _MeshStub(axis_names=tuple(axes), shape=dict(axes))
+
+
+SINGLE = mesh_stub(data=16, model=16)
+MULTI = mesh_stub(pod=2, data=16, model=16)
+
+
+def _plan(mesh, kind="train", zero3=True):
+    return default_rules(
+        ParallelPlan(zero3=zero3).restrict_to(mesh.axis_names), kind
+    )
+
+
+def test_fsdp_2d_sharding_train():
+    rules = _plan(MULTI)
+    # deepseek wq: (8192, 8192) embed x heads
+    spec = spec_for_axes((8192, 8192), ("embed", "heads"), rules, MULTI)
+    assert spec == P(("pod", "data"), "model")
+
+
+def test_divisibility_fallback_replicates():
+    rules = _plan(SINGLE)
+    # 25 heads (hymba) cannot shard over 16: falls back to replication
+    spec = spec_for_axes((1600, 25), ("embed", "heads"), rules, SINGLE)
+    assert spec[1] is None if len(spec) > 1 else True
+
+
+def test_axis_never_used_twice():
+    rules = _plan(SINGLE, kind="serve")
+    # MoE expert weights (E, D, F): experts take model; ffn must fall
+    # through to data, never reusing model
+    spec = spec_for_axes((128, 4096, 1536), ("experts", "embed", "ffn"), rules, SINGLE)
+    flat = []
+    for e in spec:
+        if e is None:
+            continue
+        flat.extend(e if isinstance(e, tuple) else (e,))
+    assert len(flat) == len(set(flat))
+    assert spec[0] == "model"
+    assert spec[2] == "data"  # serve-mode fallback keeps 235B under HBM
+
+
+def test_kv_cache_seq_takes_model_when_heads_dont_divide():
+    rules = _plan(SINGLE, kind="serve")
+    # [L, B, S, K, dh] with K=8 (not divisible by 16): S gets model
+    spec = spec_for_axes(
+        (95, 128, 32768, 8, 128),
+        ("layers", "batch", "cache_seq", "kv_heads", None),
+        rules, SINGLE,
+    )
+    assert spec[1] == "data"
+    assert spec[2] == "model"
+    assert len(spec) < 4 or spec[3] is None
+
+
+def test_pod_axis_dropped_on_single_pod():
+    plan = ParallelPlan().restrict_to(("data", "model"))
+    assert plan.data_axes == ("data",)
+    rules = default_rules(plan, "train")
+    spec = spec_for_axes((1024, 1024), ("embed", "ffn"), rules, SINGLE)
+    assert spec == P("data", "model")
+
+
+@pytest.mark.parametrize("batch,expected", [
+    (256, P(("pod", "data"))),
+    (32, P(("pod", "data"))),
+    (2, P("pod")),       # sheds the 16-way axis, keeps pod
+    (1, P()),            # long_500k: replicate
+])
+def test_batch_spec_sheds_axes(batch, expected):
+    plan = ParallelPlan().restrict_to(("pod", "data", "model"))
+    assert batch_spec(plan, MULTI, batch) == expected

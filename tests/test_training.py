@@ -1,0 +1,178 @@
+"""Training substrate: optimization progress, grad-accum equivalence,
+compression properties, checkpoint fault tolerance."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config.parallel import ParallelPlan
+from repro.configs import get_smoke
+from repro.models.model import build
+from repro.training import compress
+from repro.training.checkpoint import (
+    AsyncCheckpointer,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.training.data import make_batch
+from repro.training.train_step import build_train_step, init_train_state
+from repro.config.shapes import ShapeConfig
+
+RNG = jax.random.PRNGKey(0)
+SHAPE = ShapeConfig("t", seq_len=32, global_batch=4, kind="train")
+
+
+def _setup(arch="granite-8b", plan=None):
+    cfg = get_smoke(arch)
+    api = build(cfg)
+    plan = plan or ParallelPlan(remat="none").restrict_to(("data", "model"))
+    step = jax.jit(build_train_step(api, plan, lr=1e-2, warmup_steps=2, total_steps=50))
+    state = init_train_state(api, RNG, plan)
+    return cfg, api, step, state
+
+
+def _batch(cfg, step_i):
+    b = make_batch(cfg, SHAPE, step_i)
+    return jax.tree_util.tree_map(jnp.asarray, b)
+
+
+def test_loss_decreases():
+    cfg, api, step, state = _setup()
+    first = last = None
+    for i in range(20):
+        state, metrics = step(state, _batch(cfg, 0))  # same batch: must overfit
+        if first is None:
+            first = float(metrics["loss"])
+        last = float(metrics["loss"])
+    assert last < first - 0.5, f"no optimization progress: {first} -> {last}"
+
+
+def test_grad_accum_matches_full_batch():
+    cfg = get_smoke("granite-8b")
+    api = build(cfg)
+    p1 = ParallelPlan(remat="none", grad_accum=1).restrict_to(("data",))
+    p2 = ParallelPlan(remat="none", grad_accum=2).restrict_to(("data",))
+    s1 = jax.jit(build_train_step(api, p1, lr=1e-2))
+    s2 = jax.jit(build_train_step(api, p2, lr=1e-2))
+    st0 = init_train_state(api, RNG, p1)
+    b = _batch(cfg, 0)
+    st1, m1 = s1(st0, b)
+    st0b = init_train_state(api, RNG, p2)
+    st2, m2 = s2(st0b, b)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-3)
+    l1 = jax.tree_util.tree_leaves(st1.params)
+    l2 = jax.tree_util.tree_leaves(st2.params)
+    for a, b_ in zip(l1, l2):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b_, np.float32),
+            rtol=2e-2, atol=2e-2,
+        )
+
+
+def test_remat_matches_no_remat():
+    cfg = get_smoke("glm4-9b")
+    api = build(cfg)
+    b = _batch(cfg, 0)
+    p_none = ParallelPlan(remat="none").restrict_to(())
+    p_full = ParallelPlan(remat="full").restrict_to(())
+    loss_n, g_n = jax.jit(jax.value_and_grad(lambda p: api.train_loss(p, b, remat="none")))(
+        init_train_state(api, RNG, p_none).params
+    ), None
+    params = init_train_state(api, RNG, p_none).params
+    l1, g1 = jax.jit(jax.value_and_grad(lambda p: api.train_loss(p, b, remat="none")))(params)
+    l2, g2 = jax.jit(jax.value_and_grad(lambda p: api.train_loss(p, b, remat="full")))(params)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-3)
+    for a, c in zip(jax.tree_util.tree_leaves(g1), jax.tree_util.tree_leaves(g2)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(c, np.float32), rtol=2e-2, atol=1e-2
+        )
+
+
+# ----------------------------------------------------------- compression
+@given(st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_quantize_roundtrip_bounded_error(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64,), jnp.float32) * (seed % 7 + 1)
+    q, scale = compress.quantize(x)
+    err = np.abs(np.asarray(compress.dequantize(q, scale) - x))
+    assert np.all(err <= float(scale) * 0.5 + 1e-6)
+
+
+def test_error_feedback_unbiased_over_time():
+    """With error feedback, the accumulated dequantized sum tracks the true
+    gradient sum (residual stays bounded)."""
+    rng = np.random.default_rng(0)
+    residual = jnp.zeros((32,), jnp.float32)
+    true_sum = np.zeros((32,))
+    deq_sum = np.zeros((32,))
+    for t in range(200):
+        g = jnp.asarray(rng.normal(size=32) * 0.01, jnp.float32)
+        q, scale, residual = compress.compress_with_feedback(g, residual)
+        deq_sum += np.asarray(compress.dequantize(q, scale))
+        true_sum += np.asarray(g)
+    # total drift equals the final residual (telescoping), which is bounded
+    drift = np.abs(true_sum - deq_sum)
+    assert np.all(drift <= np.abs(np.asarray(residual)) + 1e-5)
+
+
+def test_compressed_training_still_converges():
+    plan = ParallelPlan(remat="none", compress_grads=True).restrict_to(())
+    cfg, api, step, state = _setup(plan=plan)
+    first = last = None
+    for i in range(20):
+        state, metrics = step(state, _batch(cfg, 0))
+        if first is None:
+            first = float(metrics["loss"])
+        last = float(metrics["loss"])
+    assert last < first - 0.3
+
+
+# ----------------------------------------------------------- checkpoints
+def test_checkpoint_roundtrip_and_resume(tmp_path):
+    cfg, api, step, state = _setup()
+    for i in range(3):
+        state, _ = step(state, _batch(cfg, i))
+    save_checkpoint(str(tmp_path), 3, state)
+    assert latest_step(str(tmp_path)) == 3
+
+    abstract = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state
+    )
+    restored, step_no = restore_checkpoint(str(tmp_path), None, abstract)
+    assert step_no == 3
+    for a, b in zip(jax.tree_util.tree_leaves(state), jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # resuming produces bitwise-identical trajectories
+    s_a, _ = step(state, _batch(cfg, 3))
+    s_b, _ = step(restored, _batch(cfg, 3))
+    for a, b in zip(jax.tree_util.tree_leaves(s_a.params), jax.tree_util.tree_leaves(s_b.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_corruption_detected(tmp_path):
+    cfg, api, step, state = _setup()
+    path = save_checkpoint(str(tmp_path), 1, state)
+    shard = os.path.join(path, "shard_00000.npz")
+    with open(shard, "r+b") as f:
+        f.seek(100)
+        f.write(b"\xde\xad\xbe\xef")
+    abstract = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state
+    )
+    with pytest.raises(IOError, match="corrupt"):
+        restore_checkpoint(str(tmp_path), 1, abstract)
+
+
+def test_async_checkpointer_gc_and_wait(tmp_path):
+    cfg, api, step, state = _setup()
+    ck = AsyncCheckpointer(str(tmp_path), keep=2)
+    for i in range(4):
+        ck.save(i, state)
+    ck.close()
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(steps) == 2 and steps[-1] == "step_00000003"
