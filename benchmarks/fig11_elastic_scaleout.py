@@ -1,0 +1,182 @@
+"""Figure 11 (extension): elastic scale-out under ON/OFF bursts.
+
+Azure-like ON/OFF bursty workload (low-duty burst modulation over the
+seeded trace generator) against identical worker-node hardware, two
+control planes:
+
+  * **static**: a peak-provisioned fixed-size cluster (all ``MAX_NODES``
+    nodes up for the whole run, least-outstanding routing) - the
+    capacity a fleet must hold to survive its worst burst;
+  * **elastic**: the Dirigent-style control plane - locality-aware
+    routing (code-cache affinity + p2c spillover) and node autoscaling
+    (boot-delay scale-up on queue pressure, keep-alive scale-down with
+    drain-before-remove).
+
+Nodes pay a runtime/OS base footprint while up (NODE_BASE_BYTES), so
+committed memory follows the node count: the elastic plane should commit
+well below the static peak-provisioned average while keeping p99 within
+2x (requests that land during a node boot queue briefly).
+
+Reports per-platform p50/p99 latency, average/peak committed memory and
+node counts, a summary ratio row, and the elastic node-count timeline.
+All in virtual time; ``--quick`` (or FIG11_QUICK=1) shrinks the window
+for CI smoke runs.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+from repro.core import (
+    ClusterManager,
+    ColdStartProfile,
+    ControlPlaneConfig,
+    ElasticControlPlane,
+    EventLoop,
+    FunctionRegistry,
+    Item,
+    WorkerNode,
+)
+from repro.core.sim import merged_peak
+from repro.core.trace import generate_events, generate_functions
+from benchmarks.common import emit, single_function_composition
+
+MAX_NODES = 6
+NODE_SLOTS = 8
+NODE_CACHE_ENTRIES = 12              # < N_FUNCTIONS: locality matters
+NODE_BASE_BYTES = 256 << 20          # runtime/OS/code-cache arena per node
+NODE_BOOT = ColdStartProfile(setup_s=0.75, execute_s=0.0, jitter_sigma=0.1)
+N_FUNCTIONS = 30
+TOTAL_RATE_HZ = 70.0
+DANDELION_SETUP_S = 0.3e-3
+
+
+def _duration() -> float:
+    quick = os.environ.get("FIG11_QUICK") == "1" or "--quick" in sys.argv
+    return 40.0 if quick else 240.0
+
+
+def _workload(duration_s: float):
+    fns = generate_functions(
+        N_FUNCTIONS, seed=0, total_rate_hz=TOTAL_RATE_HZ,
+        burst_period_range=(30.0, 90.0), burst_duty_range=(0.15, 0.4),
+        exec_median_s=0.060, stagger_bursts=True,
+    )
+    events = generate_events(fns, duration_s, seed=1)
+    return fns, events
+
+
+def _registry(fns):
+    reg = FunctionRegistry()
+    profiles = {}
+    comps = {}
+    for f in fns:
+        reg.register_function(
+            f.name, lambda ins: {"out": [Item(1)]},
+            context_bytes=f.context_bytes,
+        )
+        profiles[f.name] = ColdStartProfile(
+            DANDELION_SETUP_S, f.exec_median_s, jitter_sigma=f.exec_sigma,
+        )
+        comps[f.name] = single_function_composition(reg, f.name)
+    return reg, profiles, comps
+
+
+def _row(platform, events, latency, avg_mb, peak_mb, nodes_avg, nodes_peak):
+    s = latency.summary()
+    return {
+        "platform": platform,
+        "events": events,
+        "p50_ms": s["p50_ms"],
+        "p99_ms": s["p99_ms"],
+        "avg_committed_mb": avg_mb,
+        "peak_committed_mb": peak_mb,
+        "nodes_avg": nodes_avg,
+        "nodes_peak": nodes_peak,
+    }
+
+
+def run():
+    duration_s = _duration()
+    fns, events = _workload(duration_s)
+    rows = []
+
+    # ------------------- static peak-provisioned cluster ------------------
+    reg, profiles, comps = _registry(fns)
+    loop = EventLoop()
+    nodes = [
+        WorkerNode(reg, loop=loop, num_slots=NODE_SLOTS, profiles=profiles,
+                   code_cache_entries=NODE_CACHE_ENTRIES, base_bytes=NODE_BASE_BYTES,
+                   seed=10 + i, name=f"sn{i}")
+        for i in range(MAX_NODES)
+    ]
+    static = ClusterManager(nodes, loop)
+    for e in events:
+        static.invoke_at(e.t, comps[e.fn], {"x": [Item(0)]})
+    static.run(until=duration_s)
+    loop.run()  # drain stragglers past the window
+    static_avg_mb = (
+        MAX_NODES * NODE_BASE_BYTES
+        + sum(n.tracker.timeline.average(duration_s) for n in nodes)
+    ) / 1024**2
+    static_peak_mb = (
+        merged_peak([n.tracker.timeline for n in nodes])
+        + MAX_NODES * NODE_BASE_BYTES
+    ) / 1024**2
+    rows.append(_row("static_peak", len(events), static.latency,
+                     static_avg_mb, static_peak_mb, MAX_NODES, MAX_NODES))
+
+    # --------------------- elastic control plane --------------------------
+    reg, profiles, comps = _registry(fns)
+    loop = EventLoop()
+
+    def factory(name):
+        return WorkerNode(reg, loop=loop, num_slots=NODE_SLOTS,
+                          profiles=profiles, code_cache_entries=NODE_CACHE_ENTRIES,
+                          base_bytes=NODE_BASE_BYTES, seed=20, name=name)
+
+    cfg = ControlPlaneConfig(
+        min_nodes=1, max_nodes=MAX_NODES,
+        target_outstanding_per_node=1.5 * NODE_SLOTS,
+        # sustained queueing only: transient waits below one ~60ms service
+        # time must not boot nodes the watermark will immediately reap
+        max_queue_delay_s=100e-3,
+        keepalive_s=20.0, tick_interval_s=0.25,
+        node_boot=NODE_BOOT, node_base_bytes=NODE_BASE_BYTES,
+    )
+    cp = ElasticControlPlane(loop, factory, config=cfg, seed=2)
+    elastic = ClusterManager(control_plane=cp)
+    for e in events:
+        elastic.invoke_at(e.t, comps[e.fn], {"x": [Item(0)]})
+    elastic.run(until=duration_s)
+    loop.run()
+    summ = cp.summary(duration_s)
+    rows.append(_row("elastic", len(events), elastic.latency,
+                     summ["committed_avg_mb"], summ["committed_peak_mb"],
+                     summ["nodes_avg"], summ["nodes_peak"]))
+
+    # ------------------------------ summary -------------------------------
+    rows.append({
+        "platform": "summary",
+        "events": len(events),
+        "p50_ms": rows[1]["p50_ms"] / max(rows[0]["p50_ms"], 1e-9),
+        "p99_ms": rows[1]["p99_ms"] / max(rows[0]["p99_ms"], 1e-9),
+        "avg_committed_mb": rows[1]["avg_committed_mb"] / rows[0]["avg_committed_mb"],
+        "peak_committed_mb": rows[1]["peak_committed_mb"] / rows[0]["peak_committed_mb"],
+        "nodes_avg": rows[1]["nodes_avg"] / MAX_NODES,
+        "nodes_peak": rows[1]["nodes_peak"] / MAX_NODES,
+    })
+
+    # routing/scaling detail + node-count timeline (elastic)
+    print(f"# routing: {cp.stats.summary()}")
+    tl = [f"{t:.1f}:{int(n)}" for t, n in cp.node_count_timeline.points]
+    print(f"# node_count_timeline: {' '.join(tl)}")
+    return rows
+
+
+def main():
+    emit("fig11_elastic_scaleout", run())
+
+
+if __name__ == "__main__":
+    main()

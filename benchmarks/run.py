@@ -20,6 +20,7 @@ from benchmarks import (
     fig8_multiplex,
     fig9_query,
     fig10_azure_trace,
+    fig11_elastic_scaleout,
     roofline,
     table1_coldstart,
 )
@@ -33,6 +34,8 @@ BENCHES = {
     "fig8": ("Fig 8: multiplexing mixed bursty apps", fig8_multiplex.run),
     "fig9": ("Fig 9: SSB query latency + cost", fig9_query.run),
     "fig10": ("Fig 1/10: Azure-trace committed memory", fig10_azure_trace.run),
+    "fig11": ("Fig 11: elastic scale-out vs static cluster",
+              fig11_elastic_scaleout.run),
     "roofline": ("Roofline: dry-run three-term table", roofline.run),
 }
 

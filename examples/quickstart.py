@@ -6,7 +6,12 @@ invoke through a worker node, and inspect the cold-start breakdown.
 import numpy as np
 
 from repro.core import (
+    ClusterManager,
+    ColdStartProfile,
     Composition,
+    ControlPlaneConfig,
+    ElasticControlPlane,
+    EventLoop,
     FunctionRegistry,
     HttpRequest,
     HttpResponse,
@@ -64,6 +69,35 @@ def main():
                          samples=7)
     print("cold-start breakdown (us):",
           {k: round(v, 1) for k, v in bd.us().items()})
+
+    # 5. Cluster scale: the Dirigent-style elastic control plane routes on
+    #    code-cache locality and grows/shrinks the node pool with load.
+    loop = EventLoop()
+    profiles = {"word_count": ColdStartProfile(3e-4, 20e-3, 0.0)}
+
+    def factory(name):
+        return WorkerNode(reg, services, loop=loop, num_slots=4,
+                          profiles=profiles, code_cache_entries=32,
+                          base_bytes=256 << 20, name=name)
+
+    cp = ElasticControlPlane(
+        loop, factory,
+        config=ControlPlaneConfig(
+            min_nodes=1, max_nodes=4, target_outstanding_per_node=6.0,
+            keepalive_s=5.0, tick_interval_s=0.25,
+            node_boot=ColdStartProfile(0.5, 0.0, 0.0),
+        ),
+    )
+    cluster = ClusterManager(control_plane=cp)
+    for i in range(300):  # 2s burst, then silence
+        cluster.invoke_at(
+            i * (2.0 / 300), comp,
+            {"request": [Item(HttpRequest("GET", "http://docs.svc/doc1"))]},
+        )
+    cluster.run(until=30.0)
+    loop.run()
+    print("elastic cluster:",
+          {k: round(v, 3) for k, v in cp.summary().items()})
 
 
 if __name__ == "__main__":

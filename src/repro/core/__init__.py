@@ -9,11 +9,17 @@ engines, PI control plane, cold-start backends, cluster manager.
 from repro.core.cluster import ClusterManager, KeepWarmPlatform
 from repro.core.coldstart import (
     BACKENDS,
+    CodeCache,
     ColdStartBreakdown,
     ColdStartProfile,
     cold_start,
     measure,
     profile_from_measurement,
+)
+from repro.core.control_plane import (
+    ControlPlaneConfig,
+    ElasticControlPlane,
+    composition_functions,
 )
 from repro.core.context import MemoryContext, MemoryTracker
 from repro.core.dag import Composition, Edge, PortRef, Vertex
@@ -30,13 +36,17 @@ from repro.core.items import Item, ItemSet, SetDict, make_set
 from repro.core.node import WorkerNode
 from repro.core.registry import FunctionRegistry
 from repro.core.sim import EventLoop, Timeline
+from repro.core.tracing import LatencyStats, NodeCounters, RoutingStats
 
 __all__ = [
     "BACKENDS",
     "ClusterManager",
+    "CodeCache",
     "ColdStartBreakdown",
     "ColdStartProfile",
     "Composition",
+    "ControlPlaneConfig",
+    "ElasticControlPlane",
     "Dispatcher",
     "Edge",
     "EngineSet",
@@ -48,9 +58,12 @@ __all__ = [
     "Item",
     "ItemSet",
     "KeepWarmPlatform",
+    "LatencyStats",
     "MemoryContext",
     "MemoryTracker",
+    "NodeCounters",
     "PortRef",
+    "RoutingStats",
     "SanitizationError",
     "ServiceRegistry",
     "SetDict",
@@ -59,6 +72,7 @@ __all__ = [
     "Vertex",
     "WorkerNode",
     "cold_start",
+    "composition_functions",
     "make_set",
     "measure",
     "profile_from_measurement",

@@ -34,19 +34,50 @@ from repro.core.tracing import LatencyStats
 
 
 class ClusterManager:
-    def __init__(self, nodes: List[WorkerNode], loop: EventLoop):
-        if not nodes:
-            raise ValueError("cluster needs at least one node")
-        self.loop = loop
-        self.nodes: List[WorkerNode] = list(nodes)
+    """Cluster frontend. Routing/scaling either static (least-outstanding
+    over a fixed node list) or delegated to an ``ElasticControlPlane``;
+    failure-restart semantics (idempotent re-execution on survivors) live
+    here in both modes."""
+
+    def __init__(
+        self,
+        nodes: Optional[List[WorkerNode]] = None,
+        loop: Optional[EventLoop] = None,
+        *,
+        control_plane=None,   # repro.core.control_plane.ElasticControlPlane
+    ):
+        self.control_plane = control_plane
+        if control_plane is not None:
+            if nodes:
+                raise ValueError(
+                    "pass nodes OR control_plane, not both; the control "
+                    "plane owns the pool (use add_node/adopt for extras)"
+                )
+            self.loop = loop or control_plane.loop
+            self._nodes: List[WorkerNode] = []
+        else:
+            if not nodes:
+                raise ValueError("cluster needs at least one node")
+            if loop is None:
+                raise ValueError("static cluster needs an explicit loop")
+            self.loop = loop
+            self._nodes = list(nodes)
         self.latency = LatencyStats()
         self.restarts = 0
         self.failed = 0
-        self._outstanding: Dict[int, int] = {id(n): 0 for n in nodes}
+        self._outstanding: Dict[int, int] = {id(n): 0 for n in self._nodes}
+
+    @property
+    def nodes(self) -> List[WorkerNode]:
+        if self.control_plane is not None:
+            return self.control_plane.worker_nodes
+        return self._nodes
 
     # ------------------------------------------------------------ routing
-    def _route(self) -> WorkerNode:
-        alive = [n for n in self.nodes if n.alive]
+    def _route(self, comp: Composition) -> WorkerNode:
+        if self.control_plane is not None:
+            return self.control_plane.route(comp)
+        alive = [n for n in self._nodes if n.alive]
         if not alive:
             raise RuntimeError("no alive nodes")
         return min(alive, key=lambda n: self._outstanding[id(n)])
@@ -58,12 +89,18 @@ class ClusterManager:
         on_done: Optional[Callable[[InvocationRun], None]] = None,
         _attempt: int = 0,
     ) -> None:
-        node = self._route()
-        self._outstanding[id(node)] += 1
+        node = self._route(comp)
+        if self.control_plane is not None:
+            self.control_plane.on_dispatch(node)
+        else:
+            self._outstanding[id(node)] += 1
         t_submit = self.loop.now
 
         def done(inv: InvocationRun):
-            self._outstanding[id(node)] -= 1
+            if self.control_plane is not None:
+                self.control_plane.on_complete(node)
+            else:
+                self._outstanding[id(node)] -= 1
             if inv.failed and "node_failure" in inv.failed and _attempt < 3:
                 # idempotent re-execution on a surviving node (SS6.1)
                 self.restarts += 1
@@ -84,21 +121,35 @@ class ClusterManager:
 
     # ------------------------------------------------------ elasticity
     def add_node(self, node: WorkerNode):
-        self.nodes.append(node)
+        if self.control_plane is not None:
+            self.control_plane.adopt(node)
+            return
+        self._nodes.append(node)
         self._outstanding[id(node)] = 0
 
     def remove_node(self, node: WorkerNode):
         """Graceful drain: stop routing; node finishes in-flight work."""
+        if self.control_plane is not None:
+            self.control_plane.drain(node)
+            return
         node.alive = False
 
     def fail_node_at(self, t: float, idx: int):
-        self.loop.at(t, self.nodes[idx].fail)
+        def do():
+            node = self.nodes[idx]
+            node.fail()
+            if self.control_plane is not None:
+                self.control_plane.on_node_failure(node)
+
+        self.loop.at(t, do)
 
     def run(self, until: Optional[float] = None):
         self.loop.run(until=until)
 
     @property
     def committed_avg_bytes(self) -> float:
+        if self.control_plane is not None:
+            return self.control_plane.committed_avg_bytes()
         return sum(n.committed_avg_bytes for n in self.nodes)
 
 

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import pickle
 import time
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -219,6 +220,59 @@ def measure(
         output=med([p.output for p in phases]),
     )
     return out, (med(exec_times) if exec_times else 0.0)
+
+
+class CodeCache:
+    """Per-node RAM code-cache residency model (SS5 two-level code store).
+
+    The ``FunctionRegistry`` owns the *global* disk/RAM store; this class
+    models which function binaries are resident in ONE worker node's RAM,
+    which is what locality-aware routing cares about: a request lands
+    "warm" only on a node that has already loaded the composition's
+    functions. LRU over a bounded number of entries, with hit/miss
+    counters the control plane exports through ``tracing.RoutingStats``.
+    """
+
+    def __init__(self, capacity_entries: int = 256):
+        if capacity_entries <= 0:
+            raise ValueError("code cache needs capacity >= 1 entry")
+        self.capacity_entries = capacity_entries
+        self._lru: "OrderedDict[str, None]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def resident(self, fn_name: str) -> bool:
+        return fn_name in self._lru
+
+    def warm_fraction(self, fn_names) -> float:
+        """Fraction of ``fn_names`` resident — the routing affinity score."""
+        names = list(fn_names)
+        if not names:
+            return 0.0
+        return sum(1 for n in names if n in self._lru) / len(names)
+
+    def touch(self, fn_name: str) -> bool:
+        """Record a code load; returns True on a RAM hit (no disk read)."""
+        hit = fn_name in self._lru
+        if hit:
+            self._lru.move_to_end(fn_name)
+            self.hits += 1
+        else:
+            self.misses += 1
+            self._lru[fn_name] = None
+            while len(self._lru) > self.capacity_entries:
+                self._lru.popitem(last=False)
+                self.evictions += 1
+        return hit
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def __len__(self) -> int:
+        return len(self._lru)
 
 
 @dataclass

@@ -1,0 +1,373 @@
+"""Dirigent-style elastic control plane: locality routing + node autoscaling.
+
+The paper's cluster layer (SS5 "Dirigent") is what makes per-request
+contexts pay off at fleet scale: committed memory tracks the active floor
+only if the node pool itself follows load. This module replaces the static
+``ClusterManager`` routing path with:
+
+  * **two-level routing** - code-cache/locality affinity first (FaaSNet's
+    observation: provisioning speed hinges on where function code already
+    lives), falling back to load-aware spillover via power-of-two-choices
+    on per-node outstanding work;
+  * **node autoscaling** - scale up on per-node outstanding-load or
+    queue-delay thresholds, paying a ``ColdStartProfile``-modeled node
+    boot cost before the new node takes traffic (Boxer's ephemeral burst
+    capacity); scale down after an idle keep-alive window, draining
+    in-flight work before retiring a node;
+  * **accounting** - per-node cache-hit / routed / committed-memory
+    counters (``tracing.RoutingStats``), a node-count timeline, and
+    cluster-wide committed-memory integration including the per-node
+    runtime/OS base footprint that a static peak-provisioned fleet pays
+    around the clock.
+
+Everything runs on the shared deterministic ``EventLoop``; given the same
+seed and workload, routing decisions, scaling events, and final stats are
+bit-identical across runs (the property the test harness pins down).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.coldstart import ColdStartProfile
+from repro.core.context import MemoryTracker
+from repro.core.dag import COMPUTE, SUBGRAPH, Composition
+from repro.core.node import WorkerNode
+from repro.core.sim import EventLoop, Timeline, merged_peak
+from repro.core.tracing import RoutingStats
+
+BOOTING, ACTIVE, DRAINING, RETIRED = "booting", "active", "draining", "retired"
+
+
+def composition_functions(comp: Composition) -> Tuple[str, ...]:
+    """All compute-function names a composition (incl. nested subgraphs)
+    will load - the set the affinity router matches against node caches."""
+    cached = comp.__dict__.get("_compute_fns")
+    if cached is not None:
+        return cached
+    names: List[str] = []
+
+    def walk(c: Composition):
+        for v in c.vertices.values():
+            if v.kind == SUBGRAPH and v.subgraph is not None:
+                walk(v.subgraph)
+            elif v.kind == COMPUTE:
+                names.append(v.function)
+
+    walk(comp)
+    out = tuple(dict.fromkeys(names))
+    comp.__dict__["_compute_fns"] = out
+    return out
+
+
+@dataclass
+class ControlPlaneConfig:
+    min_nodes: int = 1
+    max_nodes: int = 8
+    # ---- scale-up triggers (either one fires)
+    target_outstanding_per_node: float = 8.0
+    max_queue_delay_s: float = 25e-3
+    # ---- scale-down: fully-idle nodes past keep-alive are drained, and a
+    # sustained-low-utilization cluster sheds its least-loaded node once the
+    # survivors can absorb the work below this fraction of target load
+    keepalive_s: float = 30.0
+    scale_down_watermark: float = 0.8
+    tick_interval_s: float = 0.5
+    # ---- routing: an affinity node this overloaded spills to p2c anyway
+    affinity_overload_factor: float = 2.0
+    # ---- node provisioning cost (VM boot / runtime start), sampled per boot
+    node_boot: ColdStartProfile = field(
+        default_factory=lambda: ColdStartProfile(
+            setup_s=1.0, execute_s=0.0, jitter_sigma=0.1
+        )
+    )
+    # runtime/OS footprint committed while a node is up (used when the
+    # factory does not set WorkerNode.base_bytes)
+    node_base_bytes: int = 256 << 20
+
+
+@dataclass
+class ManagedNode:
+    node: WorkerNode
+    state: str = BOOTING
+    outstanding: int = 0
+    idle_since: float = 0.0
+    boot_t: float = 0.0
+    ready_t: float = 0.0
+    base_committed: int = 0
+
+
+class ElasticControlPlane:
+    """Owns the node pool: routes invocations, scales nodes with load."""
+
+    def __init__(
+        self,
+        loop: EventLoop,
+        node_factory: Callable[[str], WorkerNode],
+        *,
+        config: Optional[ControlPlaneConfig] = None,
+        seed: int = 0,
+        journal: bool = False,
+    ):
+        self.loop = loop
+        self.factory = node_factory
+        self.cfg = config or ControlPlaneConfig()
+        if self.cfg.min_nodes < 1:
+            raise ValueError("control plane needs min_nodes >= 1")
+        self.rng = np.random.default_rng(seed)
+        self.stats = RoutingStats()
+        self.mem = MemoryTracker(loop)          # node base (runtime/OS) bytes
+        self.node_count_timeline = Timeline()
+        self.members: List[ManagedNode] = []
+        self._by_node: Dict[int, ManagedNode] = {}
+        self._ids = itertools.count()
+        self._ticking = False
+        self._low_since: Optional[float] = None
+        self.journal: Optional[List[str]] = [] if journal else None
+        for _ in range(self.cfg.min_nodes):
+            self._boot_node(instant=True)
+
+    # ------------------------------------------------------------- pool
+    @property
+    def worker_nodes(self) -> List[WorkerNode]:
+        """Nodes currently up (taking or finishing traffic)."""
+        return [m.node for m in self.members if m.state in (ACTIVE, DRAINING)]
+
+    @property
+    def active_count(self) -> int:
+        return sum(1 for m in self.members if m.state == ACTIVE)
+
+    def _log(self, msg: str):
+        if self.journal is not None:
+            self.journal.append(f"{self.loop.now:.9f} {msg}")
+
+    def _record_count(self):
+        up = sum(1 for m in self.members if m.state in (ACTIVE, DRAINING))
+        self.node_count_timeline.record(self.loop.now, float(up))
+
+    def _boot_node(self, instant: bool = False):
+        name = f"en{next(self._ids)}"
+        node = self.factory(name)
+        if node.loop is not self.loop:
+            raise ValueError(f"{name}: factory must build nodes on the shared loop")
+        m = ManagedNode(node=node, boot_t=self.loop.now)
+        self.members.append(m)
+        self._by_node[id(node)] = m
+        if instant:
+            self._node_ready(m)
+        else:
+            boot_s, _ = self.cfg.node_boot.sample(self.rng)
+            self.stats.scale_ups += 1
+            self._log(f"scale_up {name} boot_s={boot_s:.6f}")
+            self.loop.after(boot_s, lambda: self._node_ready(m))
+
+    def _node_ready(self, m: ManagedNode):
+        if not m.node.alive:            # failed while booting
+            m.state = RETIRED
+            return
+        m.state = ACTIVE
+        m.ready_t = self.loop.now
+        m.idle_since = self.loop.now
+        m.base_committed = m.node.base_bytes or self.cfg.node_base_bytes
+        self.mem.commit(m.base_committed)
+        self._log(f"ready {m.node.name}")
+        self._record_count()
+
+    def adopt(self, node: WorkerNode):
+        """Register an externally created node as active (manual add)."""
+        m = ManagedNode(node=node, boot_t=self.loop.now)
+        self.members.append(m)
+        self._by_node[id(node)] = m
+        self._node_ready(m)
+
+    # ---------------------------------------------------------- routing
+    def route(self, comp: Composition) -> WorkerNode:
+        """Two-level policy: code-cache affinity, else p2c on load."""
+        self._ensure_tick()
+        active = [m for m in self.members if m.state == ACTIVE and m.node.alive]
+        if not active:
+            raise RuntimeError("no active nodes")
+        fns = composition_functions(comp)
+
+        affinity: List[Tuple[float, ManagedNode]] = []
+        for m in active:
+            limit = self.cfg.affinity_overload_factor * max(m.node.num_slots, 1)
+            score = m.node.warm_fraction(fns)
+            if score > 0.0 and m.outstanding < limit:
+                affinity.append((score, m))
+        if affinity:
+            # best residency wins; ties bin-pack - fill a node up to its
+            # slot count before spilling, so lightly loaded nodes go fully
+            # idle and the autoscaler can reap them (spreading a trickle
+            # over every warm node keeps the whole fleet alive forever)
+            def pack_key(sm):
+                score, m = sm
+                slots = max(m.node.num_slots, 1)
+                under = m.outstanding < slots
+                depth = m.outstanding if under else -m.outstanding
+                return (score, under, depth)
+
+            best = max(affinity, key=pack_key)[1]
+            self.stats.record_route(best.node.name, affinity=True)
+            self._log(f"route {best.node.name} affinity out={best.outstanding}")
+            return best.node
+
+        # spillover: power-of-two-choices on outstanding queue depth
+        if len(active) == 1:
+            pick = active[0]
+        else:
+            i, j = self.rng.choice(len(active), size=2, replace=False)
+            a, b = active[int(i)], active[int(j)]
+            pick = a if a.outstanding <= b.outstanding else b
+        self.stats.record_route(pick.node.name, affinity=False)
+        self._log(f"route {pick.node.name} spillover out={pick.outstanding}")
+        return pick.node
+
+    def on_dispatch(self, node: WorkerNode):
+        m = self._by_node[id(node)]
+        m.outstanding += 1
+
+    def on_complete(self, node: WorkerNode):
+        m = self._by_node[id(node)]
+        m.outstanding -= 1
+        if m.outstanding <= 0:
+            m.outstanding = 0
+            m.idle_since = self.loop.now
+            if m.state == DRAINING:
+                self._retire(m, reason="drained")
+
+    # ------------------------------------------------------- autoscaler
+    def _ensure_tick(self):
+        if not self._ticking:
+            self._ticking = True
+            self.loop.after(self.cfg.tick_interval_s, self._tick, daemon=True)
+
+    def _tick(self):
+        now = self.loop.now
+        # reap nodes that died (ClusterManager re-executes their work)
+        for m in self.members:
+            if m.state in (ACTIVE, DRAINING) and not m.node.alive:
+                self._retire(m, reason="failure")
+
+        active = [m for m in self.members if m.state == ACTIVE]
+        booting = [m for m in self.members if m.state == BOOTING]
+
+        # ---- scale up: outstanding load or queue delay over threshold
+        if active and len(active) + len(booting) < self.cfg.max_nodes:
+            per_node = sum(m.outstanding for m in active) / len(active)
+            qdelay = max(m.node.queue_delay_s() for m in active)
+            if (
+                per_node > self.cfg.target_outstanding_per_node
+                or qdelay > self.cfg.max_queue_delay_s
+            ):
+                self._boot_node()
+
+        # ---- scale down (one node per tick at most)
+        if len(active) > self.cfg.min_nodes:
+            # (a) a node fully idle past keep-alive retires outright
+            idle = [
+                m for m in active
+                if m.outstanding == 0 and now - m.idle_since > self.cfg.keepalive_s
+            ]
+            if idle:
+                idle.sort(key=lambda m: m.idle_since)
+                self.drain(idle[0].node)
+            else:
+                # (b) sustained low utilization: survivors could absorb all
+                # work below the watermark -> drain the least-loaded node
+                total = sum(m.outstanding for m in active)
+                absorbable = (
+                    total
+                    <= (len(active) - 1)
+                    * self.cfg.target_outstanding_per_node
+                    * self.cfg.scale_down_watermark
+                )
+                if not absorbable:
+                    self._low_since = None
+                elif self._low_since is None:
+                    self._low_since = now
+                elif now - self._low_since > self.cfg.keepalive_s:
+                    victim = min(active, key=lambda m: (m.outstanding, m.node.name))
+                    self.drain(victim.node)
+                    self._low_since = now
+        else:
+            self._low_since = None
+
+        self.loop.after(self.cfg.tick_interval_s, self._tick, daemon=True)
+
+    def on_node_failure(self, node: WorkerNode):
+        """Out-of-band failure notification (the periodic tick would also
+        reap the dead node, but may not run again if the loop drains)."""
+        m = self._by_node.get(id(node))
+        if m is not None and m.state in (ACTIVE, DRAINING, BOOTING):
+            self._retire(m, reason="failure")
+
+    def drain(self, node: WorkerNode):
+        """Stop routing to ``node``; it finishes in-flight work, then
+        retires (drain-before-remove)."""
+        m = self._by_node[id(node)]
+        if m.state != ACTIVE:
+            return
+        m.state = DRAINING
+        self.stats.drains += 1
+        self._log(f"drain {m.node.name} out={m.outstanding}")
+        if m.outstanding == 0:
+            self._retire(m, reason="idle")
+
+    def _retire(self, m: ManagedNode, reason: str):
+        if m.state == RETIRED:
+            return
+        m.state = RETIRED
+        m.node.alive = False
+        if m.base_committed:
+            self.mem.release(m.base_committed)
+            m.base_committed = 0
+        if reason != "failure":
+            self.stats.scale_downs += 1
+        self._log(f"retire {m.node.name} reason={reason}")
+        self._record_count()
+
+    # ------------------------------------------------------- accounting
+    def committed_avg_bytes(self, t_end: Optional[float] = None) -> float:
+        """Cluster committed-memory average over [start, t_end]: node base
+        footprints (this tracker) plus every node's context memory,
+        weighted by each timeline's live span."""
+        t_end = self.loop.now if t_end is None else t_end
+        t0 = self.mem.timeline.points[0][0]
+        span = max(t_end - t0, 1e-12)
+        total = self.mem.timeline.average(t_end) * span
+        for m in self.members:
+            pts = m.node.tracker.timeline.points
+            if pts and t_end > pts[0][0]:
+                total += m.node.tracker.timeline.average(t_end) * (t_end - pts[0][0])
+        return total / span
+
+    def committed_peak_bytes(self) -> float:
+        """Exact peak of the merged committed-memory step function."""
+        return merged_peak(
+            [self.mem.timeline]
+            + [m.node.tracker.timeline for m in self.members]
+        )
+
+    def summary(self, t_end: Optional[float] = None) -> Dict[str, float]:
+        t_end = self.loop.now if t_end is None else t_end
+        # refresh per-node counters from node-local caches/trackers
+        for m in self.members:
+            nc = self.stats.node(m.node.name)
+            if m.node.code_cache is not None:
+                nc.cache_hits = m.node.code_cache.hits
+                nc.cache_misses = m.node.code_cache.misses
+            pts = m.node.tracker.timeline.points
+            if pts:
+                nc.committed_avg_bytes = m.node.tracker.timeline.average(t_end)
+        out = self.stats.summary()
+        out.update({
+            "nodes_avg": self.node_count_timeline.average(t_end),
+            "nodes_peak": self.node_count_timeline.peak(),
+            "committed_avg_mb": self.committed_avg_bytes(t_end) / 1024**2,
+            "committed_peak_mb": self.committed_peak_bytes() / 1024**2,
+        })
+        return out

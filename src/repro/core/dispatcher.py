@@ -11,7 +11,7 @@ import itertools
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
-from repro.core.coldstart import ColdStartProfile
+from repro.core.coldstart import CodeCache, ColdStartProfile
 from repro.core.dag import COMM, COMPUTE, SUBGRAPH, Composition, Edge, Vertex
 from repro.core.engines import EngineSet, Task
 from repro.core.http import IDEMPOTENT_METHODS, HttpRequest
@@ -73,6 +73,7 @@ class Dispatcher:
         hedge_after_s: float = 0.0,   # 0 = hedging off
         hedge_min_instances: int = 4,
         cache_miss_rate: float = 0.0,  # fraction of requests loading from disk
+        code_cache: Optional["CodeCache"] = None,  # per-node residency model
     ):
         self.loop = loop
         self.engines = engines
@@ -82,10 +83,30 @@ class Dispatcher:
         self.hedge_after_s = hedge_after_s
         self.hedge_min_instances = hedge_min_instances
         self.cache_miss_rate = cache_miss_rate
+        self.code_cache = code_cache
         self._ids = itertools.count()
         self.completed_count = 0
+        self.failed_count = 0
         self.active: Dict[int, InvocationRun] = {}
         self.rng_seq = itertools.count()
+
+    # ----------------------------------------------------- control signals
+    @property
+    def outstanding(self) -> int:
+        """Invocations admitted but not yet completed/failed."""
+        return len(self.active)
+
+    def queue_delay_s(self) -> float:
+        """Worst queue-wait EWMA across engine types: how long work sits
+        before a slot serves it. The elastic control plane's scale-up
+        signal (queue growth precedes latency SLO violations). An engine
+        kind's EWMA counts only while that kind has queued work - a stale
+        EWMA after a drained burst must not keep triggering scale-ups."""
+        q = self.engines.queue_lengths()
+        return max(
+            (self.engines.queue_delay_ewma[k] for k, n in q.items() if n > 0),
+            default=0.0,
+        )
 
     # ------------------------------------------------------------------
     def invoke(
@@ -206,7 +227,9 @@ class Dispatcher:
         v = vr.vertex
         kind = COMM if v.kind == COMM else COMPUTE
         cached = True
-        if self.cache_miss_rate > 0:
+        if kind == COMPUTE and self.code_cache is not None:
+            cached = self.code_cache.touch(v.function)
+        elif self.cache_miss_rate > 0:
             cached = (next(self.rng_seq) % 1_000_000) / 1_000_000 >= self.cache_miss_rate
         task = Task(
             kind=kind,
@@ -308,6 +331,7 @@ class Dispatcher:
         if inv.failed:
             return
         inv.failed = reason
+        self.failed_count += 1
         inv.t_end = self.loop.now
         self.active.pop(inv.inv_id, None)
         # release whatever is still held

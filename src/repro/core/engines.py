@@ -74,6 +74,7 @@ class EngineSlot:
         if self.kind == COMM and self.inflight >= self.max_inflight:
             return
         task = q.popleft()
+        self.node.note_queue_delay(self.kind, self.node.loop.now - task.enqueue_t)
         if self.kind == COMPUTE:
             self._serve_compute(task)
         else:
@@ -213,6 +214,10 @@ class EngineSet:
         self.busy_s = {COMPUTE: 0.0, COMM: 0.0}
         self._arrivals = {COMPUTE: 0, COMM: 0}
         self.inflight_tasks: set = set()
+        # EWMA of time tasks sat queued before a slot picked them up - the
+        # signal the elastic control plane scales on (Dirigent-style)
+        self.queue_delay_ewma = {COMPUTE: 0.0, COMM: 0.0}
+        self._qdelay_alpha = 0.2
 
     # ------------------------------------------------------------------
     def queue(self, kind: str) -> deque:
@@ -230,6 +235,12 @@ class EngineSet:
 
     def stats_busy(self, kind: str, seconds: float):
         self.busy_s[kind] += seconds
+
+    def note_queue_delay(self, kind: str, delay_s: float):
+        a = self._qdelay_alpha
+        self.queue_delay_ewma[kind] = (
+            (1 - a) * self.queue_delay_ewma[kind] + a * max(0.0, delay_s)
+        )
 
     # ----------------------------------------------------- controller API
     def counts(self) -> Dict[str, int]:

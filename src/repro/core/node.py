@@ -9,7 +9,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Callable, Dict, Optional
 
-from repro.core.coldstart import ColdStartProfile
+from repro.core.coldstart import CodeCache, ColdStartProfile
 from repro.core.context import MemoryTracker
 from repro.core.controller import PIController
 from repro.core.dag import Composition
@@ -38,6 +38,8 @@ class WorkerNode:
         max_retries: int = 2,
         hedge_after_s: float = 0.0,
         cache_miss_rate: float = 0.0,
+        code_cache_entries: int = 0,   # >0 -> model per-node code residency
+        base_bytes: int = 0,           # node runtime/OS footprint while up
         seed: int = 0,
         name: str = "node0",
     ):
@@ -62,6 +64,9 @@ class WorkerNode:
             interval_s=controller_interval_s,
             enabled=controller_enabled,
         )
+        self.code_cache: Optional[CodeCache] = (
+            CodeCache(code_cache_entries) if code_cache_entries > 0 else None
+        )
         self.dispatcher = Dispatcher(
             self.loop,
             self.engines,
@@ -70,7 +75,10 @@ class WorkerNode:
             max_retries=max_retries,
             hedge_after_s=hedge_after_s,
             cache_miss_rate=cache_miss_rate,
+            code_cache=self.code_cache,
         )
+        self.num_slots = num_slots
+        self.base_bytes = base_bytes
         self.latency = LatencyStats()
         self.failed_count = 0
         self.alive = True
@@ -123,6 +131,23 @@ class WorkerNode:
                 for inst in vr.instances:
                     inst.done = True  # suppress straggling completions
             self.dispatcher._fail(inv, "node_failure")
+
+    # ------------------------------------------------- control-plane API
+    @property
+    def outstanding(self) -> int:
+        """Invocations admitted to this node but not yet finished."""
+        return self.dispatcher.outstanding
+
+    def queue_delay_s(self) -> float:
+        return self.dispatcher.queue_delay_s()
+
+    def warm_fraction(self, fn_names) -> float:
+        """Fraction of ``fn_names`` resident in this node's RAM code cache
+        (1.0 when residency is not modeled: a shared-registry node is
+        always as warm as the global RAM cache)."""
+        if self.code_cache is None:
+            return 1.0
+        return self.code_cache.warm_fraction(fn_names)
 
     @property
     def committed_avg_bytes(self) -> float:

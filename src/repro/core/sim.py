@@ -74,13 +74,18 @@ class Timeline:
         self.points.append((t, value))
 
     def average(self, t_end: Optional[float] = None) -> float:
+        """Time-weighted average over [first point, t_end]. Points recorded
+        after ``t_end`` are excluded (a run may drain stragglers past the
+        measurement window; they must not inflate the window's average)."""
         if not self.points:
             return 0.0
         pts = self.points
         t_end = t_end if t_end is not None else pts[-1][0]
         total = 0.0
         for (t0, v), (t1, _) in zip(pts, pts[1:]):
-            total += v * (t1 - t0)
+            if t0 >= t_end:
+                break
+            total += v * (min(t1, t_end) - t0)
         if t_end > pts[-1][0]:
             total += pts[-1][1] * (t_end - pts[-1][0])
         span = t_end - pts[0][0]
@@ -88,3 +93,20 @@ class Timeline:
 
     def peak(self) -> float:
         return max((v for _, v in self.points), default=0.0)
+
+
+def merged_peak(timelines: List["Timeline"]) -> float:
+    """Exact peak of the sum of several committed-value step functions
+    (per-node memory timelines -> cluster-wide peak)."""
+    deltas: List[Tuple[float, float]] = []
+    for tl in timelines:
+        prev = 0.0
+        for t, v in tl.points:
+            deltas.append((t, v - prev))
+            prev = v
+    deltas.sort(key=lambda d: d[0])
+    cur = peak = 0.0
+    for _, d in deltas:
+        cur += d
+        peak = max(peak, cur)
+    return peak

@@ -30,6 +30,7 @@ class TraceFunction:
     context_bytes: int
     burst_period_s: float     # ON/OFF cycle length
     burst_duty: float         # fraction of the period that is ON
+    burst_phase: float = 0.0  # period fraction offsetting the ON window
 
 
 @dataclass
@@ -45,14 +46,23 @@ def generate_functions(
     seed: int = 0,
     total_rate_hz: float = 50.0,
     zipf_s: float = 1.2,
+    burst_period_range: Tuple[float, float] = (20.0, 120.0),
+    burst_duty_range: Tuple[float, float] = (0.2, 0.9),
+    exec_median_s: float = 0.030,
+    stagger_bursts: bool = False,
 ) -> List[TraceFunction]:
+    """``burst_duty_range`` shapes elasticity experiments: low duty means
+    sharp ON/OFF bursts (Fig.-11-style scale-out), the default wide range
+    reproduces the mixed Azure characterization. ``stagger_bursts`` gives
+    each function a random ON-window phase so bursts are not synchronized
+    at t=0 (defaults off to keep existing experiments bit-stable)."""
     rng = np.random.default_rng(seed)
     weights = 1.0 / np.arange(1, n_functions + 1) ** zipf_s
     weights /= weights.sum()
     rng.shuffle(weights)
     fns = []
     for i in range(n_functions):
-        med = float(np.exp(rng.normal(np.log(0.030), 0.8)))  # ~30ms median
+        med = float(np.exp(rng.normal(np.log(exec_median_s), 0.8)))
         med = min(max(med, 0.002), 2.0)
         mem = int(np.exp(rng.normal(np.log(150e6), 0.5)))
         mem = min(max(mem, 16 << 20), 1 << 30)
@@ -63,8 +73,9 @@ def generate_functions(
                 exec_median_s=med,
                 exec_sigma=0.4,
                 context_bytes=mem,
-                burst_period_s=float(rng.uniform(20, 120)),
-                burst_duty=float(rng.uniform(0.2, 0.9)),
+                burst_period_s=float(rng.uniform(*burst_period_range)),
+                burst_duty=float(rng.uniform(*burst_duty_range)),
+                burst_phase=float(rng.uniform()) if stagger_bursts else 0.0,
             )
         )
     return fns
@@ -86,7 +97,7 @@ def generate_events(
         on_rate = f.rate_hz / max(f.burst_duty, 1e-3)
         n = int(min(on_rate * duration_s * 1.5 + 50, 5_000_000))
         ts = np.cumsum(rng.exponential(1.0 / max(on_rate, 1e-9), size=n))
-        phase = (ts % f.burst_period_s) / f.burst_period_s
+        phase = (ts / f.burst_period_s + f.burst_phase) % 1.0
         ts = ts[(phase < f.burst_duty) & (ts < duration_s)]
         exec_s = np.exp(
             rng.normal(np.log(f.exec_median_s), f.exec_sigma, size=ts.size)

@@ -51,3 +51,68 @@ class LatencyStats:
             "p99_ms": self.p99 * 1e3,
             "rel_var_pct": self.relative_variance,
         }
+
+
+# ===========================================================================
+# Control-plane instrumentation (Dirigent-style routing + autoscaling)
+# ===========================================================================
+@dataclass
+class NodeCounters:
+    """Per-node routing/cache/memory counters the control plane exports."""
+
+    name: str
+    routed: int = 0            # invocations this node received
+    affinity_routed: int = 0   # ...of which via code-cache affinity
+    cache_hits: int = 0
+    cache_misses: int = 0
+    committed_avg_bytes: float = 0.0
+
+    @property
+    def cache_hit_rate(self) -> float:
+        total = self.cache_hits + self.cache_misses
+        return self.cache_hits / total if total else 0.0
+
+    def row(self) -> Dict[str, float]:
+        return {
+            "node": self.name,
+            "routed": self.routed,
+            "affinity_routed": self.affinity_routed,
+            "cache_hit_rate": self.cache_hit_rate,
+            "committed_avg_mb": self.committed_avg_bytes / 1024**2,
+        }
+
+
+@dataclass
+class RoutingStats:
+    """Cluster-wide routing-decision and scaling-event counters."""
+
+    affinity_hits: int = 0     # routed to a node with warm code cache
+    spillover: int = 0         # load-aware fallback (power-of-two-choices)
+    scale_ups: int = 0
+    scale_downs: int = 0
+    drains: int = 0            # nodes that drained in-flight work first
+    per_node: Dict[str, NodeCounters] = field(default_factory=dict)
+
+    def node(self, name: str) -> NodeCounters:
+        if name not in self.per_node:
+            self.per_node[name] = NodeCounters(name)
+        return self.per_node[name]
+
+    def record_route(self, node_name: str, affinity: bool):
+        nc = self.node(node_name)
+        nc.routed += 1
+        if affinity:
+            nc.affinity_routed += 1
+            self.affinity_hits += 1
+        else:
+            self.spillover += 1
+
+    def summary(self) -> Dict[str, float]:
+        total = self.affinity_hits + self.spillover
+        return {
+            "routed": total,
+            "affinity_hit_rate": self.affinity_hits / total if total else 0.0,
+            "scale_ups": self.scale_ups,
+            "scale_downs": self.scale_downs,
+            "drains": self.drains,
+        }

@@ -1,0 +1,97 @@
+"""Deterministic stand-in for ``hypothesis`` so the property-test tier
+collects and runs without the dependency.
+
+Re-exports the real ``hypothesis`` API when it is installed. Otherwise
+provides a seeded mini driver covering the subset this repo uses:
+
+  * ``strategies.integers(lo, hi)`` / ``sampled_from(seq)`` /
+    ``lists(elem, min_size=, max_size=)`` / ``booleans()`` /
+    ``floats(lo, hi)``
+  * ``@given(*strategies, **strategies)`` - runs the test body
+    ``max_examples`` times with values drawn from a fixed-seed RNG
+    (reproducible across runs and machines by construction);
+  * ``@settings(max_examples=N, deadline=...)`` - only ``max_examples``
+    is honored; other knobs are accepted and ignored.
+
+The shim intentionally has no shrinking: a failing example prints its
+drawn values via the assertion context, which is enough for this repo's
+small strategy spaces.
+"""
+from __future__ import annotations
+
+try:  # real hypothesis wins when available
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import random
+
+    _DEFAULT_MAX_EXAMPLES = 20
+    _SEED = 0xDA4DE11  # fixed: property runs are deterministic
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng: random.Random):
+            return self._draw(rng)
+
+    class strategies:  # noqa: N801 - mimics the hypothesis module name
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 30):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(seq):
+            pool = list(seq)
+            if not pool:
+                raise ValueError("sampled_from needs a non-empty sequence")
+            return _Strategy(lambda rng: pool[rng.randrange(len(pool))])
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.draw(rng) for _ in range(n)]
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0):
+            return _Strategy(
+                lambda rng: rng.uniform(min_value, max_value)
+            )
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._shim_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_shim_max_examples",
+                            _DEFAULT_MAX_EXAMPLES)
+                rng = random.Random(_SEED)
+                for _ in range(n):
+                    pos = [s.draw(rng) for s in arg_strategies]
+                    drawn = {k: s.draw(rng) for k, s in kw_strategies.items()}
+                    fn(*args, *pos, **kwargs, **drawn)
+
+            # NOT functools.wraps: pytest must see a zero-arg signature,
+            # or it treats the drawn parameters as missing fixtures
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            wrapper.__dict__.update(fn.__dict__)
+            return wrapper
+
+        return deco

@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (
     EventLoop,
@@ -125,6 +125,16 @@ def test_timeline_average():
     tl.record(3.0, 0.0)
     assert tl.average(4.0) == pytest.approx((0 * 1 + 100 * 2 + 0 * 1) / 4.0)
     assert tl.peak() == 100.0
+
+
+def test_timeline_average_truncates_at_t_end():
+    """Points recorded after t_end (stragglers drained past the window)
+    must not leak into the window's average."""
+    tl = Timeline()
+    tl.record(0.0, 100.0)
+    tl.record(50.0, 0.0)
+    assert tl.average(10.0) == pytest.approx(100.0)
+    assert tl.average(100.0) == pytest.approx(50.0)
 
 
 def test_event_loop_determinism():

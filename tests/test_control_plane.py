@@ -1,0 +1,237 @@
+"""Elastic control plane: routing policy, autoscaling, determinism.
+
+Covers the Dirigent-style routing invariants (affinity hit, spillover on
+overload, drain-before-remove), node-pool autoscaling with modeled boot
+delay, and the simulator's headline property: two runs of the same seeded
+workload - daemon ticks, same-timestamp events and all - produce
+byte-identical decision journals and identical final statistics.
+"""
+import numpy as np
+
+from repro.core import (
+    ClusterManager,
+    ColdStartProfile,
+    ControlPlaneConfig,
+    ElasticControlPlane,
+    EventLoop,
+    FunctionRegistry,
+    Item,
+    WorkerNode,
+    composition_functions,
+)
+from repro.core.control_plane import ACTIVE, DRAINING, RETIRED
+from repro.core.trace import generate_events, generate_functions
+from benchmarks.common import single_function_composition
+
+
+def _setup(n_fns=2, exec_s=5e-3, num_slots=4, **cfg_kw):
+    reg = FunctionRegistry()
+    profiles = {}
+    comps = []
+    for i in range(n_fns):
+        name = f"fn{i}"
+        reg.register_function(name, lambda ins: {"out": [Item(1)]})
+        profiles[name] = ColdStartProfile(1e-4, exec_s, 0.0)
+        comps.append(single_function_composition(reg, name))
+    loop = EventLoop()
+
+    def factory(node_name):
+        return WorkerNode(reg, loop=loop, num_slots=num_slots,
+                          profiles=profiles, code_cache_entries=64,
+                          base_bytes=256 << 20, name=node_name)
+
+    cfg = ControlPlaneConfig(
+        node_boot=ColdStartProfile(0.5, 0.0, 0.0), tick_interval_s=0.25,
+        **cfg_kw,
+    )
+    cp = ElasticControlPlane(loop, factory, config=cfg, seed=0, journal=True)
+    cluster = ClusterManager(control_plane=cp)
+    return loop, cp, cluster, comps
+
+
+def test_composition_functions_recurses_subgraphs():
+    from repro.core import Composition
+
+    reg = FunctionRegistry()
+    reg.register_function("inner", lambda ins: {"out": [Item(1)]})
+    sub = single_function_composition(reg, "inner")
+    outer = Composition("outer")
+    s = outer.subgraph("nest", sub)
+    outer.bind_input("x", s["x"])
+    outer.bind_output("out", s["out"])
+    assert composition_functions(outer) == ("inner",)
+
+
+def test_affinity_routes_stick_to_warm_node():
+    loop, cp, cluster, comps = _setup(n_fns=2, min_nodes=2, max_nodes=2)
+    a, b = comps
+    for i in range(6):
+        cluster.invoke_at(0.01 + i * 0.05, a, {"x": [Item(i)]})
+    for i in range(6):
+        cluster.invoke_at(0.02 + i * 0.05, b, {"x": [Item(i)]})
+    cluster.run()
+    # first route per composition is spillover (nothing warm anywhere);
+    # every subsequent one is an affinity hit on the now-warm node
+    assert cp.stats.spillover == 2
+    assert cp.stats.affinity_hits == 10
+    # each composition's requests all landed on one node: max one code-cache
+    # miss per (function, node) pair
+    for node in cp.worker_nodes:
+        assert node.code_cache.misses <= 1
+
+
+def test_spillover_on_overloaded_affinity_node():
+    loop, cp, cluster, comps = _setup(
+        n_fns=1, exec_s=50e-3, num_slots=2,
+        min_nodes=2, max_nodes=2, affinity_overload_factor=2.0,
+    )
+    (a,) = comps
+    # 2 slots * factor 2.0 = 4 outstanding max for affinity routing; the
+    # 50ms service time means a burst of 12 piles up well past that
+    for i in range(12):
+        cluster.invoke_at(i * 1e-4, a, {"x": [Item(i)]})
+    cluster.run()
+    routed = {name: nc.routed for name, nc in cp.stats.per_node.items()}
+    assert len(routed) == 2 and all(v > 0 for v in routed.values()), routed
+    assert cp.stats.spillover > 0
+
+
+def test_scale_up_pays_boot_delay_and_scale_down_reaps_idle():
+    loop, cp, cluster, comps = _setup(
+        n_fns=1, exec_s=20e-3, num_slots=4,
+        min_nodes=1, max_nodes=4,
+        target_outstanding_per_node=6.0, keepalive_s=5.0,
+    )
+    (a,) = comps
+    for i in range(300):
+        cluster.invoke_at(i * (2.0 / 300), a, {"x": [Item(i)]})
+    cluster.run(until=60.0)
+    loop.run()
+
+    assert cp.stats.scale_ups > 0
+    # a booted node takes traffic only after the 0.5s modeled boot delay:
+    # the first pool-growth event cannot precede tick + boot
+    growth = [t for t, n in cp.node_count_timeline.points if n > 1]
+    assert growth and growth[0] >= 0.5
+    assert cp.node_count_timeline.peak() > 1
+    # after the burst + keep-alive window the pool is back at min_nodes
+    assert cp.active_count == 1
+    assert cp.stats.scale_downs > 0
+    # retired nodes released their base memory: committed average well
+    # under always-on peak provisioning (4 nodes * 256MB)
+    assert cp.committed_avg_bytes() < 4 * (256 << 20) * 0.6
+
+
+def test_drain_finishes_inflight_work_before_remove():
+    loop, cp, cluster, comps = _setup(
+        n_fns=1, exec_s=50e-3, num_slots=4, min_nodes=2, max_nodes=2,
+    )
+    (a,) = comps
+    done = []
+    cluster.invoke_at(0.0, a, {"x": [Item(0)]}, on_done=done.append)
+
+    drained = {}
+
+    def do_drain():
+        # the single invocation is still in flight on its routed node
+        busy = [m for m in cp.members if m.outstanding > 0]
+        assert busy, "expected in-flight work at drain time"
+        drained["m"] = busy[0]
+        cp.drain(busy[0].node)
+        assert busy[0].state == DRAINING  # not killed: draining
+
+    loop.at(0.02, do_drain)
+    cluster.run()
+
+    m = drained["m"]
+    assert done and not done[0].failed       # in-flight work completed
+    assert m.state == RETIRED and not m.node.alive
+    assert cp.stats.drains == 1
+    # routing never considers the draining/retired node again
+    assert all(mm.state == ACTIVE for mm in cp.members if mm is not m)
+
+
+def test_min_nodes_never_drained():
+    loop, cp, cluster, comps = _setup(
+        n_fns=1, min_nodes=1, max_nodes=2, keepalive_s=0.5,
+    )
+    (a,) = comps
+    cluster.invoke_at(0.0, a, {"x": [Item(0)]})
+    cluster.run(until=10.0)
+    assert cp.active_count == 1  # idle, but the floor holds
+
+
+def test_failed_node_work_restarts_on_survivor():
+    loop, cp, cluster, comps = _setup(
+        n_fns=2, exec_s=2e-3, min_nodes=2, max_nodes=2,
+    )
+    done = []
+    for i in range(8):
+        cluster.invoke_at(i * 1e-4, comps[i % 2], {"x": [Item(i)]},
+                          on_done=done.append)
+    cluster.fail_node_at(5e-4, 0)
+    cluster.run()
+    ok = [d for d in done if not d.failed]
+    assert len(ok) == 8, f"{len(ok)} ok, restarts={cluster.restarts}"
+    assert cluster.restarts > 0
+    # the dead node is eventually reaped from the pool by the tick
+    assert cp.active_count == 1
+
+
+# ===========================================================================
+# Determinism: byte-identical traces across runs
+# ===========================================================================
+def _seeded_workload_run():
+    """Full stack - trace generator, elastic control plane, daemon ticks,
+    PI controller, same-timestamp arrivals - all from fixed seeds."""
+    fns = generate_functions(10, seed=3, total_rate_hz=40.0)
+    events = generate_events(fns, 20.0, seed=4)
+
+    reg = FunctionRegistry()
+    profiles = {}
+    comps = {}
+    for f in fns:
+        reg.register_function(f.name, lambda ins: {"out": [Item(1)]},
+                              context_bytes=f.context_bytes)
+        profiles[f.name] = ColdStartProfile(3e-4, f.exec_median_s,
+                                            jitter_sigma=f.exec_sigma)
+        comps[f.name] = single_function_composition(reg, f.name)
+    loop = EventLoop()
+
+    def factory(name):
+        return WorkerNode(reg, loop=loop, num_slots=4, profiles=profiles,
+                          code_cache_entries=32, base_bytes=128 << 20,
+                          seed=11, name=name)
+
+    cfg = ControlPlaneConfig(
+        min_nodes=1, max_nodes=4, target_outstanding_per_node=4.0,
+        keepalive_s=5.0, tick_interval_s=0.25,
+        node_boot=ColdStartProfile(0.5, 0.0, 0.1),
+    )
+    cp = ElasticControlPlane(loop, factory, config=cfg, seed=5, journal=True)
+    cluster = ClusterManager(control_plane=cp)
+    for e in events:
+        cluster.invoke_at(e.t, comps[e.fn], {"x": [Item(0)]})
+    # a couple of same-timestamp arrivals: FIFO tie-break must be stable
+    for _ in range(3):
+        cluster.invoke_at(1.0, comps[fns[0].name], {"x": [Item(0)]})
+    cluster.run(until=20.0)
+    loop.run()
+
+    trace = "\n".join(cp.journal).encode()
+    stats = (
+        tuple(sorted(cp.summary().items())),
+        tuple(cp.node_count_timeline.points),
+        tuple(cluster.latency.samples),
+        cluster.failed,
+        len(events),
+    )
+    return trace, stats
+
+
+def test_seeded_workload_is_byte_identical_across_runs():
+    trace1, stats1 = _seeded_workload_run()
+    trace2, stats2 = _seeded_workload_run()
+    assert trace1 == trace2          # byte-identical decision journal
+    assert stats1 == stats2          # identical final stats
+    assert len(trace1) > 0

@@ -1,0 +1,301 @@
+"""Dispatcher property/invariant tests.
+
+Two invariant families:
+
+1. **Context lifecycle** - after any invocation outcome (success, failure,
+   timeout, hedged, retried, node failure), every ``MemoryContext`` the
+   engines/cold-start path created is freed exactly once, the node tracker
+   reads zero committed bytes, and ``completed_count``/``failed_count``/
+   ``active`` are consistent with the number of submissions.
+
+2. **DAG semantics** - over seeded random compositions, dispatcher outputs
+   are identical to a naive sequential reference evaluator implementing
+   the paper's all/each/key edge semantics directly.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, strategies as st
+
+import repro.core.coldstart as coldstart_mod
+import repro.core.engines as engines_mod
+from repro.core import (
+    ColdStartProfile,
+    Composition,
+    FunctionRegistry,
+    HttpRequest,
+    Item,
+    ServiceRegistry,
+    WorkerNode,
+)
+from repro.core.context import MemoryContext
+from repro.core.dag import COMM, COMPUTE, SUBGRAPH
+from repro.core.items import group_by_key
+
+
+# ===========================================================================
+# Context-lifecycle instrumentation
+# ===========================================================================
+@pytest.fixture
+def recorded_contexts(monkeypatch):
+    """Swap MemoryContext for a recording subclass in every module that
+    instantiates contexts; yields the list of created contexts."""
+    created = []
+
+    class Recording(MemoryContext):
+        def __init__(self, *a, **kw):
+            super().__init__(*a, **kw)
+            self.effective_frees = 0
+            created.append(self)
+
+        def free(self):
+            if not self.freed:
+                self.effective_frees += 1
+            super().free()
+
+    monkeypatch.setattr(coldstart_mod, "MemoryContext", Recording)
+    monkeypatch.setattr(engines_mod, "MemoryContext", Recording)
+    return created
+
+
+def _assert_lifecycle(node, created, submitted):
+    d = node.dispatcher
+    assert d.active == {}, "invocations left active after drain"
+    assert d.completed_count + d.failed_count == submitted
+    assert node.tracker.committed == 0
+    assert created, "instrumentation saw no contexts"
+    for ctx in created:
+        assert ctx.freed, "context leaked (never freed)"
+        assert ctx.effective_frees == 1, "context freed more than once"
+    # committed-byte step function never goes negative
+    assert min(v for _, v in node.tracker.timeline.points) >= 0.0
+
+
+def _registry():
+    reg = FunctionRegistry()
+    reg.register_function(
+        "fan", lambda ins: {"out": [Item(j, key=str(j))
+                                    for j in range(int(ins["x"][0].data))]}
+    )
+    reg.register_function(
+        "double", lambda ins: {"out": [Item(i.data * 2, i.key) for i in ins["x"]]}
+    )
+    reg.register_function(
+        "sum", lambda ins: {"out": [Item(sum(i.data for i in ins["x"]))]}
+    )
+    return reg
+
+
+def _chain(timeout_s: float = 60.0):
+    c = Composition("chain")
+    f = c.compute("fan", "fan", inputs=("x",), outputs=("out",))
+    d = c.compute("double", "double", inputs=("x",), outputs=("out",),
+                  timeout_s=timeout_s)
+    s = c.compute("sum", "sum", inputs=("x",), outputs=("out",))
+    c.edge(f["out"], d["x"], "each")
+    c.edge(d["out"], s["x"], "all")
+    c.bind_input("x", f["x"])
+    c.bind_output("result", s["out"])
+    return c
+
+
+def test_contexts_freed_once_on_success(recorded_contexts):
+    node = WorkerNode(_registry(), num_slots=4)
+    done = []
+    for i in range(10):
+        node.invoke(_chain(), {"x": [Item(3)]}, on_done=done.append)
+    node.run()
+    assert len(done) == 10 and all(not r.failed for r in done)
+    _assert_lifecycle(node, recorded_contexts, 10)
+
+
+def test_contexts_freed_once_on_timeout_failure(recorded_contexts):
+    profiles = {"fan": ColdStartProfile(1e-5, 1e-4, 0.0),
+                "double": ColdStartProfile(1e-5, 5e-3, 0.0),
+                "sum": ColdStartProfile(1e-5, 1e-4, 0.0)}
+    node = WorkerNode(_registry(), num_slots=4, profiles=profiles)
+    done = []
+    # double's 5ms exec overruns a 1ms vertex timeout -> invocation fails
+    node.invoke(_chain(timeout_s=1e-3), {"x": [Item(3)]}, on_done=done.append)
+    node.run()
+    assert done and done[0].failed and "timeout" in done[0].failed
+    _assert_lifecycle(node, recorded_contexts, 1)
+
+
+def test_contexts_freed_once_on_comm_retry_then_failure(recorded_contexts):
+    reg = FunctionRegistry()
+    services = ServiceRegistry()
+    c = Composition("bad")
+    h = c.http("call")
+    c.bind_input("request", h["requests"])
+    c.bind_output("resp", h["responses"])
+    node = WorkerNode(reg, services, num_slots=2, max_retries=2)
+    done = []
+    # invalid host -> sanitization failure; GET is idempotent, so the
+    # dispatcher retries max_retries times before failing the invocation
+    node.invoke(c, {"request": [Item(HttpRequest("GET", "http://bad_host!/x"))]},
+                on_done=done.append)
+    node.run()
+    assert done and done[0].failed and "sanitization" in done[0].failed
+    assert node.dispatcher.failed_count == 1
+    # comm failures create no contexts, but the invariants must still hold
+    d = node.dispatcher
+    assert d.active == {} and node.tracker.committed == 0
+    for ctx in recorded_contexts:
+        assert ctx.freed and ctx.effective_frees == 1
+
+
+def test_contexts_freed_once_with_hedging(recorded_contexts):
+    profiles = {"fan": ColdStartProfile(1e-5, 1e-4, 0.0),
+                "double": ColdStartProfile(1e-5, 1e-3, 2.0),  # heavy tail
+                "sum": ColdStartProfile(1e-5, 1e-4, 0.0)}
+    node = WorkerNode(_registry(), num_slots=8, profiles=profiles,
+                      hedge_after_s=2e-3)
+    node.dispatcher.hedge_min_instances = 2
+    done = []
+    for i in range(5):
+        node.invoke(_chain(), {"x": [Item(6)]}, on_done=done.append)
+    node.run()
+    assert len(done) == 5 and all(not r.failed for r in done)
+    assert all(r.outputs["result"][0].data == 2 * sum(range(6)) for r in done)
+    _assert_lifecycle(node, recorded_contexts, 5)
+
+
+def test_contexts_freed_once_on_node_failure(recorded_contexts):
+    profiles = {"fan": ColdStartProfile(1e-4, 1e-3, 0.0),
+                "double": ColdStartProfile(1e-4, 1e-3, 0.0),
+                "sum": ColdStartProfile(1e-4, 1e-3, 0.0)}
+    node = WorkerNode(_registry(), num_slots=2, profiles=profiles)
+    done = []
+    for i in range(6):
+        node.invoke_at(i * 1e-4, _chain(), {"x": [Item(3)]}, on_done=done.append)
+    node.loop.at(1.5e-3, node.fail)
+    node.run()
+    assert len(done) == 6
+    assert any(r.failed and "node_failure" in r.failed for r in done)
+    d = node.dispatcher
+    assert d.active == {} and d.completed_count + d.failed_count == 6
+    assert node.tracker.committed == 0
+    for ctx in recorded_contexts:
+        assert ctx.freed and ctx.effective_frees == 1
+
+
+# ===========================================================================
+# Randomized-DAG fuzz vs a sequential reference evaluator
+# ===========================================================================
+def _fuzz_registry():
+    reg = FunctionRegistry()
+    reg.register_function(
+        "tag_a", lambda ins: {"out": [Item(f"a({it.data})", it.key)
+                                      for it in ins["x"]]}
+    )
+    reg.register_function(
+        "tag_b", lambda ins: {"out": [Item(f"b({it.data})", it.key)
+                                      for it in ins["x"]]}
+    )
+    reg.register_function(
+        "dup", lambda ins: {"out": [Item(f"{it.data}#{i}", f"{it.key}{i}")
+                                    for it in ins["x"] for i in (0, 1)]}
+    )
+    reg.register_function(
+        "count", lambda ins: {"out": [Item(f"n={len(ins['x'])}")]}
+    )
+    return reg
+
+
+FUZZ_FNS = ("tag_a", "tag_b", "dup", "count")
+MODES = ("all", "each", "key")
+
+
+def _random_comp(seed: int):
+    """Random tree-shaped composition: every vertex has input set 'x' with
+    exactly one feed (composition input for roots, one edge otherwise), so
+    delivery order is unambiguous; edge modes drawn from all/each/key."""
+    rng = np.random.default_rng(seed)
+    c = Composition(f"fuzz{seed}")
+    n = int(rng.integers(2, 6))
+    names = []
+    for i in range(n):
+        fn = FUZZ_FNS[int(rng.integers(0, len(FUZZ_FNS)))]
+        v = c.compute(f"v{i}", fn, inputs=("x",), outputs=("out",))
+        if i == 0:
+            c.bind_input("in0", v["x"])
+        else:
+            parent = names[int(rng.integers(0, i))]
+            mode = MODES[int(rng.integers(0, len(MODES)))]
+            c.edge(c.vertices[parent]["out"], v["x"], mode)
+        names.append(f"v{i}")
+    # every leaf becomes a composition output
+    consumed = {e.src.vertex for e in c.edges}
+    for i, name in enumerate(names):
+        if name not in consumed:
+            c.bind_output(f"out_{name}", c.vertices[name]["out"])
+    c.validate()
+    return c
+
+
+def _reference_eval(reg, comp, inputs):
+    """Naive sequential evaluator for the all/each/key semantics."""
+    produced = {}
+    remaining = dict(comp.vertices)
+    # topological sweep (bounded: compositions are validated DAGs)
+    while remaining:
+        progressed = False
+        for name, v in list(remaining.items()):
+            in_edges = comp.in_edges(name)
+            if any(e.src.vertex not in produced for e in in_edges):
+                continue
+            delivered = {s: [] for s in v.inputs}
+            for in_name, port in comp.input_bindings.items():
+                if port.vertex == name:
+                    delivered[port.set_name].extend(inputs.get(in_name, []))
+            fan_mode = None
+            fan_set = None
+            for e in in_edges:
+                delivered[e.dst.set_name].extend(produced[e.src.vertex])
+                if e.mode in ("each", "key"):
+                    fan_mode, fan_set = e.mode, e.dst.set_name
+            fn = reg.get(v.function).fn
+            if fan_mode is None:
+                out = fn(delivered)["out"]
+            else:
+                out = []
+                items = delivered[fan_set]
+                if fan_mode == "each":
+                    groups = [[it] for it in items]
+                else:
+                    groups = [g for _, g in sorted(group_by_key(items).items())]
+                for g in groups:
+                    inst_in = dict(delivered)
+                    inst_in[fan_set] = g
+                    out.extend(fn(inst_in)["out"])
+            produced[name] = out
+            del remaining[name]
+            progressed = True
+        assert progressed, "reference evaluator stuck (not a DAG?)"
+    return {
+        out_name: produced[port.vertex]
+        for out_name, port in comp.output_bindings.items()
+    }
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_random_dag_matches_sequential_reference(seed):
+    reg = _fuzz_registry()
+    comp = _random_comp(seed)
+    inputs = {"in0": [Item(f"d{i}", key=f"k{i % 3}") for i in range(4)]}
+
+    node = WorkerNode(reg, num_slots=4)
+    done = []
+    node.invoke(comp, inputs, on_done=done.append)
+    node.run()
+    assert done and not done[0].failed, done[0].failed if done else "no result"
+
+    want = _reference_eval(reg, comp, inputs)
+    got = done[0].outputs
+    assert set(got) == set(want)
+    for out_name in want:
+        assert [(i.data, i.key) for i in got[out_name]] == \
+               [(i.data, i.key) for i in want[out_name]], out_name
+    assert node.tracker.committed == 0
