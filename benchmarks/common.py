@@ -11,8 +11,11 @@ from __future__ import annotations
 
 import csv
 import io
+import json
+import os
 import sys
 import time
+from contextlib import contextmanager
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -25,6 +28,7 @@ from repro.core import (
     HttpResponse,
     Item,
     ServiceRegistry,
+    ThroughputStats,
     measure,
 )
 
@@ -113,6 +117,47 @@ def calibrate(reg: FunctionRegistry, name: str, inputs, backend="dandelion",
     return _PROFILE_CACHE[key]
 
 
+# ------------------------------------------------- simulator throughput
+# Wall-clock events/sec per benchmark segment, keyed "<bench>/<segment>".
+# Benchmarks record segments with ``track()``; ``emit`` appends the
+# throughput metric to its CSV block and ``write_simperf`` serializes the
+# whole registry to results/bench/BENCH_simperf.json so the perf
+# trajectory is tracked across PRs (and gated in CI).
+PERF: Dict[str, ThroughputStats] = {}
+# per-segment extra fields merged into BENCH_simperf.json (baselines,
+# speedups, window parameters) - benchmarks populate alongside track()
+SIMPERF_EXTRA: Dict[str, dict] = {}
+
+
+@contextmanager
+def track(name: str, events: int):
+    """Measure wall-clock for one simulator segment of ``events`` trace
+    events; records a ThroughputStats row under ``name``."""
+    t0 = time.perf_counter()
+    yield
+    PERF[name] = ThroughputStats(
+        name=name, events=int(events), wall_s=time.perf_counter() - t0
+    )
+
+
+def bench_perf(prefix: str) -> Dict[str, ThroughputStats]:
+    return {k: v for k, v in PERF.items() if k.split("/")[0] == prefix}
+
+
+def write_simperf(outdir: str = "results/bench",
+                  extra: Optional[Dict[str, dict]] = None) -> str:
+    os.makedirs(outdir, exist_ok=True)
+    path = os.path.join(outdir, "BENCH_simperf.json")
+    payload = {k: v.row() for k, v in sorted(PERF.items())}
+    for source in (SIMPERF_EXTRA, extra or {}):
+        for k, v in source.items():
+            payload.setdefault(k, {}).update(v)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
 # --------------------------------------------------------------------- CSV
 def emit(name: str, rows: List[dict], out_stream=None) -> None:
     out = out_stream or sys.stdout
@@ -126,6 +171,9 @@ def emit(name: str, rows: List[dict], out_stream=None) -> None:
     for r in rows:
         w.writerow({k: (f"{v:.6g}" if isinstance(v, float) else v)
                     for k, v in r.items()})
+    for ts in bench_perf(name).values():
+        print(f"# perf {ts.name}: {ts.events} events in {ts.wall_s:.3f}s "
+              f"= {ts.events_per_sec:.0f} events/sec", file=out)
     out.flush()
 
 

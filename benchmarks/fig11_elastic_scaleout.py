@@ -39,7 +39,7 @@ from repro.core import (
 )
 from repro.core.sim import merged_peak
 from repro.core.trace import generate_events, generate_functions
-from benchmarks.common import emit, single_function_composition
+from benchmarks.common import emit, single_function_composition, track
 
 MAX_NODES = 6
 NODE_SLOTS = 8
@@ -111,10 +111,10 @@ def run():
         for i in range(MAX_NODES)
     ]
     static = ClusterManager(nodes, loop)
-    for e in events:
-        static.invoke_at(e.t, comps[e.fn], {"x": [Item(0)]})
-    static.run(until=duration_s)
-    loop.run()  # drain stragglers past the window
+    with track("fig11/static", len(events)):
+        static.invoke_stream((e.t, comps[e.fn], {"x": [Item(0)]}) for e in events)
+        static.run(until=duration_s)
+        loop.run()  # drain stragglers past the window
     static_avg_mb = (
         MAX_NODES * NODE_BASE_BYTES
         + sum(n.tracker.timeline.average(duration_s) for n in nodes)
@@ -146,10 +146,10 @@ def run():
     )
     cp = ElasticControlPlane(loop, factory, config=cfg, seed=2)
     elastic = ClusterManager(control_plane=cp)
-    for e in events:
-        elastic.invoke_at(e.t, comps[e.fn], {"x": [Item(0)]})
-    elastic.run(until=duration_s)
-    loop.run()
+    with track("fig11/elastic", len(events)):
+        elastic.invoke_stream((e.t, comps[e.fn], {"x": [Item(0)]}) for e in events)
+        elastic.run(until=duration_s)
+        loop.run()
     summ = cp.summary(duration_s)
     rows.append(_row("elastic", len(events), elastic.latency,
                      summ["committed_avg_mb"], summ["committed_peak_mb"],
@@ -175,7 +175,7 @@ def run():
 
 
 def main():
-    emit("fig11_elastic_scaleout", run())
+    emit("fig11", run())
 
 
 if __name__ == "__main__":

@@ -24,7 +24,7 @@ from benchmarks import (
     roofline,
     table1_coldstart,
 )
-from benchmarks.common import emit
+from benchmarks.common import emit, write_simperf
 
 BENCHES = {
     "table1": ("Table 1: cold-start phase breakdown", table1_coldstart.run),
@@ -63,6 +63,9 @@ def main() -> None:
             failed.append(name)
             print(f"# {name} FAILED: {type(e).__name__}: {e}")
             traceback.print_exc()
+    # simulator throughput trajectory (events/sec per tracked segment)
+    perf_path = write_simperf(args.outdir)
+    print(f"# simulator throughput written to {perf_path}")
     if failed:
         print(f"\nFAILED benchmarks: {failed}")
         raise SystemExit(1)

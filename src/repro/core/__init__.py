@@ -32,11 +32,16 @@ from repro.core.http import (
     ServiceRegistry,
     sanitize,
 )
-from repro.core.items import Item, ItemSet, SetDict, make_set
+from repro.core.items import Item, ItemSet, SetDict, fingerprint_sets, make_set
 from repro.core.node import WorkerNode
-from repro.core.registry import FunctionRegistry
-from repro.core.sim import EventLoop, Timeline
-from repro.core.tracing import LatencyStats, NodeCounters, RoutingStats
+from repro.core.registry import FunctionRegistry, PayloadMemo
+from repro.core.sim import EventLoop, Timeline, merged_peak
+from repro.core.tracing import (
+    LatencyStats,
+    NodeCounters,
+    RoutingStats,
+    ThroughputStats,
+)
 
 __all__ = [
     "BACKENDS",
@@ -62,8 +67,10 @@ __all__ = [
     "MemoryContext",
     "MemoryTracker",
     "NodeCounters",
+    "PayloadMemo",
     "PortRef",
     "RoutingStats",
+    "ThroughputStats",
     "SanitizationError",
     "ServiceRegistry",
     "SetDict",
@@ -73,8 +80,10 @@ __all__ = [
     "WorkerNode",
     "cold_start",
     "composition_functions",
+    "fingerprint_sets",
     "make_set",
     "measure",
+    "merged_peak",
     "profile_from_measurement",
     "sanitize",
 ]

@@ -119,6 +119,14 @@ class ClusterManager:
                   on_done=None):
         self.loop.at(t, lambda: self.invoke(comp, inputs, on_done))
 
+    def invoke_stream(self, arrivals, on_done=None):
+        """Bulk trace injection: time-sorted ``(t, comp, inputs)`` triples
+        replayed through one heap cursor (see EventLoop.at_stream)."""
+        self.loop.at_stream(
+            ((t, (comp, inputs)) for t, comp, inputs in arrivals),
+            lambda ci: self.invoke(ci[0], ci[1], on_done),
+        )
+
     # ------------------------------------------------------ elasticity
     def add_node(self, node: WorkerNode):
         if self.control_plane is not None:
@@ -237,6 +245,12 @@ class KeepWarmPlatform:
     def request_at(self, t: float, fn_name: str,
                    on_done: Optional[Callable[[float], None]] = None):
         self.loop.at(t, lambda: self._request(fn_name, on_done))
+
+    def request_stream(self, arrivals,
+                       on_done: Optional[Callable[[float], None]] = None):
+        """Bulk trace injection: time-sorted ``(t, fn_name)`` pairs
+        replayed through one heap cursor (see EventLoop.at_stream)."""
+        self.loop.at_stream(arrivals, lambda fn_name: self._request(fn_name, on_done))
 
     def _request(self, fn_name: str, on_done):
         if not self._reaper_started and self.hot_ratio is None:

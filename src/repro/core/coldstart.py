@@ -103,14 +103,38 @@ def cold_start(
     backend: str = "dandelion",
     cached: bool = True,
     tracker=None,
+    modeled: bool = False,
 ) -> Tuple[MemoryContext, ColdStartBreakdown, Callable[[], SetDict]]:
     """Run the real cold-start path. Returns (context, phases, run_fn).
 
     ``run_fn()`` executes the function body against the prepared context
     and writes outputs back into it (timed separately by the caller).
+
+    ``modeled=True`` is the simulator fast path for tasks whose durations
+    come from a calibrated ``ColdStartProfile``: the phase breakdown is
+    not consumed, so the real disk read / AOT deserialize / compile work
+    is skipped (memory is committed by size, page-identical), and the
+    payload executes through the registry's content-addressed memo —
+    each distinct ``(fn, input digest)`` body runs once, repeated trace
+    events reuse the outputs. Dataflow and committed-memory accounting
+    stay byte-identical with the measured path.
     """
     cf = registry.get(name)
     bd = ColdStartBreakdown()
+
+    if modeled:
+        ctx = MemoryContext(capacity=cf.context_bytes, tracker=tracker)
+        ctx.load_code_size(registry.code_size(name))
+        for set_name, items in inputs.items():
+            ctx.write_set(set_name, items)
+
+        def run_modeled() -> SetDict:
+            out = registry.run_payload(name, ctx.inputs)
+            for sname, items in out.items():
+                ctx.write_set(sname, items, into="outputs")
+            return out
+
+        return ctx, bd, run_modeled
 
     t0 = time.perf_counter()
     desc = _marshal(inputs)

@@ -21,12 +21,19 @@ PAGE = 4096
 
 
 class MemoryTracker:
-    """Node-wide committed-memory accounting over virtual time."""
+    """Node-wide committed-memory accounting over virtual time.
 
-    def __init__(self, loop=None):
+    Trackers chain: a ``parent`` tracker (e.g. the control plane's
+    cluster-wide aggregate) observes every commit/release of its children
+    as it happens, so the exact merged step function — and therefore the
+    cluster peak — is maintained streaming in O(1) per event instead of
+    re-merging per-node point lists after the fact."""
+
+    def __init__(self, loop=None, parent: "Optional[MemoryTracker]" = None):
         self.loop = loop
         self.committed = 0
         self.timeline = Timeline()
+        self.parent = parent
         self._record()
 
     def _record(self):
@@ -36,10 +43,25 @@ class MemoryTracker:
     def commit(self, nbytes: int):
         self.committed += nbytes
         self._record()
+        if self.parent is not None:
+            self.parent.commit(nbytes)
 
     def release(self, nbytes: int):
         self.committed -= nbytes
         self._record()
+        if self.parent is not None:
+            self.parent.release(nbytes)
+
+    def attach_parent(self, parent: "MemoryTracker"):
+        """Start mirroring into ``parent``, folding in anything already
+        committed so the aggregate stays exact."""
+        if self.parent is parent:
+            return
+        if self.parent is not None:
+            raise ValueError("tracker already has a parent")
+        self.parent = parent
+        if self.committed:
+            parent.commit(self.committed)
 
 
 @dataclass
@@ -67,6 +89,12 @@ class MemoryContext:
     def load_code(self, code: bytes) -> None:
         self.code_bytes = len(code)
         self._commit_for(len(code))
+
+    def load_code_size(self, nbytes: int) -> None:
+        """Commit code memory by size only (modeled fast path: no real
+        disk read / memcpy, identical page accounting)."""
+        self.code_bytes = nbytes
+        self._commit_for(nbytes)
 
     def write_set(self, name: str, items: ItemSet, into: str = "inputs") -> None:
         store = self.inputs if into == "inputs" else self.outputs

@@ -36,7 +36,7 @@ from repro.core.coldstart import ColdStartProfile
 from repro.core.context import MemoryTracker
 from repro.core.dag import COMPUTE, SUBGRAPH, Composition
 from repro.core.node import WorkerNode
-from repro.core.sim import EventLoop, Timeline, merged_peak
+from repro.core.sim import EventLoop, Timeline
 from repro.core.tracing import RoutingStats
 
 BOOTING, ACTIVE, DRAINING, RETIRED = "booting", "active", "draining", "retired"
@@ -119,7 +119,11 @@ class ElasticControlPlane:
             raise ValueError("control plane needs min_nodes >= 1")
         self.rng = np.random.default_rng(seed)
         self.stats = RoutingStats()
-        self.mem = MemoryTracker(loop)          # node base (runtime/OS) bytes
+        # cluster-wide committed-memory aggregate: every node tracker and
+        # the base-bytes tracker mirror into it, so cluster average/peak
+        # are O(1) streaming reads instead of per-query timeline merges
+        self.cluster_mem = MemoryTracker(loop)
+        self.mem = MemoryTracker(loop, parent=self.cluster_mem)  # node base bytes
         self.node_count_timeline = Timeline()
         self.members: List[ManagedNode] = []
         self._by_node: Dict[int, ManagedNode] = {}
@@ -153,6 +157,7 @@ class ElasticControlPlane:
         node = self.factory(name)
         if node.loop is not self.loop:
             raise ValueError(f"{name}: factory must build nodes on the shared loop")
+        node.tracker.attach_parent(self.cluster_mem)
         m = ManagedNode(node=node, boot_t=self.loop.now)
         self.members.append(m)
         self._by_node[id(node)] = m
@@ -178,6 +183,7 @@ class ElasticControlPlane:
 
     def adopt(self, node: WorkerNode):
         """Register an externally created node as active (manual add)."""
+        node.tracker.attach_parent(self.cluster_mem)
         m = ManagedNode(node=node, boot_t=self.loop.now)
         self.members.append(m)
         self._by_node[id(node)] = m
@@ -333,24 +339,16 @@ class ElasticControlPlane:
     # ------------------------------------------------------- accounting
     def committed_avg_bytes(self, t_end: Optional[float] = None) -> float:
         """Cluster committed-memory average over [start, t_end]: node base
-        footprints (this tracker) plus every node's context memory,
-        weighted by each timeline's live span."""
+        footprints plus every node's context memory. O(1): every member
+        tracker mirrors into ``cluster_mem`` as events happen."""
         t_end = self.loop.now if t_end is None else t_end
-        t0 = self.mem.timeline.points[0][0]
-        span = max(t_end - t0, 1e-12)
-        total = self.mem.timeline.average(t_end) * span
-        for m in self.members:
-            pts = m.node.tracker.timeline.points
-            if pts and t_end > pts[0][0]:
-                total += m.node.tracker.timeline.average(t_end) * (t_end - pts[0][0])
-        return total / span
+        return self.cluster_mem.timeline.average(t_end)
 
     def committed_peak_bytes(self) -> float:
-        """Exact peak of the merged committed-memory step function."""
-        return merged_peak(
-            [self.mem.timeline]
-            + [m.node.tracker.timeline for m in self.members]
-        )
+        """Exact peak of the merged committed-memory step function,
+        maintained streaming by the aggregate tracker (equals
+        ``merged_peak`` over the member timelines)."""
+        return self.cluster_mem.timeline.peak()
 
     def summary(self, t_end: Optional[float] = None) -> Dict[str, float]:
         t_end = self.loop.now if t_end is None else t_end

@@ -230,7 +230,10 @@ class Dispatcher:
         if kind == COMPUTE and self.code_cache is not None:
             cached = self.code_cache.touch(v.function)
         elif self.cache_miss_rate > 0:
-            cached = (next(self.rng_seq) % 1_000_000) / 1_000_000 >= self.cache_miss_rate
+            # deterministic low-discrepancy (golden-ratio Weyl) sequence:
+            # misses interleave uniformly across the run instead of the
+            # old counter scheme's front-loaded block of misses
+            cached = (next(self.rng_seq) * 0.6180339887498949) % 1.0 >= self.cache_miss_rate
         task = Task(
             kind=kind,
             fn_name=v.function if kind == COMPUTE else "http",

@@ -7,13 +7,21 @@ core; the control plane re-types slots between "compute" and "comm"
 cost of protocol handling occupies the slot, while I/O wait does not -
 one slot multiplexes up to ``max_inflight`` green tasks.
 
-Service durations: every task actually executes its payload (real outputs
-flow through the DAG); *virtual-time* durations come from the task's
-calibrated ColdStartProfile when present, else from the real measured
-execution. This keeps thousand-RPS sweeps faithful AND deterministic.
+Service durations: every distinct task body actually executes its payload
+(real outputs flow through the DAG); *virtual-time* durations come from
+the task's calibrated ColdStartProfile when present, else from the real
+measured execution. Profiled tasks take the modeled fast path: payload
+execution is content-addressed-memoized (repro.core.registry.PayloadMemo)
+and no real disk/compile work runs, keeping full-trace sweeps faithful
+AND deterministic AND cheap.
+
+Scheduling is event-driven via per-kind idle free-lists: a submit hands
+the task straight to an idle slot of that kind, and a finishing slot pulls
+the next queued task directly - no O(slots) rescan per event.
 """
 from __future__ import annotations
 
+import heapq
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -23,8 +31,8 @@ import numpy as np
 
 from repro.core.coldstart import ColdStartProfile, cold_start
 from repro.core.context import MemoryContext, MemoryTracker
-from repro.core.http import SanitizationError, http_function
-from repro.core.items import SetDict, sets_bytes
+from repro.core.http import MIN_COMM_CPU_S, SanitizationError, http_function
+from repro.core.items import SetDict
 from repro.core.registry import FunctionRegistry
 from repro.core.sim import EventLoop
 
@@ -58,27 +66,7 @@ class EngineSlot:
         self.retype_to: Optional[str] = None
         self.inflight = 0           # comm green tasks in flight
         self.max_inflight = 128
-
-    # ------------------------------------------------------------------
-    def maybe_dispatch(self):
-        if self.busy:
-            return
-        if self.retype_to and self.inflight == 0:
-            self.kind = self.retype_to
-            self.retype_to = None
-        q = self.node.queue(self.kind)
-        while q and q[0].cancelled:
-            q.popleft()
-        if not q:
-            return
-        if self.kind == COMM and self.inflight >= self.max_inflight:
-            return
-        task = q.popleft()
-        self.node.note_queue_delay(self.kind, self.node.loop.now - task.enqueue_t)
-        if self.kind == COMPUTE:
-            self._serve_compute(task)
-        else:
-            self._serve_comm(task)
+        self.in_idle = False        # present (live) in node's idle list
 
     # ------------------------------------------------------------------
     def _serve_compute(self, task: Task):
@@ -93,6 +81,7 @@ class EngineSlot:
             setup_s = 0.0
             outputs, exec_s = node.execute_payload(task, ctx)
         else:
+            modeled = task.profile is not None
             ctx, bd, run = cold_start(
                 node.registry,
                 task.fn_name,
@@ -100,10 +89,11 @@ class EngineSlot:
                 backend=node.backend,
                 cached=task.cached,
                 tracker=node.tracker,
+                modeled=modeled,
             )
-            if task.profile is not None:
+            if modeled:
                 setup_s, exec_s = task.profile.sample(node.rng)
-                outputs = run()  # real outputs, modeled duration
+                outputs = run()  # real (memoized) outputs, modeled duration
             else:
                 t0 = time.perf_counter()
                 outputs = run()
@@ -130,8 +120,7 @@ class EngineSlot:
                         ctx.write_set(name, items, into="outputs")
                 if task.on_complete:
                     task.on_complete(task, outputs, ctx)
-            self.maybe_dispatch()
-            node.poke()
+            node.slot_available(self)
 
         loop.after(total, finish)
 
@@ -143,14 +132,14 @@ class EngineSlot:
         self.inflight += 1
         node.inflight_tasks.add(id(task))
 
-        t0 = time.perf_counter()
         try:
-            outputs, io_s, idempotent = http_function(node.services, task.inputs)
+            outputs, io_s, cpu_s, idempotent = http_function(
+                node.services, task.inputs
+            )
             err = None
         except SanitizationError as e:
-            outputs, io_s, idempotent = {}, 0.0, True
+            outputs, io_s, cpu_s, idempotent = {}, 0.0, MIN_COMM_CPU_S, True
             err = f"sanitization: {e}"
-        cpu_s = max(time.perf_counter() - t0 - 0.0, 2e-6)
         task.meta["idempotent"] = idempotent
         node.stats_busy(COMM, cpu_s)
 
@@ -158,8 +147,7 @@ class EngineSlot:
             # cooperative: slot is free for the next green task while this
             # one waits on I/O
             self.busy = False
-            self.maybe_dispatch()
-            node.poke()
+            node.slot_available(self)
 
         def io_done():
             self.inflight -= 1
@@ -177,15 +165,18 @@ class EngineSlot:
                     ctx.write_set(name, items, into="outputs")
                 if task.on_complete:
                     task.on_complete(task, outputs, ctx)
-            self.maybe_dispatch()
-            node.poke()
+            node.slot_available(self)
 
         loop.after(cpu_s, cpu_done)
         loop.after(cpu_s + io_s, io_done)
 
 
 class EngineSet:
-    """All engine slots of one worker node + the two typed queues."""
+    """All engine slots of one worker node + the two typed queues.
+
+    Idle-slot scheduling: per-kind free-lists give O(1) submit->slot
+    handoff and finish->next-task pull, with incremental slot-kind
+    counters for the controller (no per-tick O(slots) scans)."""
 
     def __init__(
         self,
@@ -208,9 +199,18 @@ class EngineSet:
         self.compute_q: deque = deque()
         self.comm_q: deque = deque()
         self.slots: List[EngineSlot] = []
+        # per-kind idle free-lists: min-heaps of slot ids, so dispatch
+        # always picks the lowest-numbered idle slot (the same assignment
+        # the old full scan produced, kept for bit-stable benchmarks)
+        self._idle: Dict[str, List[int]] = {COMPUTE: [], COMM: []}
+        self._counts: Dict[str, int] = {COMPUTE: 0, COMM: 0}
         for i in range(num_slots):
             kind = COMM if i < comm_slots else COMPUTE
-            self.slots.append(EngineSlot(self, i, kind))
+            s = EngineSlot(self, i, kind)
+            self.slots.append(s)
+            self._counts[kind] += 1
+            s.in_idle = True
+            self._idle[kind].append(i)
         self.busy_s = {COMPUTE: 0.0, COMM: 0.0}
         self._arrivals = {COMPUTE: 0, COMM: 0}
         self.inflight_tasks: set = set()
@@ -227,11 +227,67 @@ class EngineSet:
         task.enqueue_t = self.loop.now
         self.queue(task.kind).append(task)
         self._arrivals[task.kind] += 1
-        self.poke()
+        self._dispatch(task.kind)
+
+    # ----------------------------------------------------- idle-slot core
+    def _pop_idle(self, kind: str) -> Optional[EngineSlot]:
+        idle = self._idle[kind]
+        while idle:
+            s = self.slots[heapq.heappop(idle)]
+            if not s.in_idle or s.kind != kind or s.busy:
+                continue  # stale entry left behind by a slot retype
+            s.in_idle = False
+            return s
+        return None
+
+    def _serve(self, slot: EngineSlot, kind: str, task: Task):
+        self.note_queue_delay(kind, self.loop.now - task.enqueue_t)
+        if kind == COMPUTE:
+            slot._serve_compute(task)
+        else:
+            slot._serve_comm(task)
+
+    def _dispatch(self, kind: str):
+        """Pair queued tasks of ``kind`` with idle slots (FIFO on both)."""
+        q = self.queue(kind)
+        while q:
+            if q[0].cancelled:
+                q.popleft()
+                continue
+            slot = self._pop_idle(kind)
+            if slot is None:
+                return
+            self._serve(slot, kind, q.popleft())
+
+    def slot_available(self, slot: EngineSlot):
+        """A slot finished (or freed its CPU phase): apply any pending
+        retype, then pull the next queued task directly, else go idle."""
+        if slot.busy:
+            return
+        if slot.retype_to and slot.inflight == 0:
+            # the slot may sit in its old kind's free-list (idle comm slot
+            # with I/O in flight); logically remove that entry or the
+            # in_idle guard below would keep the slot out of the new pool
+            slot.in_idle = False
+            slot.kind = slot.retype_to
+            slot.retype_to = None
+            self._counts[slot.kind] += 1
+        kind = slot.kind
+        if kind == COMM and slot.inflight >= slot.max_inflight:
+            return
+        q = self.queue(kind)
+        while q and q[0].cancelled:
+            q.popleft()
+        if q:
+            self._serve(slot, kind, q.popleft())
+        elif not slot.in_idle:
+            slot.in_idle = True
+            heapq.heappush(self._idle[kind], slot.slot_id)
 
     def poke(self):
-        for s in self.slots:
-            s.maybe_dispatch()
+        """Re-sync queues with idle slots (O(1) when queues are empty)."""
+        self._dispatch(COMPUTE)
+        self._dispatch(COMM)
 
     def stats_busy(self, kind: str, seconds: float):
         self.busy_s[kind] += seconds
@@ -244,26 +300,29 @@ class EngineSet:
 
     # ----------------------------------------------------- controller API
     def counts(self) -> Dict[str, int]:
-        return {
-            COMPUTE: sum(1 for s in self.slots if s.kind == COMPUTE and not s.retype_to),
-            COMM: sum(1 for s in self.slots if s.kind == COMM and not s.retype_to),
-        }
+        """Slots per kind (excluding retype-pending), maintained
+        incrementally - the controller ticks every 30ms."""
+        return dict(self._counts)
 
     def queue_lengths(self) -> Dict[str, int]:
         return {COMPUTE: len(self.compute_q), COMM: len(self.comm_q)}
 
     def retype_one(self, frm: str, to: str) -> bool:
         """Move one slot between engine types (finishes current task first)."""
-        counts = self.counts()
-        if counts[frm] <= 1:
+        if self._counts[frm] <= 1:
             return False
         for s in self.slots:
             if s.kind == frm and not s.retype_to:
+                self._counts[frm] -= 1
                 if s.busy or s.inflight:
                     s.retype_to = to
                 else:
+                    # idle slot: logically leave the old free-list (its
+                    # entry goes stale), flip kind, join the new pool
+                    s.in_idle = False
                     s.kind = to
-                self.poke()
+                    self._counts[to] += 1
+                    self.slot_available(s)
                 return True
         return False
 
@@ -274,7 +333,7 @@ class EngineSet:
             ctx.write_set(name, items)
         if task.profile is not None:
             _, exec_s = task.profile.sample(self.rng)
-            outputs = cf.fn(task.inputs)
+            outputs = self.registry.run_payload(task.fn_name, task.inputs)
         else:
             t0 = time.perf_counter()
             outputs = cf.fn(task.inputs)

@@ -7,6 +7,7 @@ used by 'key'-mode edge grouping, exactly as in the paper (SS4.1).
 """
 from __future__ import annotations
 
+import hashlib
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
@@ -52,3 +53,53 @@ def group_by_key(s: ItemSet) -> Dict[str, ItemSet]:
     for it in s:
         out.setdefault(it.key, []).append(it)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Content fingerprints (payload-execution memoization, see registry.PayloadMemo)
+# ---------------------------------------------------------------------------
+def _data_bytes(d: Any) -> Optional[bytes]:
+    """Canonical byte encoding of item data for hashing, or None when the
+    payload is an opaque object we cannot fingerprint safely (memoization
+    is then skipped for the whole invocation)."""
+    if isinstance(d, (bytes, bytearray)):
+        return b"b:" + bytes(d)
+    if isinstance(d, str):
+        return b"s:" + d.encode()
+    if isinstance(d, bool):
+        return b"B:%d" % d
+    if isinstance(d, int):
+        return b"i:" + repr(d).encode()
+    if isinstance(d, float):
+        return b"f:" + repr(d).encode()
+    if d is None:
+        return b"n:"
+    if isinstance(d, np.ndarray):
+        if d.dtype.hasobject:
+            return None  # tobytes() would hash PyObject pointers
+        return b"a:" + str(d.dtype).encode() + repr(d.shape).encode() + d.tobytes()
+    return None
+
+
+def fingerprint_sets(d: SetDict) -> Optional[str]:
+    """Content digest of a SetDict: set names, item order, keys, and data.
+    Returns None (caller must execute for real) if any item holds data we
+    cannot canonically encode — arbitrary python objects, device arrays.
+    Every field is length-framed before hashing so payload bytes can never
+    masquerade as field boundaries (no collisions by concatenation)."""
+    h = hashlib.blake2b(digest_size=16)
+
+    def field(tag: bytes, payload: bytes):
+        h.update(tag)
+        h.update(len(payload).to_bytes(8, "little"))
+        h.update(payload)
+
+    for name in sorted(d):
+        field(b"\x00", name.encode())
+        for it in d[name]:
+            enc = _data_bytes(it.data)
+            if enc is None:
+                return None
+            field(b"\x01", it.key.encode())
+            field(b"\x02", enc)
+    return h.hexdigest()

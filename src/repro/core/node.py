@@ -112,6 +112,15 @@ class WorkerNode:
     ):
         self.loop.at(t, lambda: self.invoke(comp, inputs, on_done))
 
+    def invoke_stream(self, arrivals, on_done=None):
+        """Bulk trace injection: ``arrivals`` is a time-sorted iterable of
+        ``(t, composition, inputs)``; replayed through a single heap
+        cursor (EventLoop.at_stream) instead of one entry per event."""
+        self.loop.at_stream(
+            ((t, (comp, inputs)) for t, comp, inputs in arrivals),
+            lambda ci: self.invoke(ci[0], ci[1], on_done),
+        )
+
     def run(self, until: Optional[float] = None):
         self.loop.run(until=until)
 

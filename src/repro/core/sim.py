@@ -6,12 +6,21 @@ compute functions actually run; see repro.core.coldstart) or from seeded
 latency models (remote HTTP services). Virtual time makes thousand-RPS
 load sweeps reproducible and fast on a single-core container while
 preserving true queueing behaviour.
+
+Fast-path notes (the full-scale Azure-trace runs):
+
+  * ``EventLoop.at_stream`` injects a pre-sorted arrival stream through a
+    single cursor entry on the heap instead of one heap entry per future
+    event, so a million-event trace costs O(1) heap residency.
+  * ``Timeline`` keeps O(1) streaming aggregates (time-weighted integral,
+    peak, last value) and coalesces equal consecutive values, so
+    ``average()``/``peak()`` no longer re-walk unbounded point lists.
 """
 from __future__ import annotations
 
 import heapq
 import itertools
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, Iterable, List, Optional, Tuple
 
 
 class EventLoop:
@@ -36,6 +45,36 @@ class EventLoop:
 
     def after(self, delay: float, fn: Callable[[], None], daemon: bool = False) -> None:
         self.at(self._now + max(0.0, delay), fn, daemon=daemon)
+
+    def at_stream(
+        self,
+        arrivals: Iterable[Tuple[float, object]],
+        fn: Callable[[object], None],
+        daemon: bool = False,
+    ) -> None:
+        """Bulk trace injection: replay a time-sorted ``(t, payload)``
+        stream by keeping a single cursor event on the heap. Each firing
+        calls ``fn(payload)`` and schedules the next arrival, so replaying
+        a full production trace does not pre-load one heap entry (plus one
+        closure) per future event."""
+        it = iter(arrivals)
+        pending = next(it, None)
+        if pending is None:
+            return
+
+        def fire():
+            nonlocal pending
+            t, payload = pending
+            fn(payload)
+            pending = next(it, None)
+            if pending is not None:
+                if pending[0] < t - 1e-12:
+                    raise ValueError(
+                        f"arrival stream not sorted: {pending[0]} after {t}"
+                    )
+                self.at(max(pending[0], self._now), fire, daemon=daemon)
+
+        self.at(pending[0], fire, daemon=daemon)
 
     def step(self) -> bool:
         if not self._heap:
@@ -65,39 +104,100 @@ class EventLoop:
 
 
 class Timeline:
-    """Append-only (t, value) series with step-function integration."""
+    """Step-function series with O(1) streaming aggregates.
 
-    def __init__(self):
+    ``record(t, value)`` maintains a running time-weighted integral, peak,
+    and last value, so ``average()``/``peak()`` are O(1) instead of
+    re-walking an unbounded point list. The point list itself is still
+    kept (``keep_points=True``, the default) with equal consecutive values
+    coalesced — consumers that need the full step function (``merged_peak``,
+    journaling tests) read ``points``; at full trace scale a tracker can
+    opt out with ``keep_points=False``.
+
+    ``average(t_end)`` with a historical ``t_end`` (before the last
+    recorded point — e.g. a measurement window queried after draining
+    stragglers) falls back to an O(n) walk over the retained points; query
+    the window before draining, or keep points, to stay on the fast path.
+    """
+
+    __slots__ = ("points", "keep_points", "_t0", "_last_t", "_last_v",
+                 "_integral", "_peak")
+
+    def __init__(self, keep_points: bool = True):
         self.points: List[Tuple[float, float]] = []
+        self.keep_points = keep_points
+        self._t0: Optional[float] = None
+        self._last_t = 0.0
+        self._last_v = 0.0
+        self._integral = 0.0
+        self._peak = 0.0
 
     def record(self, t: float, value: float):
-        self.points.append((t, value))
+        if self._t0 is None:
+            self._t0 = t
+        else:
+            self._integral += self._last_v * (t - self._last_t)
+        if self.keep_points and (not self.points or self.points[-1][1] != value):
+            self.points.append((t, value))
+        self._last_t = t
+        self._last_v = value
+        if value > self._peak:
+            self._peak = value
+
+    # ------------------------------------------------------ aggregates
+    @property
+    def t0(self) -> Optional[float]:
+        return self._t0
+
+    @property
+    def last_t(self) -> float:
+        return self._last_t
+
+    @property
+    def last_value(self) -> float:
+        return self._last_v
 
     def average(self, t_end: Optional[float] = None) -> float:
         """Time-weighted average over [first point, t_end]. Points recorded
         after ``t_end`` are excluded (a run may drain stragglers past the
         measurement window; they must not inflate the window's average)."""
-        if not self.points:
+        if self._t0 is None:
             return 0.0
-        pts = self.points
-        t_end = t_end if t_end is not None else pts[-1][0]
+        t_end = t_end if t_end is not None else self._last_t
+        if t_end >= self._last_t:
+            total = self._integral + self._last_v * (t_end - self._last_t)
+        else:
+            total = self._scan_integral(t_end)
+        span = t_end - self._t0
+        return total / span if span > 0 else self._last_v
+
+    def _scan_integral(self, t_end: float) -> float:
+        """O(n) reference walk for historical windows (t_end < last_t)."""
+        if not self.keep_points:
+            raise ValueError(
+                "historical average() needs keep_points=True "
+                "(or query the window before recording past it)"
+            )
         total = 0.0
+        pts = self.points
         for (t0, v), (t1, _) in zip(pts, pts[1:]):
             if t0 >= t_end:
                 break
             total += v * (min(t1, t_end) - t0)
-        if t_end > pts[-1][0]:
-            total += pts[-1][1] * (t_end - pts[-1][0])
-        span = t_end - pts[0][0]
-        return total / span if span > 0 else pts[-1][1]
+        else:
+            if pts and t_end > pts[-1][0]:
+                total += pts[-1][1] * (t_end - pts[-1][0])
+        return total
 
     def peak(self) -> float:
-        return max((v for _, v in self.points), default=0.0)
+        return self._peak
 
 
 def merged_peak(timelines: List["Timeline"]) -> float:
     """Exact peak of the sum of several committed-value step functions
-    (per-node memory timelines -> cluster-wide peak)."""
+    (per-node memory timelines -> cluster-wide peak). Requires the member
+    timelines to retain points; an aggregate parent ``MemoryTracker``
+    (see repro.core.context) gives the same answer in O(1)."""
     deltas: List[Tuple[float, float]] = []
     for tl in timelines:
         prev = 0.0

@@ -107,3 +107,10 @@ def generate_events(
         )
     events.sort(key=lambda e: e.t)
     return events
+
+
+def replay(loop, events: List[TraceEvent], fn) -> None:
+    """Inject a sorted trace through a single arrival cursor: one heap
+    entry outstanding at a time instead of one per future event, so
+    full-scale traces cost O(1) heap residency (EventLoop.at_stream)."""
+    loop.at_stream(((e.t, e) for e in events), fn)

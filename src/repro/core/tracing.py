@@ -54,6 +54,31 @@ class LatencyStats:
 
 
 # ===========================================================================
+# Simulator wall-clock throughput (the BENCH_simperf.json trajectory)
+# ===========================================================================
+@dataclass
+class ThroughputStats:
+    """Events processed per wall-clock second for one simulator segment
+    (trace events injected vs. real seconds spent in the event loop)."""
+
+    name: str
+    events: int = 0
+    wall_s: float = 0.0
+
+    @property
+    def events_per_sec(self) -> float:
+        return self.events / self.wall_s if self.wall_s > 0 else 0.0
+
+    def row(self) -> Dict[str, float]:
+        return {
+            "name": self.name,
+            "events": self.events,
+            "wall_s": self.wall_s,
+            "events_per_sec": self.events_per_sec,
+        }
+
+
+# ===========================================================================
 # Control-plane instrumentation (Dirigent-style routing + autoscaling)
 # ===========================================================================
 @dataclass

@@ -1,0 +1,448 @@
+"""Simulator fast-path invariants (PR 2).
+
+Four families:
+
+1. **Payload memoization** — randomized-DAG outputs are byte-identical
+   with the content-addressed payload memo on vs off, repeated identical
+   invocations actually hit the cache, and unfingerprintable or
+   ``memoize=False`` functions always execute for real.
+2. **Streaming Timeline** — O(1) ``average``/``peak`` equal O(n)
+   reference implementations over randomized step functions, including
+   historical-window queries; the control plane's aggregate tracker peak
+   equals ``merged_peak`` over the member timelines.
+3. **Idle-slot scheduler** — FIFO-per-kind dispatch order is preserved,
+   counts() stays consistent with a brute-force scan across retypes.
+4. **Determinism** — comm-task virtual durations (modeled protocol CPU)
+   are identical run to run; bulk ``at_stream`` injection fires the same
+   arrivals at the same virtual times as per-event scheduling.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core import (
+    ColdStartProfile,
+    Composition,
+    EventLoop,
+    FunctionRegistry,
+    HttpRequest,
+    Item,
+    ServiceRegistry,
+    Timeline,
+    WorkerNode,
+    merged_peak,
+)
+from repro.core.context import MemoryTracker
+from repro.core.engines import COMM, COMPUTE, EngineSet, Task
+from repro.core.items import fingerprint_sets
+
+
+# ===========================================================================
+# 1. Payload memoization
+# ===========================================================================
+def _fuzz_registry(memoize: bool):
+    reg = FunctionRegistry(memoize=memoize)
+    reg.register_function(
+        "tag", lambda ins: {"out": [Item(f"t({it.data})", it.key)
+                                    for it in ins["x"]]}
+    )
+    reg.register_function(
+        "dup", lambda ins: {"out": [Item(f"{it.data}#{i}", f"{it.key}{i}")
+                                    for it in ins["x"] for i in (0, 1)]}
+    )
+    reg.register_function(
+        "count", lambda ins: {"out": [Item(f"n={len(ins['x'])}")]}
+    )
+    return reg
+
+
+FUZZ_FNS = ("tag", "dup", "count")
+MODES = ("all", "each", "key")
+
+
+def _random_comp(seed: int):
+    rng = np.random.default_rng(seed)
+    c = Composition(f"memo{seed}")
+    n = int(rng.integers(2, 6))
+    names = []
+    for i in range(n):
+        fn = FUZZ_FNS[int(rng.integers(0, len(FUZZ_FNS)))]
+        v = c.compute(f"v{i}", fn, inputs=("x",), outputs=("out",))
+        if i == 0:
+            c.bind_input("in0", v["x"])
+        else:
+            parent = names[int(rng.integers(0, i))]
+            mode = MODES[int(rng.integers(0, len(MODES)))]
+            c.edge(c.vertices[parent]["out"], v["x"], mode)
+        names.append(f"v{i}")
+    consumed = {e.src.vertex for e in c.edges}
+    for name in names:
+        if name not in consumed:
+            c.bind_output(f"out_{name}", c.vertices[name]["out"])
+    c.validate()
+    return c
+
+
+PROFILES = {f: ColdStartProfile(1e-4, 1e-3, 0.0) for f in FUZZ_FNS}
+
+
+def _run_dag(memoize: bool, seed: int):
+    reg = _fuzz_registry(memoize)
+    comp = _random_comp(seed)
+    node = WorkerNode(reg, num_slots=4, profiles=PROFILES)
+    done = []
+    inputs = {"in0": [Item(f"d{i}", key=f"k{i % 3}") for i in range(4)]}
+    for _ in range(3):  # repeated invocations exercise cache hits
+        node.invoke(comp, inputs, on_done=done.append)
+    node.run()
+    assert len(done) == 3 and all(not r.failed for r in done)
+    outs = [
+        {name: [(i.data, i.key) for i in items]
+         for name, items in r.outputs.items()}
+        for r in done
+    ]
+    lat = list(node.latency.samples)
+    return outs, lat, reg
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_random_dag_identical_with_memo_on_vs_off(seed):
+    outs_on, lat_on, reg_on = _run_dag(True, seed)
+    outs_off, lat_off, reg_off = _run_dag(False, seed)
+    assert outs_on == outs_off
+    assert lat_on == lat_off            # virtual time untouched by memo
+    assert outs_on[0] == outs_on[1] == outs_on[2]
+    assert reg_on.memo is not None and reg_on.memo.hits > 0
+    assert reg_off.memo is None
+
+
+def test_memo_hits_on_repeated_inputs_and_outputs_are_isolated():
+    reg = _fuzz_registry(True)
+    out1 = reg.run_payload("tag", {"x": [Item("a", "k")]})
+    out2 = reg.run_payload("tag", {"x": [Item("a", "k")]})
+    assert reg.memo.misses == 1 and reg.memo.hits == 1
+    assert [(i.data, i.key) for i in out1["out"]] == \
+           [(i.data, i.key) for i in out2["out"]]
+    # mutating a returned set list must not corrupt the cached entry
+    out2["out"].append(Item("junk"))
+    out3 = reg.run_payload("tag", {"x": [Item("a", "k")]})
+    assert [(i.data, i.key) for i in out3["out"]] == \
+           [(i.data, i.key) for i in out1["out"]]
+
+
+def test_memo_skips_unfingerprintable_and_opted_out_functions():
+    reg = FunctionRegistry()
+    calls = []
+    reg.register_function(
+        "impure", lambda ins: (calls.append(1), {"out": [Item(len(calls))]})[1],
+        memoize=False,
+    )
+    for _ in range(3):
+        reg.run_payload("impure", {"x": [Item(1)]})
+    assert len(calls) == 3 and reg.memo.skips == 3
+    # opaque python objects cannot be fingerprinted -> always execute
+    assert fingerprint_sets({"x": [Item(object())]}) is None
+    assert fingerprint_sets({"x": [Item(HttpRequest("GET", "http://h/x"))]}) is None
+    reg.register_function("tag", lambda ins: {"out": [Item(1)]})
+    before = reg.memo.skips
+    reg.run_payload("tag", {"x": [Item(object())]})
+    assert reg.memo.skips == before + 1
+
+
+def test_fingerprint_distinguishes_content_keys_and_sets():
+    base = {"x": [Item(b"abc", "k")]}
+    assert fingerprint_sets(base) == fingerprint_sets({"x": [Item(b"abc", "k")]})
+    assert fingerprint_sets(base) != fingerprint_sets({"x": [Item(b"abd", "k")]})
+    assert fingerprint_sets(base) != fingerprint_sets({"x": [Item(b"abc", "j")]})
+    assert fingerprint_sets(base) != fingerprint_sets({"y": [Item(b"abc", "k")]})
+    a = fingerprint_sets({"x": [Item(np.arange(4, dtype=np.int32))]})
+    b = fingerprint_sets({"x": [Item(np.arange(4, dtype=np.int64))]})
+    assert a is not None and b is not None and a != b
+
+
+# ===========================================================================
+# 2. Streaming Timeline vs O(n) references
+# ===========================================================================
+def _ref_average(points, t_end):
+    """The pre-streaming O(n) implementation, verbatim."""
+    if not points:
+        return 0.0
+    pts = points
+    t_end = t_end if t_end is not None else pts[-1][0]
+    total = 0.0
+    for (t0, v), (t1, _) in zip(pts, pts[1:]):
+        if t0 >= t_end:
+            break
+        total += v * (min(t1, t_end) - t0)
+    if t_end > pts[-1][0]:
+        total += pts[-1][1] * (t_end - pts[-1][0])
+    span = t_end - pts[0][0]
+    return total / span if span > 0 else pts[-1][1]
+
+
+@given(seed=st.integers(0, 100_000))
+@settings(max_examples=30, deadline=None)
+def test_streaming_timeline_matches_reference(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 40))
+    ts = np.cumsum(rng.exponential(1.0, size=n))
+    vs = rng.integers(0, 5, size=n).astype(float)  # ints force coalescing
+    tl = Timeline()
+    raw = []
+    for t, v in zip(ts, vs):
+        tl.record(float(t), float(v))
+        raw.append((float(t), float(v)))
+    assert tl.peak() == pytest.approx(max(vs))
+    for t_end in (None, float(ts[-1]), float(ts[-1]) + 1.7,
+                  float(ts[0]), float(ts[n // 2]) + 0.1):
+        assert tl.average(t_end) == pytest.approx(
+            _ref_average(raw, t_end), rel=1e-9, abs=1e-12
+        ), f"t_end={t_end}"
+
+
+@given(seed=st.integers(0, 100_000))
+@settings(max_examples=20, deadline=None)
+def test_merged_peak_matches_brute_force_and_aggregate_tracker(seed):
+    rng = np.random.default_rng(seed)
+    loop = EventLoop()
+    agg = MemoryTracker(loop)
+    trackers = [MemoryTracker(loop, parent=agg) for _ in range(3)]
+    # randomized interleaved commit/release schedule over virtual time
+    outstanding = [[] for _ in trackers]
+    for step in range(int(rng.integers(5, 40))):
+        loop._now += float(rng.exponential(1.0))
+        i = int(rng.integers(0, len(trackers)))
+        if outstanding[i] and rng.random() < 0.4:
+            trackers[i].release(outstanding[i].pop())
+        else:
+            nb = int(rng.integers(1, 100)) * 4096
+            outstanding[i].append(nb)
+            trackers[i].commit(nb)
+    want = merged_peak([t.timeline for t in trackers])
+    assert agg.timeline.peak() == pytest.approx(want)
+    # brute force: evaluate the summed step function at every breakpoint
+    times = sorted({t for tr in trackers for t, _ in tr.timeline.points})
+    def value_at(tl, q):
+        v = 0.0
+        for t, val in tl.points:
+            if t <= q:
+                v = val
+            else:
+                break
+        return v
+    brute = max(
+        (sum(value_at(tr.timeline, q) for tr in trackers) for q in times),
+        default=0.0,
+    )
+    assert want == pytest.approx(brute)
+
+
+def test_timeline_historical_query_without_points_raises():
+    tl = Timeline(keep_points=False)
+    tl.record(0.0, 1.0)
+    tl.record(10.0, 0.0)
+    assert tl.points == []
+    assert tl.average(20.0) == pytest.approx(0.5)   # forward: O(1) path
+    with pytest.raises(ValueError):
+        tl.average(5.0)                              # historical needs points
+
+
+# ===========================================================================
+# 3. Idle-slot scheduler: FIFO per kind + incremental counters
+# ===========================================================================
+def _engine_set(num_slots=3, comm_slots=1):
+    reg = FunctionRegistry()
+    reg.register_function("f", lambda ins: {"out": [Item(1)]})
+    loop = EventLoop()
+    services = ServiceRegistry()
+    services.register("svc.local", lambda req: __import__(
+        "repro.core.http", fromlist=["HttpResponse"]).HttpResponse(200, b"ok"))
+    es = EngineSet(loop, reg, services, num_slots=num_slots,
+                   comm_slots=comm_slots)
+    return loop, es
+
+
+def test_idle_slot_scheduler_preserves_fifo_per_kind():
+    loop, es = _engine_set(num_slots=3, comm_slots=1)
+    prof = ColdStartProfile(0.0, 1e-3, 0.0)   # equal durations
+    started, completed = [], []
+    orig_serve = es._serve
+
+    def record_serve(slot, kind, task):
+        started.append(task.meta["i"])
+        orig_serve(slot, kind, task)
+
+    es._serve = record_serve
+    for i in range(12):
+        es.submit(Task(
+            kind=COMPUTE, fn_name="f", inputs={"x": [Item(i)]}, profile=prof,
+            meta={"i": i},
+            on_complete=lambda t, o, c: (completed.append(t.meta["i"]),
+                                         c.free()),
+        ))
+    loop.run()
+    assert started == list(range(12))     # dispatch strictly FIFO
+    assert completed == list(range(12))   # equal service times: FIFO out
+    # comm kind: FIFO among comm tasks, independent of the compute queue
+    started.clear()
+    req = Item(HttpRequest("GET", "http://svc.local/x"))
+    for i in range(12, 18):
+        es.submit(Task(
+            kind=COMM, fn_name="http", inputs={"requests": [req]},
+            meta={"i": i}, on_complete=lambda t, o, c: c.free(),
+        ))
+    loop.run()
+    assert started == list(range(12, 18))
+
+
+def test_counts_incremental_matches_brute_force_across_retypes():
+    def brute(es):
+        return {
+            COMPUTE: sum(1 for s in es.slots
+                         if s.kind == COMPUTE and not s.retype_to),
+            COMM: sum(1 for s in es.slots
+                      if s.kind == COMM and not s.retype_to),
+        }
+
+    loop, es = _engine_set(num_slots=6, comm_slots=2)
+    assert es.counts() == brute(es) == {COMPUTE: 4, COMM: 2}
+    prof = ColdStartProfile(0.0, 5e-3, 0.0)
+    for i in range(4):  # occupy all compute slots
+        es.submit(Task(kind=COMPUTE, fn_name="f", inputs={"x": [Item(i)]},
+                       profile=prof,
+                       on_complete=lambda t, o, c: c.free()))
+    assert es.retype_one(COMPUTE, COMM)   # busy slot -> pending retype
+    assert es.counts() == brute(es) == {COMPUTE: 3, COMM: 2}
+    assert es.retype_one(COMM, COMPUTE)   # idle slot -> immediate
+    assert es.counts() == brute(es) == {COMPUTE: 4, COMM: 1}
+    loop.run()                            # pending retype applies at finish
+    assert es.counts() == brute(es) == {COMPUTE: 4, COMM: 2}
+    # floor: never drop an engine type below one slot
+    assert not es.retype_one(COMM, COMPUTE) or es.counts()[COMM] >= 1
+
+
+def test_deferred_retype_of_multiplexing_comm_slot_rejoins_pool():
+    """Regression: a comm slot that went idle while I/O was still in
+    flight carries in_idle=True when a pending retype applies at io_done;
+    the slot must re-enter the NEW kind's free-list (not be lost)."""
+    loop, es = _engine_set(num_slots=4, comm_slots=2)
+    req = Item(HttpRequest("GET", "http://svc.local/x"))
+    es.submit(Task(kind=COMM, fn_name="http", inputs={"requests": [req]},
+                   on_complete=lambda t, o, c: c.free()))
+    # after the CPU phase the serving comm slot is idle with inflight=1
+    loop.run(until=1e-4)
+    busy_comm = [s for s in es.slots if s.kind == COMM and s.inflight > 0]
+    assert busy_comm and busy_comm[0].in_idle
+    assert es.retype_one(COMM, COMPUTE)
+    assert busy_comm[0].retype_to == COMPUTE   # deferred: I/O in flight
+    loop.run()                                  # io_done applies the retype
+    assert busy_comm[0].kind == COMPUTE and busy_comm[0].retype_to is None
+    # the retyped slot must actually serve compute work again
+    prof = ColdStartProfile(0.0, 1e-3, 0.0)
+    served = []
+    for i in range(3):  # 2 original compute slots + the retyped one
+        es.submit(Task(kind=COMPUTE, fn_name="f", inputs={"x": [Item(i)]},
+                       profile=prof, meta={"i": i},
+                       on_complete=lambda t, o, c: (served.append(t.meta["i"]),
+                                                    c.free())))
+    assert len(es.compute_q) == 0   # all three dispatched immediately
+    loop.run()
+    assert sorted(served) == [0, 1, 2]
+
+
+def test_retyped_idle_slot_serves_new_kind_immediately():
+    loop, es = _engine_set(num_slots=3, comm_slots=2)
+    prof = ColdStartProfile(0.0, 1e-3, 0.0)
+    done = []
+    # 2 compute tasks but only 1 compute slot: second waits queued
+    for i in range(2):
+        es.submit(Task(kind=COMPUTE, fn_name="f", inputs={"x": [Item(i)]},
+                       profile=prof,
+                       on_complete=lambda t, o, c: (done.append(t.meta.get("i", 0)),
+                                                    c.free()),
+                       meta={"i": i}))
+    assert len(es.compute_q) == 1
+    # immediate retype of the idle comm slot drains the queue now
+    assert es.retype_one(COMM, COMPUTE)
+    assert len(es.compute_q) == 0
+    loop.run()
+    assert len(done) == 2
+
+
+# ===========================================================================
+# 4. Determinism: modeled comm CPU + bulk stream injection
+# ===========================================================================
+def _comm_run():
+    from repro.core.http import HttpResponse
+
+    services = ServiceRegistry()
+    services.register("svc.local", lambda req: HttpResponse(200, b"x" * 512))
+    reg = FunctionRegistry()
+    c = Composition("h")
+    h = c.http("call")
+    c.bind_input("request", h["requests"])
+    c.bind_output("resp", h["responses"])
+    node = WorkerNode(reg, services, num_slots=2)
+    done = []
+    for i in range(20):
+        node.invoke_at(i * 1e-3, c,
+                       {"request": [Item(HttpRequest("GET", "http://svc.local/x"))]},
+                       on_done=done.append)
+    node.run()
+    assert len(done) == 20 and all(not r.failed for r in done)
+    return [r.latency for r in done], node.engines.busy_s[COMM]
+
+
+def test_comm_virtual_durations_deterministic_across_runs():
+    lat1, busy1 = _comm_run()
+    lat2, busy2 = _comm_run()
+    assert lat1 == lat2          # byte-identical, not just approximately
+    assert busy1 == busy2
+    assert all(l > 0 for l in lat1)
+
+
+def test_at_stream_equals_per_event_scheduling():
+    def run(stream: bool):
+        loop = EventLoop()
+        fired = []
+        arrivals = [(0.5 + 0.25 * i, i) for i in range(10)]
+        if stream:
+            loop.at_stream(iter(arrivals), lambda i: fired.append((loop.now, i)))
+        else:
+            for t, i in arrivals:
+                loop.at(t, lambda i=i: fired.append((loop.now, i)))
+        loop.run()
+        return fired
+
+    assert run(True) == run(False)
+
+
+def test_trace_replay_equals_per_event_scheduling():
+    from repro.core.trace import generate_events, generate_functions, replay
+
+    fns = generate_functions(5, seed=7, total_rate_hz=20.0)
+    events = generate_events(fns, 3.0, seed=8)
+    assert events
+
+    def run(stream: bool):
+        loop = EventLoop()
+        fired = []
+        if stream:
+            replay(loop, events, lambda e: fired.append((loop.now, e.fn, e.exec_s)))
+        else:
+            for e in events:
+                loop.at(e.t, lambda e=e: fired.append((loop.now, e.fn, e.exec_s)))
+        loop.run()
+        return fired
+
+    assert run(True) == run(False)
+
+
+def test_at_stream_rejects_unsorted_and_handles_empty():
+    loop = EventLoop()
+    loop.at_stream(iter([]), lambda p: None)   # no-op
+    loop.at_stream(iter([(1.0, "a"), (0.5, "b")]), lambda p: None)
+    with pytest.raises(ValueError):
+        loop.run()
