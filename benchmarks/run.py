@@ -21,6 +21,7 @@ from benchmarks import (
     fig9_query,
     fig10_azure_trace,
     fig11_elastic_scaleout,
+    fig12_crossnode,
     roofline,
     table1_coldstart,
 )
@@ -36,6 +37,8 @@ BENCHES = {
     "fig10": ("Fig 1/10: Azure-trace committed memory", fig10_azure_trace.run),
     "fig11": ("Fig 11: elastic scale-out vs static cluster",
               fig11_elastic_scaleout.run),
+    "fig12": ("Fig 12: cross-node composition scheduling trade-off",
+              fig12_crossnode.run),
     "roofline": ("Roofline: dry-run three-term table", roofline.run),
 }
 

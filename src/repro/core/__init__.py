@@ -6,12 +6,13 @@ platform communication functions, with all/each/key edge fan-out.
 Execution system (SS5-6): memory contexts, dispatcher, compute/comm
 engines, PI control plane, cold-start backends, cluster manager.
 """
-from repro.core.cluster import ClusterManager, KeepWarmPlatform
+from repro.core.cluster import ClusterManager, CrossNodePlacer, KeepWarmPlatform
 from repro.core.coldstart import (
     BACKENDS,
     CodeCache,
     ColdStartBreakdown,
     ColdStartProfile,
+    TransferProfile,
     cold_start,
     measure,
     profile_from_measurement,
@@ -38,9 +39,11 @@ from repro.core.registry import FunctionRegistry, PayloadMemo
 from repro.core.sim import EventLoop, Timeline, merged_peak
 from repro.core.tracing import (
     LatencyStats,
+    LinkCounters,
     NodeCounters,
     RoutingStats,
     ThroughputStats,
+    TransferStats,
 )
 
 __all__ = [
@@ -51,6 +54,7 @@ __all__ = [
     "ColdStartProfile",
     "Composition",
     "ControlPlaneConfig",
+    "CrossNodePlacer",
     "ElasticControlPlane",
     "Dispatcher",
     "Edge",
@@ -64,6 +68,7 @@ __all__ = [
     "ItemSet",
     "KeepWarmPlatform",
     "LatencyStats",
+    "LinkCounters",
     "MemoryContext",
     "MemoryTracker",
     "NodeCounters",
@@ -76,6 +81,8 @@ __all__ = [
     "SetDict",
     "Task",
     "Timeline",
+    "TransferProfile",
+    "TransferStats",
     "Vertex",
     "WorkerNode",
     "cold_start",

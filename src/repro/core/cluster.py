@@ -1,10 +1,25 @@
-"""Cluster manager + keep-warm baseline platform.
+"""Cluster manager + cross-node placement + keep-warm baseline platform.
 
 ``ClusterManager`` plays Dirigent's role (SS5): it load-balances
 composition invocations over Dandelion worker nodes, injects/handles node
 failures (pure functions are idempotent, so lost invocations restart on a
 surviving node), supports elastic node add/remove, and aggregates memory /
 latency accounting.
+
+``CrossNodePlacer`` is the cross-node composition scheduler (default-off,
+enabled with ``crossnode=True`` or the ``CROSSNODE=1`` environment knob):
+the dispatcher of the routed *home* node exports each ready DAG vertex
+back to the cluster layer, which may place it on a different node —
+vertex-granular elasticity instead of whole-request pinning. Placement
+policy is ``ElasticControlPlane.place_vertex`` (code-cache affinity +
+p2c, journaled) when a control plane owns the pool, else a deterministic
+warmest-then-least-loaded scan over the static node list. Every edge
+whose producer executed on a different node than the consumer is charged
+exactly one modeled transfer task (``engines.TRANSFER``) on the
+*producing* node's comm engine, sized from the edge payload's item bytes
+with latency/bandwidth from the per-link ``coldstart.TransferProfile``;
+the in-flight bytes are staged in a ``MemoryContext`` whose ownership
+moves from sender to receiver tracker when the wire time elapses.
 
 ``KeepWarmPlatform`` is the baseline execution model (Firecracker/
 Knative): single-function requests served by a per-function sandbox pool.
@@ -14,30 +29,230 @@ Two modes:
     window + keep-alive reaping (the Azure-trace experiment).
 Sandboxes commit context + guest-OS memory while alive - the
 over-provisioning Figures 1/10 quantify.
+
+Contract / determinism invariants:
+
+  * with cross-node placement disabled (the default) no placer is
+    attached and the dispatch path is byte-identical to the single-node
+    platform — fig10/fig11 outputs do not move;
+  * transfer durations are deterministic (``TransferProfile.charge``, no
+    jitter), so cross-node runs are byte-stable given seed + workload;
+  * staging contexts ride the dispatcher's freed-exactly-once lifecycle
+    (they join ``VertexRun.contexts``), including on failure mid-flight
+    (pinned by tests/test_crossnode.py);
+  * node failure stays whole-invocation: a dying node fails its own
+    homed invocations (``WorkerNode.fail``) AND — via
+    ``CrossNodePlacer.on_node_failure`` — every live invocation homed
+    elsewhere that placed vertices or in-flight transfers on it; the
+    cluster restart path re-executes them on survivors. Use
+    ``ClusterManager.fail_node_at`` (not ``WorkerNode.fail`` directly)
+    in cross-node runs so the placer is notified.
 """
 from __future__ import annotations
 
 import itertools
+import os
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.coldstart import ColdStartProfile
-from repro.core.context import MemoryTracker
-from repro.core.dag import Composition
-from repro.core.dispatcher import InvocationRun
-from repro.core.items import SetDict
+from repro.core.coldstart import ColdStartProfile, TransferProfile
+from repro.core.context import MemoryContext, MemoryTracker
+from repro.core.dag import COMPUTE, Composition
+from repro.core.dispatcher import Dispatcher, InvocationRun, VertexRun
+from repro.core.engines import TRANSFER, Task
+from repro.core.items import SetDict, set_bytes
 from repro.core.node import WorkerNode
 from repro.core.sim import EventLoop
-from repro.core.tracing import LatencyStats
+from repro.core.tracing import LatencyStats, TransferStats
+
+
+class CrossNodePlacer:
+    """Vertex-granular cluster scheduler (the paper's SS4/SS5 elasticity
+    claim taken past whole-request granularity).
+
+    Attached to every worker node's dispatcher; ``place`` is called once
+    per ready vertex. Compute vertices may be placed on any alive node;
+    comm vertices and nested subgraphs stay on the home node (their
+    engines multiplex I/O, so moving them buys nothing but transfers).
+    Remote placement wires up:
+
+      * the vertex's instances run on the target node's engines and warm
+        the *target* node's code cache;
+      * one ``TRANSFER`` task per crossing in-edge (and per composition
+        input binding feeding a remotely placed root vertex), charged to
+        the producing node's comm engine with deterministic durations
+        from the link's ``TransferProfile``;
+      * a staging ``MemoryContext`` per transfer holding the in-flight
+        items: committed on the sender while on the wire, ownership
+        transferred to the receiver on arrival, freed through the
+        consumer vertex's normal context lifecycle;
+      * a remote-input barrier: the vertex launches only when all its
+        inbound transfers have landed (``Dispatcher.launch_placed``).
+    """
+
+    def __init__(
+        self,
+        cluster: "ClusterManager",
+        *,
+        links: Optional[Dict[Tuple[str, str], TransferProfile]] = None,
+        default_link: Optional[TransferProfile] = None,
+    ):
+        self.cluster = cluster
+        self.links = dict(links or {})
+        self.default_link = default_link or TransferProfile()
+        self.stats = TransferStats()
+        self._home: Dict[int, WorkerNode] = {}   # dispatcher id -> node
+        self._vload: Dict[int, int] = {}         # node id -> placed vertices
+        # node id -> {id(inv): (home dispatcher, inv)} for invocations with
+        # vertices or in-flight transfers on that node: a dying node must
+        # fail them (their home dispatcher would otherwise wait forever on
+        # work the dead node silently dropped)
+        self._deps: Dict[int, Dict[int, Tuple[Dispatcher, InvocationRun]]] = {}
+        self._deps_prune_at: Dict[int, int] = {}
+
+    # ------------------------------------------------------------------
+    def attach(self, node: WorkerNode):
+        """Register ``node``'s dispatcher: ready vertices flow back here."""
+        self._home[id(node.dispatcher)] = node
+        node.dispatcher.placer = self
+
+    def link(self, src_name: str, dst_name: str) -> TransferProfile:
+        return self.links.get((src_name, dst_name), self.default_link)
+
+    def vertex_load(self, node: WorkerNode) -> int:
+        return self._vload.get(id(node), 0)
+
+    def _depend(self, node: WorkerNode, disp: Dispatcher, inv: InvocationRun):
+        d = self._deps.setdefault(id(node), {})
+        if id(inv) not in d:
+            d[id(inv)] = (disp, inv)
+            # geometric compaction: sweep settled invocations only once
+            # the dict doubles past the last sweep's live size, so each
+            # O(n) scan is paid for by n inserts (amortized O(1) even
+            # when every entry is live)
+            if len(d) >= self._deps_prune_at.get(id(node), 4096):
+                for k in [k for k, (_, i) in d.items() if i.done or i.failed]:
+                    del d[k]
+                self._deps_prune_at[id(node)] = max(4096, 2 * len(d))
+
+    def on_node_failure(self, node: WorkerNode):
+        """``node`` died: fail every live invocation (homed elsewhere)
+        that has vertices placed on it or transfers touching it; the
+        cluster's restart-on-survivor path re-executes them."""
+        for disp, inv in list(self._deps.pop(id(node), {}).values()):
+            if not inv.done and not inv.failed:
+                disp._fail(inv, "node_failure")
+
+    # ---------------------------------------------------------- policy
+    def _pick(self, fn_name: str, home: WorkerNode) -> WorkerNode:
+        cp = self.cluster.control_plane
+        if cp is not None:
+            return cp.place_vertex(fn_name, home, self.vertex_load)
+        alive = [n for n in self.cluster._nodes if n.alive]
+        if len(alive) <= 1:
+            return alive[0] if alive else home
+
+        def key(i_n):
+            i, n = i_n
+            load = self.cluster._outstanding.get(id(n), 0) + self.vertex_load(n)
+            # warmest code cache first, then least loaded; ties keep the
+            # vertex home (no transfer charge), then stable node order
+            return (-n.warm_fraction((fn_name,)), load, n is not home, i)
+
+        return min(enumerate(alive), key=key)[1]
+
+    # ------------------------------------------------------- placement
+    def place(self, disp: Dispatcher, inv: InvocationRun, vr: VertexRun) -> bool:
+        """Place one ready vertex. Returns True iff the vertex is waiting
+        behind a remote-input barrier (the placer resumes the launch);
+        False means the dispatcher proceeds immediately (locally or on
+        the target's engines with no inbound transfers)."""
+        v = vr.vertex
+        home = self._home[id(disp)]
+        if v.kind == COMPUTE:
+            target = self._pick(v.function, home)
+        else:
+            # comm vertices run on the home comm engines and subgraphs
+            # unfold on the home dispatcher (their inner vertices get
+            # placed individually), but either may still need remote
+            # producers' outputs pulled back first (charged below)
+            target = home
+        vr.exec_node = target
+        if target is home:
+            self.stats.local_placements += 1
+        else:
+            self.stats.remote_placements += 1
+            self._vload[id(target)] = self._vload.get(id(target), 0) + 1
+            self._depend(target, disp, inv)
+            vr.exec_engines = target.engines
+            vr.exec_code_cache = target.code_cache
+
+            def release():
+                self._vload[id(target)] -= 1
+                cp = self.cluster.control_plane
+                if cp is not None and self._vload[id(target)] == 0:
+                    cp.on_vertex_complete(target)
+
+            vr.placed_release = release
+
+        # one transfer per data dependency that crosses nodes: in-edges
+        # whose producer executed on a different node than this vertex,
+        # and composition inputs (they arrived at the home frontend) when
+        # the vertex itself moved away from home
+        transfers: List[Tuple[WorkerNode, list]] = []
+        for e in inv.comp.in_edges(v.name):
+            up = inv.vertex_runs[e.src.vertex]
+            src = up.exec_node or home
+            if src is not target:
+                transfers.append((src, up.outputs.get(e.src.set_name, [])))
+        if target is not home:
+            for in_name, port in inv.comp.input_bindings.items():
+                if port.vertex == v.name:
+                    transfers.append((home, inv.inputs.get(in_name, [])))
+        if not transfers:
+            return False
+        vr.barrier = len(transfers)
+        for src, items in transfers:
+            self._charge(disp, inv, vr, src, target, items)
+        return True
+
+    def _charge(self, disp: Dispatcher, inv: InvocationRun, vr: VertexRun,
+                src: WorkerNode, dst: WorkerNode, items: list):
+        nbytes = set_bytes(items)
+        cpu_s, io_s = self.link(src.name, dst.name).charge(nbytes)
+        self.stats.record_transfer(src.name, dst.name, nbytes, cpu_s, io_s)
+        self._depend(src, disp, inv)   # sender death must fail the barrier
+        # stage the in-flight bytes on the sender; freed exactly once at
+        # the consuming vertex's completion or invocation failure
+        stage = MemoryContext(capacity=max(nbytes, 1), tracker=src.tracker)
+        if items:
+            stage.write_set("payload", items)
+        vr.staged.append(stage)
+
+        def arrived(task: Task, outputs, _ctx):
+            stage.transfer_ownership(dst.tracker)   # no-op if already freed
+            vr.barrier -= 1
+            if inv.failed:
+                return
+            if vr.barrier == 0:
+                disp.launch_placed(inv, vr)
+
+        src.engines.submit(Task(
+            kind=TRANSFER, fn_name="transfer", inputs={}, context_bytes=0,
+            transfer_bytes=nbytes, transfer_cpu_s=cpu_s, transfer_io_s=io_s,
+            on_complete=arrived,
+        ))
 
 
 class ClusterManager:
     """Cluster frontend. Routing/scaling either static (least-outstanding
     over a fixed node list) or delegated to an ``ElasticControlPlane``;
     failure-restart semantics (idempotent re-execution on survivors) live
-    here in both modes."""
+    here in both modes. ``crossnode=True`` (or ``CROSSNODE=1`` in the
+    environment) enables vertex-granular cross-node scheduling via
+    ``CrossNodePlacer``."""
 
     def __init__(
         self,
@@ -45,6 +260,9 @@ class ClusterManager:
         loop: Optional[EventLoop] = None,
         *,
         control_plane=None,   # repro.core.control_plane.ElasticControlPlane
+        crossnode: Optional[bool] = None,   # None -> CROSSNODE env knob
+        transfer_links: Optional[Dict[Tuple[str, str], TransferProfile]] = None,
+        transfer_profile: Optional[TransferProfile] = None,
     ):
         self.control_plane = control_plane
         if control_plane is not None:
@@ -66,6 +284,20 @@ class ClusterManager:
         self.restarts = 0
         self.failed = 0
         self._outstanding: Dict[int, int] = {id(n): 0 for n in self._nodes}
+        if crossnode is None:
+            crossnode = os.environ.get("CROSSNODE") == "1"
+        self.placer: Optional[CrossNodePlacer] = None
+        if crossnode:
+            self.placer = CrossNodePlacer(
+                self, links=transfer_links, default_link=transfer_profile,
+            )
+            if self.control_plane is not None:
+                self.control_plane.placer = self.placer
+                for n in self.control_plane.worker_nodes:
+                    self.placer.attach(n)
+            else:
+                for n in self._nodes:
+                    self.placer.attach(n)
 
     @property
     def nodes(self) -> List[WorkerNode]:
@@ -130,10 +362,12 @@ class ClusterManager:
     # ------------------------------------------------------ elasticity
     def add_node(self, node: WorkerNode):
         if self.control_plane is not None:
-            self.control_plane.adopt(node)
+            self.control_plane.adopt(node)   # adopt attaches the placer
             return
         self._nodes.append(node)
         self._outstanding[id(node)] = 0
+        if self.placer is not None:
+            self.placer.attach(node)
 
     def remove_node(self, node: WorkerNode):
         """Graceful drain: stop routing; node finishes in-flight work."""
@@ -146,6 +380,8 @@ class ClusterManager:
         def do():
             node = self.nodes[idx]
             node.fail()
+            if self.placer is not None:
+                self.placer.on_node_failure(node)
             if self.control_plane is not None:
                 self.control_plane.on_node_failure(node)
 

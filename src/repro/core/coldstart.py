@@ -314,6 +314,36 @@ class ColdStartProfile:
         return self.setup_s * j1, self.execute_s * j2
 
 
+@dataclass(frozen=True)
+class TransferProfile:
+    """Deterministic per-link model for cross-node data movement.
+
+    When a composition vertex is placed on a different node than one of
+    its producers (cross-node scheduling, ``cluster.CrossNodePlacer``),
+    the producing node's comm engine is charged one transfer task per
+    crossing edge. ``charge(nbytes)`` splits the cost into
+
+      * ``cpu_s`` — protocol/copy CPU that occupies the sender's comm
+        slot (cooperative, like HTTP protocol handling);
+      * ``io_s`` — wire time (link latency + bytes/bandwidth) during
+        which the slot is free for other green tasks.
+
+    Deliberately jitter-free: given the same placements and payload
+    bytes, transfer durations are byte-stable run to run (the same
+    determinism contract as the modeled comm-protocol CPU)."""
+
+    latency_s: float = 100e-6       # per-message link latency
+    bandwidth_bps: float = 1.25e9   # wire rate in bytes/sec (~10 GbE)
+    cpu_per_byte_s: float = 1e-10   # sender-side protocol/copy CPU
+    min_cpu_s: float = 2e-6         # floor, matches http.MIN_COMM_CPU_S
+
+    def charge(self, nbytes: int) -> Tuple[float, float]:
+        """(cpu_s, io_s) for moving ``nbytes`` over this link."""
+        cpu_s = self.min_cpu_s + nbytes * self.cpu_per_byte_s
+        io_s = self.latency_s + nbytes / self.bandwidth_bps
+        return cpu_s, io_s
+
+
 def profile_from_measurement(
     registry: FunctionRegistry,
     name: str,

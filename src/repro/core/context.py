@@ -8,6 +8,23 @@ over (virtual) time - the quantity Figures 1/10 plot.
 
 ``transfer_to`` moves items between contexts (the dispatcher's data
 passing; a memcpy here, device-to-device copy for array payloads).
+``transfer_ownership`` re-homes a context's committed pages onto a
+different node's tracker — cross-node scheduling stages in-flight edge
+payloads on the sender and hands the bytes to the receiver when the
+modeled wire transfer completes.
+
+Contract / determinism invariants:
+
+  * every committed byte is released exactly once: ``free()`` is
+    idempotent, and ``transfer_ownership`` after ``free()`` is a no-op
+    (a failed invocation may free a staging context mid-flight);
+  * trackers chain (``parent``): child commits/releases mirror upward
+    as they happen, so an aggregate (cluster-wide) tracker maintains the
+    exact merged step function — and therefore exact peaks — in O(1)
+    per event (PR 2's streaming-aggregate invariant, pinned by
+    tests/test_sim_fastpath.py);
+  * page accounting is purely arithmetic on item ``nbytes``: identical
+    writes yield identical committed-byte timelines run to run.
 """
 from __future__ import annotations
 
@@ -114,6 +131,22 @@ class MemoryContext:
         payload = items if items is not None else self.read_set(set_name)
         other.write_set(dst_set, payload, into="inputs")
         return sum(i.nbytes for i in payload)
+
+    def transfer_ownership(self, tracker: Optional[MemoryTracker]) -> None:
+        """Re-home this context's committed pages onto ``tracker`` (the
+        receiving node): released from the current tracker, committed to
+        the new one, in the same virtual instant. No-op once freed — a
+        failed invocation may free a staging context while its transfer
+        task is still in flight, and the bytes must not be re-committed
+        (freed-exactly-once invariant)."""
+        if self.freed or tracker is self.tracker:
+            return
+        nbytes = self.committed_bytes
+        if self.tracker is not None:
+            self.tracker.release(nbytes)
+        self.tracker = tracker
+        if self.tracker is not None and nbytes:
+            self.tracker.commit(nbytes)
 
     def free(self) -> None:
         if self.freed:

@@ -20,9 +20,26 @@ only if the node pool itself follows load. This module replaces the static
     runtime/OS base footprint that a static peak-provisioned fleet pays
     around the clock.
 
-Everything runs on the shared deterministic ``EventLoop``; given the same
-seed and workload, routing decisions, scaling events, and final stats are
-bit-identical across runs (the property the test harness pins down).
+With cross-node compositions enabled (``cluster.CrossNodePlacer``), the
+control plane additionally makes **vertex-granular** decisions:
+``place_vertex`` applies the same two-level affinity/p2c policy to a
+single compute function when the dispatcher exports a ready vertex, so
+different vertices of one DAG can run on different nodes (the paper's
+per-vertex elasticity claim). Placement decisions are journaled like
+routing decisions (``place <fn> <node> ...`` entries).
+
+Contract / determinism invariants:
+
+  * everything runs on the shared deterministic ``EventLoop``; given the
+    same seed and workload, routing decisions, scaling events, placements
+    and final stats are bit-identical across runs — the decision journal
+    (``journal=True``) is byte-stable (pinned by
+    tests/test_control_plane.py);
+  * the p2c RNG is consumed only on spillover (and never with a single
+    active node), so enabling features that don't spill leaves the
+    decision stream unchanged;
+  * committed-memory aggregates are exact: every node tracker mirrors
+    into ``cluster_mem`` streaming (no post-hoc timeline merging).
 """
 from __future__ import annotations
 
@@ -131,6 +148,11 @@ class ElasticControlPlane:
         self._ticking = False
         self._low_since: Optional[float] = None
         self.journal: Optional[List[str]] = [] if journal else None
+        # cross-node vertex placement (cluster.CrossNodePlacer); set by the
+        # ClusterManager when CROSSNODE is enabled — every node this plane
+        # boots or adopts is attached so its dispatcher exports ready
+        # vertices back to the cluster layer
+        self.placer = None
         for _ in range(self.cfg.min_nodes):
             self._boot_node(instant=True)
 
@@ -158,6 +180,8 @@ class ElasticControlPlane:
         if node.loop is not self.loop:
             raise ValueError(f"{name}: factory must build nodes on the shared loop")
         node.tracker.attach_parent(self.cluster_mem)
+        if self.placer is not None:
+            self.placer.attach(node)
         m = ManagedNode(node=node, boot_t=self.loop.now)
         self.members.append(m)
         self._by_node[id(node)] = m
@@ -184,12 +208,51 @@ class ElasticControlPlane:
     def adopt(self, node: WorkerNode):
         """Register an externally created node as active (manual add)."""
         node.tracker.attach_parent(self.cluster_mem)
+        if self.placer is not None:
+            self.placer.attach(node)
         m = ManagedNode(node=node, boot_t=self.loop.now)
         self.members.append(m)
         self._by_node[id(node)] = m
         self._node_ready(m)
 
     # ---------------------------------------------------------- routing
+    def _pick_two_level(
+        self,
+        active: List[ManagedNode],
+        fns,
+        load: Callable[[ManagedNode], float],
+        prefer: Optional[WorkerNode] = None,
+    ) -> Tuple[ManagedNode, str]:
+        """The shared two-level scorer behind ``route`` (whole
+        compositions, load = outstanding) and ``place_vertex`` (single
+        vertices, load includes placed-vertex counts, ties prefer the
+        home node). Affinity: best code-cache residency wins among nodes
+        under the overload limit; ties bin-pack — fill a node up to its
+        slot count before spilling, so lightly loaded nodes go fully
+        idle and the autoscaler can reap them (spreading a trickle over
+        every warm node keeps the whole fleet alive forever). Fallback:
+        power-of-two-choices on load (no RNG draw with one candidate)."""
+        affinity: List[Tuple[float, ManagedNode]] = []
+        for m in active:
+            limit = self.cfg.affinity_overload_factor * max(m.node.num_slots, 1)
+            score = m.node.warm_fraction(fns)
+            if score > 0.0 and load(m) < limit:
+                affinity.append((score, m))
+        if affinity:
+            def pack_key(sm):
+                score, m = sm
+                slots = max(m.node.num_slots, 1)
+                under = load(m) < slots
+                depth = load(m) if under else -load(m)
+                return (score, under, depth, m.node is prefer)
+
+            return max(affinity, key=pack_key)[1], "affinity"
+        if len(active) == 1:
+            return active[0], "spillover"
+        i, j = self.rng.choice(len(active), size=2, replace=False)
+        a, b = active[int(i)], active[int(j)]
+        return (a if load(a) <= load(b) else b), "spillover"
+
     def route(self, comp: Composition) -> WorkerNode:
         """Two-level policy: code-cache affinity, else p2c on load."""
         self._ensure_tick()
@@ -197,53 +260,69 @@ class ElasticControlPlane:
         if not active:
             raise RuntimeError("no active nodes")
         fns = composition_functions(comp)
+        pick, kind = self._pick_two_level(active, fns, lambda m: m.outstanding)
+        self.stats.record_route(pick.node.name, affinity=(kind == "affinity"))
+        self._log(f"route {pick.node.name} {kind} out={pick.outstanding}")
+        return pick.node
 
-        affinity: List[Tuple[float, ManagedNode]] = []
-        for m in active:
-            limit = self.cfg.affinity_overload_factor * max(m.node.num_slots, 1)
-            score = m.node.warm_fraction(fns)
-            if score > 0.0 and m.outstanding < limit:
-                affinity.append((score, m))
-        if affinity:
-            # best residency wins; ties bin-pack - fill a node up to its
-            # slot count before spilling, so lightly loaded nodes go fully
-            # idle and the autoscaler can reap them (spreading a trickle
-            # over every warm node keeps the whole fleet alive forever)
-            def pack_key(sm):
-                score, m = sm
-                slots = max(m.node.num_slots, 1)
-                under = m.outstanding < slots
-                depth = m.outstanding if under else -m.outstanding
-                return (score, under, depth)
-
-            best = max(affinity, key=pack_key)[1]
-            self.stats.record_route(best.node.name, affinity=True)
-            self._log(f"route {best.node.name} affinity out={best.outstanding}")
-            return best.node
-
-        # spillover: power-of-two-choices on outstanding queue depth
+    def place_vertex(
+        self,
+        fn_name: str,
+        home: WorkerNode,
+        vload: Callable[[WorkerNode], int],
+    ) -> WorkerNode:
+        """Vertex-granular routing decision (cross-node compositions): the
+        same two-level code-cache-affinity / p2c policy as ``route``,
+        scored on the single compute function the ready vertex runs.
+        ``vload(node)`` is the placer's count of vertices in flight on a
+        node — layered on invocation-level ``outstanding`` so placements
+        spread even within one composition. Ties prefer the home node (no
+        transfer charge). With a single active node no RNG is consumed
+        and the home path is taken (byte-identity with CROSSNODE=0 on
+        1-node clusters)."""
+        active = [m for m in self.members if m.state == ACTIVE and m.node.alive]
+        if not active:
+            return home
         if len(active) == 1:
-            pick = active[0]
-        else:
-            i, j = self.rng.choice(len(active), size=2, replace=False)
-            a, b = active[int(i)], active[int(j)]
-            pick = a if a.outstanding <= b.outstanding else b
-        self.stats.record_route(pick.node.name, affinity=False)
-        self._log(f"route {pick.node.name} spillover out={pick.outstanding}")
+            return active[0].node
+
+        def load(m: ManagedNode) -> int:
+            return m.outstanding + vload(m.node)
+
+        pick, kind = self._pick_two_level(active, (fn_name,), load, prefer=home)
+        self._log(f"place {fn_name} {pick.node.name} {kind} load={load(pick)}")
         return pick.node
 
     def on_dispatch(self, node: WorkerNode):
         m = self._by_node[id(node)]
         m.outstanding += 1
 
+    def _foreign_load(self, m: ManagedNode) -> int:
+        """Cross-node vertices placed on this node by other homes: work
+        the invocation-level ``outstanding`` cannot see, but that must
+        block drain/retire just the same."""
+        return self.placer.vertex_load(m.node) if self.placer is not None else 0
+
     def on_complete(self, node: WorkerNode):
         m = self._by_node[id(node)]
         m.outstanding -= 1
         if m.outstanding <= 0:
             m.outstanding = 0
-            m.idle_since = self.loop.now
-            if m.state == DRAINING:
-                self._retire(m, reason="drained")
+            if self._foreign_load(m) == 0:
+                m.idle_since = self.loop.now
+                if m.state == DRAINING:
+                    self._retire(m, reason="drained")
+
+    def on_vertex_complete(self, node: WorkerNode):
+        """Placer notification: the last foreign-placed vertex on ``node``
+        finished. Completes a deferred drain and restarts the idle clock
+        (placed work must keep a node as alive as homed work)."""
+        m = self._by_node.get(id(node))
+        if m is None or m.outstanding > 0 or self._foreign_load(m) != 0:
+            return
+        m.idle_since = self.loop.now
+        if m.state == DRAINING:
+            self._retire(m, reason="drained")
 
     # ------------------------------------------------------- autoscaler
     def _ensure_tick(self):
@@ -274,9 +353,11 @@ class ElasticControlPlane:
         # ---- scale down (one node per tick at most)
         if len(active) > self.cfg.min_nodes:
             # (a) a node fully idle past keep-alive retires outright
+            # (foreign-placed cross-node vertices count as busy work)
             idle = [
                 m for m in active
-                if m.outstanding == 0 and now - m.idle_since > self.cfg.keepalive_s
+                if m.outstanding == 0 and self._foreign_load(m) == 0
+                and now - m.idle_since > self.cfg.keepalive_s
             ]
             if idle:
                 idle.sort(key=lambda m: m.idle_since)
@@ -296,7 +377,9 @@ class ElasticControlPlane:
                 elif self._low_since is None:
                     self._low_since = now
                 elif now - self._low_since > self.cfg.keepalive_s:
-                    victim = min(active, key=lambda m: (m.outstanding, m.node.name))
+                    victim = min(active, key=lambda m: (
+                        m.outstanding + self._foreign_load(m), m.node.name,
+                    ))
                     self.drain(victim.node)
                     self._low_since = now
         else:
@@ -320,7 +403,7 @@ class ElasticControlPlane:
         m.state = DRAINING
         self.stats.drains += 1
         self._log(f"drain {m.node.name} out={m.outstanding}")
-        if m.outstanding == 0:
+        if m.outstanding == 0 and self._foreign_load(m) == 0:
             self._retire(m, reason="idle")
 
     def _retire(self, m: ManagedNode, reason: str):

@@ -4,6 +4,31 @@ Tracks pending invocations, function readiness (all input sets fed),
 instance fan-out per edge keywords, data movement between contexts,
 context deallocation once all consumers have taken a function's outputs,
 idempotent re-execution on failure, and hedged backups for stragglers.
+
+Cross-node scheduling hook: when a ``placer`` is attached (see
+``cluster.CrossNodePlacer``), every vertex that becomes ready (all input
+sets fed — the per-vertex ready-set export) is offered back to the
+cluster layer, which may place it on a different node. A remotely placed
+vertex runs its instances on that node's engines (and touches that
+node's code cache); if any of its inputs were produced on another node,
+the placer charges transfer tasks and the vertex waits behind a
+*remote-input barrier* (``VertexRun.barrier``) until every transfer
+lands, resumed via ``launch_placed``. With no placer attached (the
+default), no cross-node code runs and behavior is byte-identical to the
+single-node dispatcher.
+
+Contract / determinism invariants:
+
+  * every ``MemoryContext`` created for an invocation — instance
+    contexts and cross-node staging contexts alike — is freed exactly
+    once, on success, failure, timeout, hedging, and node failure
+    (pinned by tests/test_dispatcher_properties.py and
+    tests/test_crossnode.py);
+  * instance submission order is a pure function of DAG structure and
+    arrival order (engine FIFO-per-kind does the rest), so dataflow and
+    virtual timelines are byte-stable run to run;
+  * cache-miss sampling uses a deterministic golden-ratio Weyl sequence,
+    not wall-clock RNG.
 """
 from __future__ import annotations
 
@@ -40,6 +65,17 @@ class VertexRun:
     contexts: List[Any] = field(default_factory=list)
     consumers_left: int = 0
     done_t: float = 0.0
+    # ---- cross-node placement (None/0/empty on the local path)
+    exec_node: Any = None           # WorkerNode the placer chose (None=home)
+    exec_engines: Any = None        # that node's EngineSet (None=home)
+    exec_code_cache: Any = None     # that node's CodeCache
+    barrier: int = 0                # outstanding inbound transfer tasks
+    placed_release: Optional[Callable[[], None]] = None  # vload decrement
+    # inbound transfer staging contexts: freed at THIS vertex's own
+    # completion (its instances copied the bytes), not the consumer-driven
+    # lifecycle instance contexts follow — a zero-instance vertex must
+    # still release its staged bytes
+    staged: List[Any] = field(default_factory=list)
 
 
 @dataclass
@@ -48,6 +84,7 @@ class InvocationRun:
     comp: Composition
     on_done: Optional[Callable[["InvocationRun"], None]]
     t_start: float
+    inputs: SetDict = field(default_factory=dict)
     vertex_runs: Dict[str, VertexRun] = field(default_factory=dict)
     remaining: int = 0
     outputs: SetDict = field(default_factory=dict)
@@ -74,6 +111,7 @@ class Dispatcher:
         hedge_min_instances: int = 4,
         cache_miss_rate: float = 0.0,  # fraction of requests loading from disk
         code_cache: Optional["CodeCache"] = None,  # per-node residency model
+        placer: Optional[Any] = None,  # cluster.CrossNodePlacer (attached)
     ):
         self.loop = loop
         self.engines = engines
@@ -84,6 +122,7 @@ class Dispatcher:
         self.hedge_min_instances = hedge_min_instances
         self.cache_miss_rate = cache_miss_rate
         self.code_cache = code_cache
+        self.placer = placer
         self._ids = itertools.count()
         self.completed_count = 0
         self.failed_count = 0
@@ -117,7 +156,8 @@ class Dispatcher:
     ) -> InvocationRun:
         inv = InvocationRun(
             inv_id=next(self._ids), comp=comp, on_done=on_done,
-            t_start=self.loop.now, remaining=len(comp.vertices),
+            t_start=self.loop.now, inputs=inputs,
+            remaining=len(comp.vertices),
         )
         self.active[inv.inv_id] = inv
         for name, v in comp.vertices.items():
@@ -189,10 +229,27 @@ class Dispatcher:
                 if up.consumers_left == 0 and up.n_done == len(up.instances) and up.instances:
                     self._free_vertex_contexts(up)
 
-        v = vr.vertex
-        if v.kind == SUBGRAPH:
-            self._launch_subgraph(inv, vr)
+        if self.placer is not None and self.placer.place(self, inv, vr):
+            # inbound cross-node transfers in flight (remote placement, or
+            # a home-pinned comm/subgraph vertex pulling remote producers'
+            # outputs back): the placer resumes us via launch_placed
             return
+        self._launch_ready(inv, vr)
+
+    def launch_placed(self, inv: InvocationRun, vr: VertexRun):
+        """Remote-input barrier release: every inbound transfer task for a
+        placed vertex has completed; it may now run."""
+        if inv.failed:
+            return
+        self._launch_ready(inv, vr)
+
+    def _launch_ready(self, inv: InvocationRun, vr: VertexRun):
+        if vr.vertex.kind == SUBGRAPH:
+            self._launch_subgraph(inv, vr)
+        else:
+            self._launch_instances(inv, vr)
+
+    def _launch_instances(self, inv: InvocationRun, vr: VertexRun):
         vr.instances = self._make_instances(inv, vr)
         if not vr.instances:
             self._vertex_done(inv, vr)
@@ -226,9 +283,14 @@ class Dispatcher:
     ):
         v = vr.vertex
         kind = COMM if v.kind == COMM else COMPUTE
+        # remotely placed vertices run on the target node's engines and
+        # warm the target node's code cache (locality is per node)
+        code_cache = (
+            self.code_cache if vr.exec_engines is None else vr.exec_code_cache
+        )
         cached = True
-        if kind == COMPUTE and self.code_cache is not None:
-            cached = self.code_cache.touch(v.function)
+        if kind == COMPUTE and code_cache is not None:
+            cached = code_cache.touch(v.function)
         elif self.cache_miss_rate > 0:
             # deterministic low-discrepancy (golden-ratio Weyl) sequence:
             # misses interleave uniformly across the run instead of the
@@ -247,7 +309,7 @@ class Dispatcher:
             on_complete=self._on_task_complete,
             on_failed=self._on_task_failed,
         )
-        self.engines.submit(task)
+        (vr.exec_engines or self.engines).submit(task)
 
     def _hedge(self, inv: InvocationRun, vr: VertexRun):
         if inv.failed or vr.n_done == len(vr.instances):
@@ -306,6 +368,13 @@ class Dispatcher:
                 for inst in vr.instances:
                     vr.outputs[s].extend(inst.outputs.get(s, []))
         vr.done_t = self.loop.now
+        if vr.placed_release is not None:
+            vr.placed_release()
+            vr.placed_release = None
+        if vr.staged:
+            for c in vr.staged:
+                c.free()
+            vr.staged = []
 
         comp = inv.comp
         for e in comp.out_edges(vr.vertex.name):
@@ -339,6 +408,12 @@ class Dispatcher:
         self.active.pop(inv.inv_id, None)
         # release whatever is still held
         for vr in inv.vertex_runs.values():
+            if vr.placed_release is not None:
+                vr.placed_release()
+                vr.placed_release = None
+            for c in vr.staged:
+                c.free()
+            vr.staged = []
             self._free_vertex_contexts(vr)
         if inv.on_done:
             inv.on_done(inv)

@@ -18,6 +18,23 @@ AND deterministic AND cheap.
 Scheduling is event-driven via per-kind idle free-lists: a submit hands
 the task straight to an idle slot of that kind, and a finishing slot pulls
 the next queued task directly - no O(slots) rescan per event.
+
+Contract / determinism invariants:
+
+  * FIFO-per-kind: tasks of one kind are served in submission order; the
+    free-list heap always hands out the lowest-numbered idle slot — the
+    same pairing the pre-PR-2 full scan produced (bit-stable benchmarks);
+  * incremental ``counts()`` equals a full slot scan at every instant,
+    across retypes (pinned by tests/test_sim_fastpath.py);
+  * modeled durations are the only time source on the fast path: comm
+    protocol CPU is derived per service, transfer cost per link
+    (``coldstart.TransferProfile``) — no ``perf_counter`` on modeled
+    paths, so virtual timelines are byte-stable run to run.
+
+Cross-node scheduling adds a third task kind, ``TRANSFER``: a modeled
+inter-node byte movement charged to the *sending* node's comm slots.
+Like HTTP comm tasks it is cooperative — the protocol/copy CPU occupies
+the slot, the wire time does not.
 """
 from __future__ import annotations
 
@@ -37,11 +54,12 @@ from repro.core.registry import FunctionRegistry
 from repro.core.sim import EventLoop
 
 COMPUTE, COMM = "compute", "comm"
+TRANSFER = "transfer"   # modeled inter-node byte movement (comm slots)
 
 
 @dataclass
 class Task:
-    kind: str                       # compute | comm
+    kind: str                       # compute | comm | transfer
     fn_name: str                    # registry name (compute) / "http" (comm)
     inputs: SetDict
     context_bytes: int = 1 << 20
@@ -52,6 +70,11 @@ class Task:
     attempts: int = 0
     cancelled: bool = False
     enqueue_t: float = 0.0
+    # TRANSFER tasks: precomputed deterministic link charge
+    # (TransferProfile.charge on the payload bytes)
+    transfer_bytes: int = 0
+    transfer_cpu_s: float = 0.0
+    transfer_io_s: float = 0.0
     meta: Dict[str, Any] = field(default_factory=dict)
     on_complete: Optional[Callable[["Task", SetDict, MemoryContext], None]] = None
     on_failed: Optional[Callable[["Task", str], None]] = None
@@ -170,6 +193,35 @@ class EngineSlot:
         loop.after(cpu_s, cpu_done)
         loop.after(cpu_s + io_s, io_done)
 
+    # ------------------------------------------------------------------
+    def _serve_transfer(self, task: Task):
+        """Modeled cross-node transfer on the sending node's comm slot:
+        protocol/copy CPU occupies the slot, wire time is I/O (the slot
+        multiplexes other green tasks meanwhile). Durations were computed
+        by the placer from the link's ``TransferProfile`` — deterministic,
+        no RNG draw."""
+        node = self.node
+        loop = node.loop
+        self.busy = True
+        self.inflight += 1
+        node.inflight_tasks.add(id(task))
+        cpu_s, io_s = task.transfer_cpu_s, task.transfer_io_s
+        node.stats_busy(COMM, cpu_s)
+
+        def cpu_done():
+            self.busy = False
+            node.slot_available(self)
+
+        def io_done():
+            self.inflight -= 1
+            node.inflight_tasks.discard(id(task))
+            if not task.cancelled and task.on_complete:
+                task.on_complete(task, {}, None)
+            node.slot_available(self)
+
+        loop.after(cpu_s, cpu_done)
+        loop.after(cpu_s + io_s, io_done)
+
 
 class EngineSet:
     """All engine slots of one worker node + the two typed queues.
@@ -221,13 +273,16 @@ class EngineSet:
 
     # ------------------------------------------------------------------
     def queue(self, kind: str) -> deque:
+        """Queue serving ``kind``; TRANSFER shares the comm queue (and
+        therefore comm slots and FIFO order with HTTP tasks)."""
         return self.compute_q if kind == COMPUTE else self.comm_q
 
     def submit(self, task: Task):
         task.enqueue_t = self.loop.now
-        self.queue(task.kind).append(task)
-        self._arrivals[task.kind] += 1
-        self._dispatch(task.kind)
+        slot_kind = COMPUTE if task.kind == COMPUTE else COMM
+        self.queue(slot_kind).append(task)
+        self._arrivals[slot_kind] += 1
+        self._dispatch(slot_kind)
 
     # ----------------------------------------------------- idle-slot core
     def _pop_idle(self, kind: str) -> Optional[EngineSlot]:
@@ -242,8 +297,10 @@ class EngineSet:
 
     def _serve(self, slot: EngineSlot, kind: str, task: Task):
         self.note_queue_delay(kind, self.loop.now - task.enqueue_t)
-        if kind == COMPUTE:
+        if task.kind == COMPUTE:
             slot._serve_compute(task)
+        elif task.kind == TRANSFER:
+            slot._serve_transfer(task)
         else:
             slot._serve_comm(task)
 

@@ -1,8 +1,29 @@
-"""Worker node: engines + dispatcher + control plane + memory accounting.
+"""Worker node: engines + dispatcher + PI controller + memory accounting.
 
 One ``WorkerNode`` is the unit Figure 4 draws: HTTP frontend (the
 ``invoke`` entry point), dispatcher, typed engine queues, engine slots,
-and the PI control plane, all over one virtual-time event loop.
+and the per-node PI slot controller, all over one (usually shared)
+virtual-time event loop.
+
+Contract / determinism invariants:
+
+  * all state a node owns hangs off its ``MemoryTracker`` — committed
+    bytes return to zero once every admitted invocation completes or
+    fails (freed-exactly-once, see dispatcher);
+  * per-node RNG is seeded at construction; identical seed + workload =>
+    identical timelines (the cross-PR byte-identity contract);
+  * under cross-node scheduling this node's engines may also serve
+    vertices *placed here* by another node's dispatcher, and its comm
+    slots may carry outbound ``TRANSFER`` tasks; both are accounted on
+    this node's tracker/busy counters, while invocation bookkeeping
+    stays with the home node that admitted the request;
+  * ``fail()`` kills queued + in-flight work and fails this node's own
+    live invocations with "node_failure" (the cluster re-executes them
+    on survivors). Invocations homed elsewhere with vertices placed here
+    are rescued one layer up: ``ClusterManager.fail_node_at`` notifies
+    ``CrossNodePlacer.on_node_failure``, which fails them for the same
+    restart path — so in cross-node runs, inject failures through the
+    cluster manager, not by calling ``fail()`` directly.
 """
 from __future__ import annotations
 

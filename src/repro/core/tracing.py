@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -140,4 +140,77 @@ class RoutingStats:
             "scale_ups": self.scale_ups,
             "scale_downs": self.scale_downs,
             "drains": self.drains,
+        }
+
+
+# ===========================================================================
+# Cross-node transfer instrumentation (per-link comm-engine charging)
+# ===========================================================================
+@dataclass
+class LinkCounters:
+    """One directed inter-node link's transfer accounting."""
+
+    src: str
+    dst: str
+    transfers: int = 0
+    bytes_total: int = 0
+    cpu_s: float = 0.0      # sender comm-slot CPU charged
+    wire_s: float = 0.0     # modeled latency + bytes/bandwidth time
+
+    def row(self) -> Dict[str, float]:
+        return {
+            "src": self.src,
+            "dst": self.dst,
+            "transfers": self.transfers,
+            "bytes_total": self.bytes_total,
+            "cpu_ms": self.cpu_s * 1e3,
+            "wire_ms": self.wire_s * 1e3,
+        }
+
+
+@dataclass
+class TransferStats:
+    """Cross-node placement + transfer counters (``CrossNodePlacer``).
+
+    One ``LinkCounters`` per directed (src, dst) node pair; every edge of
+    a composition whose producer and consumer vertices executed on
+    different nodes is charged exactly one transfer task (the invariant
+    tests/test_crossnode.py pins down)."""
+
+    local_placements: int = 0    # vertices kept on the routed home node
+    remote_placements: int = 0   # vertices placed on a different node
+    links: Dict[Tuple[str, str], LinkCounters] = field(default_factory=dict)
+
+    def link(self, src: str, dst: str) -> LinkCounters:
+        key = (src, dst)
+        if key not in self.links:
+            self.links[key] = LinkCounters(src, dst)
+        return self.links[key]
+
+    def record_transfer(self, src: str, dst: str, nbytes: int,
+                        cpu_s: float, wire_s: float):
+        lc = self.link(src, dst)
+        lc.transfers += 1
+        lc.bytes_total += nbytes
+        lc.cpu_s += cpu_s
+        lc.wire_s += wire_s
+
+    @property
+    def transfers(self) -> int:
+        return sum(lc.transfers for lc in self.links.values())
+
+    @property
+    def bytes_total(self) -> int:
+        return sum(lc.bytes_total for lc in self.links.values())
+
+    def summary(self) -> Dict[str, float]:
+        placed = self.local_placements + self.remote_placements
+        return {
+            "placements": placed,
+            "remote_placement_rate": (
+                self.remote_placements / placed if placed else 0.0
+            ),
+            "transfers": self.transfers,
+            "transfer_mb": self.bytes_total / 1024**2,
+            "links": len(self.links),
         }

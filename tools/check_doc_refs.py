@@ -1,0 +1,77 @@
+#!/usr/bin/env python
+"""CI check: code references in the docs must resolve.
+
+Scans ``docs/*.md``, ``README.md``, and ``tests/README.md`` for
+repo-relative code references of the forms
+
+    `path/to/file.py`
+    `path/to/file.py:Symbol`
+    `path/to/dir/`            (backtick-quoted, trailing slash)
+
+and fails (exit 1) listing every citation whose file/directory does not
+exist — or, for ``file.py:Symbol``, whose symbol text does not occur in
+the file. Keeps ``docs/ARCHITECTURE.md``'s ``file.py:symbol`` pointers
+accurate as the code moves.
+
+Usage: python tools/check_doc_refs.py   (from the repo root)
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DOC_GLOBS = ["docs/*.md", "README.md", "tests/README.md"]
+
+# `src/repro/core/engines.py` / `benchmarks/run.py:main` / `docs/`
+REF_RE = re.compile(
+    r"`(?P<path>[A-Za-z0-9_./\-]+?\.(?:py|md|json|yml|csv))"
+    r"(?::(?P<symbol>[A-Za-z_][A-Za-z0-9_]*))?`"
+    r"|`(?P<dir>[A-Za-z0-9_./\-]+/)`"
+)
+
+
+def check() -> int:
+    errors = []
+    checked = 0
+    docs = sorted(p for g in DOC_GLOBS for p in ROOT.glob(g))
+    if not docs:
+        print("check_doc_refs: no docs found", file=sys.stderr)
+        return 1
+    for doc in docs:
+        text = doc.read_text()
+        for m in REF_RE.finditer(text):
+            if m.group("dir"):
+                ref, target = m.group("dir"), ROOT / m.group("dir")
+                checked += 1
+                if not target.is_dir():
+                    errors.append(f"{doc.relative_to(ROOT)}: `{ref}` "
+                                  f"(directory missing)")
+                continue
+            path, symbol = m.group("path"), m.group("symbol")
+            # only repo-relative paths (skip e.g. bare "file.py" prose)
+            if "/" not in path:
+                continue
+            checked += 1
+            target = ROOT / path
+            if not target.is_file():
+                errors.append(f"{doc.relative_to(ROOT)}: `{path}` missing")
+            elif symbol is not None and symbol not in target.read_text():
+                errors.append(
+                    f"{doc.relative_to(ROOT)}: `{path}:{symbol}` — "
+                    f"symbol not found in file"
+                )
+    if errors:
+        print(f"check_doc_refs: {len(errors)} stale reference(s) "
+              f"(of {checked} checked):", file=sys.stderr)
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    print(f"check_doc_refs: {checked} references OK across "
+          f"{len(docs)} docs")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(check())
