@@ -148,7 +148,16 @@ def write_simperf(outdir: str = "results/bench",
                   extra: Optional[Dict[str, dict]] = None) -> str:
     os.makedirs(outdir, exist_ok=True)
     path = os.path.join(outdir, "BENCH_simperf.json")
-    payload = {k: v.row() for k, v in sorted(PERF.items())}
+    # merge over an existing trajectory so a partial run (--only figN)
+    # refreshes its own segments without dropping everyone else's
+    payload: Dict[str, dict] = {}
+    if os.path.isfile(path):
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, ValueError):
+            payload = {}
+    payload.update({k: v.row() for k, v in sorted(PERF.items())})
     for source in (SIMPERF_EXTRA, extra or {}):
         for k, v in source.items():
             payload.setdefault(k, {}).update(v)

@@ -1,0 +1,265 @@
+"""Figure 13 (extension): LM serving as an elastic composition workload.
+
+Each serving request is a composition DAG (tokenize -> prefill -> N
+decode steps -> detokenize, ``repro.apps.inference_service``) scheduled
+by the ordinary dispatcher over identical 2-node hardware; the KV cache
+rides between vertices as real-sized items; model-weight cold starts are
+priced from the HLO cost models (param bytes / disk bandwidth + compile
+time, ``launch.hlo_analysis.weight_coldstart_estimate``). Azure-trace-
+shaped ON/OFF bursty arrivals, three weight-residency policies:
+
+  * **keepwarm** — weights pinned on every node for the whole run (the
+    dedicated inference server): no cold starts, peak-provisioned
+    memory; continuous batching on.
+  * **percold**  — per-request cold start with NO keep-alive: weights
+    leave the node the instant no request holds them, so every arrival
+    into an idle gap repays load+compile; batching off (``max_batch=1``
+    serializes decode steps on the replica). The naive serverless-LM
+    baseline.
+  * **elastic**  — the Dandelion story: per-request sandboxes, weights
+    kept by a short keep-alive while traffic flows and dropped in the
+    OFF valleys, decode steps coalesced by the platform's batching
+    engine (``core.workloads.BatchStepModel`` roofline).
+
+Reported per policy: p50/p99 time-to-first-token (arrival -> prefill
+complete), p50/p99 end-to-end latency, generated tokens per virtual
+second, average/peak committed memory, and the weight cold-touch rate;
+plus an elastic/keepwarm ratio row (the acceptance gate: p99 TTFT within
+2x of keepwarm at >= 40% less average committed memory). A JSON summary
+lands in ``results/bench/BENCH_serving.json``.
+
+All in virtual time, seeded end to end: data rows and the JSON are
+byte-identical across runs (`# perf` lines excepted).
+
+Knobs (environment variables):
+
+  FIG13_QUICK       1 shrinks the window to 60 s for CI smoke
+  FIG13_DURATION_S  arrival window, default 240 (virtual seconds)
+  FIG13_MIN_TPS     CI gate: exit non-zero unless the elastic policy
+                    sustains this many generated tokens per virtual sec
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.apps.inference_service import (
+    LMSpec,
+    build_request_composition,
+    register_inference_service,
+)
+from repro.core import (
+    ClusterManager,
+    EventLoop,
+    FunctionRegistry,
+    Item,
+    LatencyStats,
+    WorkerNode,
+)
+from repro.core.sim import merged_peak
+from benchmarks.common import emit, track
+
+N_NODES = 2
+NODE_SLOTS = 8                   # CPU slots (frontend + prefill lanes)
+MAX_BATCH = 16                   # batching engine coalescing width
+KEEPALIVE_S = 6.0                # elastic weight keep-alive
+BURST_PERIOD_S = 60.0
+BURST_DUTY = 0.35                # ON fraction of each period
+RATE_HZ = 20.0                   # request rate during ON windows
+PROMPT_LEN_RANGE = (32, 128)
+DECODE_RANGE = (8, 32)
+SPEC = LMSpec()
+
+POLICIES = ("keepwarm", "percold", "elastic")
+
+
+def _duration() -> float:
+    if os.environ.get("FIG13_QUICK") == "1" or "--quick" in sys.argv:
+        return 60.0
+    return float(os.environ.get("FIG13_DURATION_S", 240.0))
+
+
+def _requests(duration_s: float, seed: int = 0):
+    """ON/OFF-modulated Poisson arrivals of LM requests, by thinning (the
+    repro.core.trace recipe): (t, prompt_bytes, prompt_len, n_decode)."""
+    rng = np.random.default_rng(seed)
+    n = int(RATE_HZ * duration_s * 1.5 + 50)
+    ts = np.cumsum(rng.exponential(1.0 / RATE_HZ, size=n))
+    keep = ((ts % BURST_PERIOD_S) / BURST_PERIOD_S < BURST_DUTY) & (ts < duration_s)
+    lo, hi = PROMPT_LEN_RANGE
+    plens = rng.integers(lo, hi + 1, size=n)
+    dlo, dhi = DECODE_RANGE
+    decs = rng.integers(dlo, dhi + 1, size=n)
+    out = []
+    for rid, (t, p, d) in enumerate(zip(ts[keep], plens[keep], decs[keep])):
+        prompt = (f"req{rid:05d}:".encode() * (int(p) // 2))[: 4 * int(p)]
+        out.append((float(t), prompt, int(p), int(d)))
+    return out
+
+
+def _run_policy(policy: str, requests, duration_s: float) -> Dict[str, float]:
+    reg = FunctionRegistry()
+    svc = register_inference_service(reg, SPEC)
+    loop = EventLoop()
+    stores = []
+    nodes = []
+    for i in range(N_NODES):
+        ws = svc.make_weight_store(
+            keepalive_s=KEEPALIVE_S if policy == "elastic" else 0.0,
+            pinned=policy == "keepwarm",
+        )
+        stores.append(ws)
+        nodes.append(WorkerNode(
+            reg, loop=loop, num_slots=NODE_SLOTS, profiles=svc.profiles,
+            batch_slots=1, batch_model=svc.batch_model,
+            max_batch=1 if policy == "percold" else MAX_BATCH,
+            weight_store=ws, seed=40 + i, name=f"sv{i}",
+        ))
+    cm = ClusterManager(nodes, loop)
+
+    comps: Dict[Tuple[int, int], object] = {}
+    ttft = LatencyStats()
+    tokens = 0
+
+    def make_done(n_decode: int):
+        def done(inv):
+            nonlocal tokens
+            if inv.failed:
+                return
+            tokens += n_decode + 1
+            ttft.add(inv.vertex_runs["prefill"].done_t - inv.t_start)
+        return done
+
+    def arrivals():
+        for t, prompt, p, d in requests:
+            comp = comps.get((p, d))
+            if comp is None:
+                comp = comps[(p, d)] = build_request_composition(
+                    SPEC, prompt_len=p, n_decode=d)
+            yield t, comp, {"prompt": [Item(prompt)]}, make_done(d)
+
+    with track(f"fig13/{policy}", len(requests)):
+        loop.at_stream(
+            ((t, (comp, ins, cb)) for t, comp, ins, cb in arrivals()),
+            lambda cic: cm.invoke(cic[0], cic[1], cic[2]),
+        )
+        cm.run(until=duration_s)
+        avg_committed = sum(
+            n.tracker.timeline.average(duration_s) for n in nodes
+        )
+        loop.run()   # drain stragglers past the window
+
+    e2e = cm.latency.summary()
+    tf = ttft.summary()
+    ws_summ = [s.summary() for s in stores]
+    touches = sum(s["touches"] for s in ws_summ)
+    colds = sum(s["cold_touches"] for s in ws_summ)
+    return {
+        "policy": policy,
+        "requests": len(requests),
+        "completed": int(tf["n"]),
+        "p50_ttft_ms": tf["p50_ms"],
+        "p99_ttft_ms": tf["p99_ms"],
+        "p50_e2e_ms": e2e["p50_ms"],
+        "p99_e2e_ms": e2e["p99_ms"],
+        "tokens_per_s": tokens / duration_s,
+        "avg_committed_mb": avg_committed / 1024**2,
+        "peak_committed_mb": merged_peak(
+            [n.tracker.timeline for n in nodes]) / 1024**2,
+        "weight_cold_rate": colds / touches if touches else 0.0,
+    }
+
+
+def run() -> List[dict]:
+    duration_s = _duration()
+    requests = _requests(duration_s)
+    rows = [_run_policy(p, requests, duration_s) for p in POLICIES]
+    by = {r["policy"]: r for r in rows}
+    kw, el = by["keepwarm"], by["elastic"]
+    rows.append({
+        "policy": "elastic_vs_keepwarm",
+        "requests": len(requests),
+        "completed": el["completed"],
+        "p50_ttft_ms": el["p50_ttft_ms"] / max(kw["p50_ttft_ms"], 1e-9),
+        "p99_ttft_ms": el["p99_ttft_ms"] / max(kw["p99_ttft_ms"], 1e-9),
+        "p50_e2e_ms": el["p50_e2e_ms"] / max(kw["p50_e2e_ms"], 1e-9),
+        "p99_e2e_ms": el["p99_e2e_ms"] / max(kw["p99_e2e_ms"], 1e-9),
+        "tokens_per_s": el["tokens_per_s"] / max(kw["tokens_per_s"], 1e-9),
+        "avg_committed_mb": el["avg_committed_mb"] / max(kw["avg_committed_mb"], 1e-9),
+        "peak_committed_mb": el["peak_committed_mb"] / max(kw["peak_committed_mb"], 1e-9),
+        "weight_cold_rate": el["weight_cold_rate"],
+    })
+    _LAST["rows"] = rows
+    _LAST["duration_s"] = duration_s
+    return rows
+
+
+# last run() result, serialized to BENCH_serving.json by write_json
+# (called from benchmarks.run and from this module's main)
+_LAST: Dict[str, object] = {}
+
+
+def write_json(outdir: str = "results/bench") -> str:
+    rows = _LAST.get("rows")
+    if not rows:
+        raise RuntimeError("fig13: run() before write_json()")
+    by = {r["policy"]: r for r in rows}
+    ratio = by["elastic_vs_keepwarm"]
+    payload = {
+        "workload": {
+            "model": SPEC.name,
+            "param_bytes": SPEC.param_bytes,
+            "kv_bytes_per_token": SPEC.kv_bytes_per_token,
+            "duration_s": _LAST["duration_s"],
+            "nodes": N_NODES,
+            "max_batch": MAX_BATCH,
+            "keepalive_s": KEEPALIVE_S,
+            "burst_period_s": BURST_PERIOD_S,
+            "burst_duty": BURST_DUTY,
+            "rate_hz": RATE_HZ,
+        },
+        "policies": {r["policy"]: r for r in rows if r["policy"] in POLICIES},
+        "elastic_vs_keepwarm": {
+            "p99_ttft_ratio": ratio["p99_ttft_ms"],
+            "avg_committed_ratio": ratio["avg_committed_mb"],
+            "tokens_per_s_ratio": ratio["tokens_per_s"],
+        },
+    }
+    os.makedirs(outdir, exist_ok=True)
+    path = os.path.join(outdir, "BENCH_serving.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def gate() -> None:
+    """CI floor: the elastic policy must sustain FIG13_MIN_TPS generated
+    tokens per *virtual* second (deterministic, so a conservative floor
+    is robust on any runner)."""
+    min_tps = float(os.environ.get("FIG13_MIN_TPS", 0.0))
+    if min_tps <= 0:
+        return
+    rows = _LAST.get("rows") or []
+    el = next((r for r in rows if r["policy"] == "elastic"), None)
+    if el is None or el["tokens_per_s"] < min_tps:
+        got = el["tokens_per_s"] if el else 0.0
+        raise SystemExit(
+            f"fig13 tokens/sec gate: elastic sustains {got:.1f} tok/s "
+            f"< required {min_tps:.1f}"
+        )
+
+
+def main():
+    emit("fig13", run())
+    path = write_json()
+    print(f"# serving summary written to {path}")
+    gate()
+
+
+if __name__ == "__main__":
+    main()

@@ -3,7 +3,9 @@
     PYTHONPATH=src python -m benchmarks.run [--only table1,fig5,...]
 
 Emits CSV blocks per benchmark to stdout (tee'd into bench_output.txt by
-the final deliverable run) and mirrors them under results/bench/.
+the final deliverable run) and mirrors them under results/bench/. Every
+sub-benchmark's pass/fail lands in the end-of-run summary, and the exit
+code is non-zero if any failed.
 """
 from __future__ import annotations
 
@@ -22,6 +24,7 @@ from benchmarks import (
     fig10_azure_trace,
     fig11_elastic_scaleout,
     fig12_crossnode,
+    fig13_serving,
     roofline,
     table1_coldstart,
 )
@@ -39,6 +42,8 @@ BENCHES = {
               fig11_elastic_scaleout.run),
     "fig12": ("Fig 12: cross-node composition scheduling trade-off",
               fig12_crossnode.run),
+    "fig13": ("Fig 13: LM serving as an elastic composition workload",
+              fig13_serving.run),
     "roofline": ("Roofline: dry-run three-term table", roofline.run),
 }
 
@@ -49,9 +54,12 @@ def main() -> None:
     ap.add_argument("--outdir", default="results/bench")
     args = ap.parse_args()
     names = list(BENCHES) if args.only == "all" else args.only.split(",")
+    unknown = [n for n in names if n not in BENCHES]
+    if unknown:
+        ap.error(f"unknown benchmark(s) {unknown}; known: {list(BENCHES)}")
     os.makedirs(args.outdir, exist_ok=True)
 
-    failed = []
+    status = {}  # name -> (ok, seconds)
     for name in names:
         title, fn = BENCHES[name]
         print(f"\n## {name}: {title}")
@@ -61,14 +69,24 @@ def main() -> None:
             emit(name, rows)
             with open(os.path.join(args.outdir, f"{name}.csv"), "w") as f:
                 emit(name, rows, out_stream=f)
-            print(f"# {name} done in {time.time()-t0:.1f}s")
-        except Exception as e:
-            failed.append(name)
+            status[name] = (True, time.time() - t0)
+            print(f"# {name} done in {status[name][1]:.1f}s")
+        except (Exception, SystemExit) as e:
+            status[name] = (False, time.time() - t0)
             print(f"# {name} FAILED: {type(e).__name__}: {e}")
             traceback.print_exc()
+    # serving summary (deterministic JSON next to the CSVs)
+    if status.get("fig13", (False,))[0]:
+        print(f"# serving summary written to "
+              f"{fig13_serving.write_json(args.outdir)}")
     # simulator throughput trajectory (events/sec per tracked segment)
     perf_path = write_simperf(args.outdir)
     print(f"# simulator throughput written to {perf_path}")
+
+    failed = [n for n, (ok, _) in status.items() if not ok]
+    print("\n# ---- summary ----")
+    for name, (ok, secs) in status.items():
+        print(f"# {name:10s} {'PASS' if ok else 'FAIL'}  {secs:7.1f}s")
     if failed:
         print(f"\nFAILED benchmarks: {failed}")
         raise SystemExit(1)

@@ -1,0 +1,300 @@
+"""Serving-on-Dandelion: batched LM inference as a composition workload.
+
+The paper's core claim is that cloud-native apps — user logic plus
+higher-level services like AI inference — can run as DAGs of pure
+functions over the elastic platform, booting sandboxes per request. This
+module expresses one LM serving request as exactly that:
+
+    tokenize -> prefill -> decode_0 -> ... -> decode_{N-1} -> detokenize
+
+Every vertex is a pure compute function; the KV cache rides between the
+prefill/decode vertices as a ``KVCache`` item inside the ordinary
+``MemoryContext`` dataflow, so its *real byte size* is what the platform
+commits, and — under cross-node placement — what a cache migration
+charges to the producing node's comm engine (``TransferProfile`` on
+``KVCache.nbytes`` bytes).
+
+Costs are priced from the ``repro.launch.hlo_analysis`` models:
+
+  * model-weight cold start (param bytes / disk bandwidth + compile time
+    from the HLO op count) becomes the prefill/decode functions'
+    ``ColdStartProfile.cold_setup_s``, charged only when the executing
+    node holds no resident weights (``core.workloads.WeightStore``);
+  * per-step execute time comes from ``serving_step_terms`` rooflines;
+    the same terms parameterize the platform's ``BatchStepModel`` so a
+    batching engine coalesces co-resident decode steps into one step.
+
+Token streams are deterministic functions of the prompt digest, so runs
+are byte-stable and batching on/off produces identical tokens (pinned by
+tests/test_inference_service.py).
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.config.parallel import HardwareSpec, TPU_V5E
+from repro.core import (
+    BatchStepModel,
+    ColdStartProfile,
+    Composition,
+    FunctionRegistry,
+    Item,
+    WeightStore,
+)
+from repro.launch.hlo_analysis import (
+    WeightColdStart,
+    serving_step_terms,
+    weight_coldstart_estimate,
+)
+
+SANDBOX_SETUP_S = 0.3e-3      # dandelion context-bind path (Table 1)
+
+
+@dataclass(frozen=True)
+class LMSpec:
+    """Model geometry the cost models need (nothing else)."""
+
+    name: str = "lm-1b"
+    n_params: float = 1.3e9
+    n_layers: int = 24
+    d_model: int = 2048
+    vocab_size: int = 32_000
+    dtype_bytes: int = 2          # bf16 weights + KV
+    ops_per_layer: int = 60       # HLO instruction estimate per layer
+    prompt_len_hint: int = 128    # representative shapes for profiles
+    seq_len_hint: int = 160
+
+    @property
+    def param_bytes(self) -> int:
+        return int(self.n_params * self.dtype_bytes)
+
+    @property
+    def kv_bytes_per_token(self) -> int:
+        return 2 * self.n_layers * self.d_model * self.dtype_bytes  # K + V
+
+    @property
+    def flops_per_token(self) -> float:
+        return 2.0 * self.n_params
+
+    @property
+    def hlo_ops_estimate(self) -> int:
+        return self.n_layers * self.ops_per_layer + 40  # + embed/head/sample
+
+
+@dataclass(frozen=True)
+class KVCache:
+    """Opaque KV-cache handle carried as an item between vertices.
+
+    Holds no real activations — only the prompt digest and length the
+    pure decode function needs — but reports the *modeled* cache size
+    through ``nbytes``, which is the only thing the platform reads:
+    ``MemoryContext.write_set`` commits it, ``cluster.CrossNodePlacer``
+    charges it per migrated edge. Deliberately not fingerprintable, so
+    the payload memo skips it (decode bodies are trivial arithmetic)."""
+
+    model: str
+    digest: str
+    seq_len: int
+    bytes_per_token: int
+
+    @property
+    def nbytes(self) -> int:
+        return self.seq_len * self.bytes_per_token
+
+
+def _next_token(digest: str, position: int, vocab: int) -> int:
+    h = hashlib.blake2b(f"{digest}:{position}".encode(), digest_size=8)
+    return int.from_bytes(h.digest(), "little") % vocab
+
+
+@dataclass
+class InferenceService:
+    """Everything a platform needs to run the workload: registered
+    function names, calibrated profiles, the batch-step model, and the
+    weight-store spec."""
+
+    spec: LMSpec
+    profiles: Dict[str, ColdStartProfile]
+    batch_model: BatchStepModel
+    weight_cold: WeightColdStart
+    prefill_step_s: float
+    decode_step_s: float
+    fn_names: Tuple[str, ...] = ()
+
+    def make_weight_store(self, *, keepalive_s: float = 0.0,
+                          pinned: bool = False) -> WeightStore:
+        """A fresh per-node store holding this service's weights. The
+        tokenize/detokenize frontends don't touch the model, so only
+        prefill/decode are registered against it."""
+        ws = WeightStore(keepalive_s=keepalive_s, pinned=pinned)
+        ws.register(self.spec.name, self.spec.param_bytes,
+                    (self._fn("prefill"), self._fn("decode")))
+        return ws
+
+    def _fn(self, stage: str) -> str:
+        return f"{self.spec.name}_{stage}"
+
+
+def register_inference_service(
+    reg: FunctionRegistry,
+    spec: LMSpec = LMSpec(),
+    *,
+    hw: HardwareSpec = TPU_V5E,
+    disk_bandwidth_bps: float = 2e9,
+    compile_s_per_op: float = 1e-3,
+    step_overhead_s: float = 150e-6,
+    hlo_text: Optional[str] = None,
+) -> InferenceService:
+    """Register the four serving functions and price their profiles from
+    the HLO cost models. ``hlo_text`` (a real optimized-HLO dump, e.g.
+    from ``launch.dryrun``) refines the compile-time term; without it the
+    layer-count estimate is used."""
+    kv_bpt = spec.kv_bytes_per_token
+    vocab = spec.vocab_size
+    name = spec.name
+
+    def tokenize(ins):
+        prompt = ins["prompt"][0].data
+        raw = prompt if isinstance(prompt, (bytes, bytearray)) else str(prompt).encode()
+        digest = hashlib.blake2b(raw, digest_size=8).hexdigest()
+        n = max(1, len(raw) // 4)      # ~4 bytes per token
+        rng = np.random.default_rng(int(digest, 16) % (2**32))
+        toks = rng.integers(0, vocab, size=n, dtype=np.int32)
+        return {"tokens": [Item(toks)]}
+
+    def prefill(ins):
+        toks = ins["tokens"][0].data
+        digest = hashlib.blake2b(np.asarray(toks).tobytes(), digest_size=8).hexdigest()
+        kv = KVCache(name, digest, seq_len=int(np.asarray(toks).size),
+                     bytes_per_token=kv_bpt)
+        first = _next_token(digest, kv.seq_len, vocab)
+        return {"kv": [Item(kv)], "tok": [Item(first)]}
+
+    def decode(ins):
+        kv_in: KVCache = ins["kv"][0].data
+        kv = KVCache(name, kv_in.digest, kv_in.seq_len + 1, kv_bpt)
+        return {"kv": [Item(kv)], "tok": [Item(_next_token(kv_in.digest, kv.seq_len, vocab))]}
+
+    def detokenize(ins):
+        toks = [it.data for it in ins["toks"]]
+        text = ("tok:" + ",".join(str(t) for t in toks)).encode()
+        return {"text": [Item(text)]}
+
+    reg.register_function(f"{name}_tokenize", tokenize, context_bytes=1 << 20)
+    reg.register_function(f"{name}_prefill", prefill,
+                          context_bytes=spec.prompt_len_hint * kv_bpt + (4 << 20))
+    reg.register_function(f"{name}_decode", decode, batchable=True,
+                          context_bytes=spec.seq_len_hint * kv_bpt + (1 << 20))
+    reg.register_function(f"{name}_detok", detokenize, context_bytes=1 << 20)
+
+    # ---- cost models (launch.hlo_analysis) -----------------------------
+    weight_cold = weight_coldstart_estimate(
+        spec.param_bytes,
+        hlo_text=hlo_text,
+        hlo_ops=spec.hlo_ops_estimate,
+        disk_bandwidth_bps=disk_bandwidth_bps,
+        compile_s_per_op=compile_s_per_op,
+    )
+    prefill_terms = serving_step_terms(
+        param_bytes=spec.param_bytes,
+        flops_per_seq=spec.flops_per_token * spec.prompt_len_hint,
+        kv_bytes_per_seq=spec.prompt_len_hint * kv_bpt,
+        batch=1, peak_flops=hw.peak_flops, hbm_bw=hw.hbm_bandwidth,
+        ici_bw=hw.ici_bandwidth,
+    )
+    decode_terms = serving_step_terms(
+        param_bytes=spec.param_bytes,
+        flops_per_seq=spec.flops_per_token,
+        kv_bytes_per_seq=spec.seq_len_hint * kv_bpt,
+        batch=1, peak_flops=hw.peak_flops, hbm_bw=hw.hbm_bandwidth,
+        ici_bw=hw.ici_bandwidth,
+    )
+    batch_model = BatchStepModel(
+        flops_per_seq=spec.flops_per_token,
+        fixed_bytes=float(spec.param_bytes),
+        bytes_per_seq=float(spec.seq_len_hint * kv_bpt),
+        peak_flops=hw.peak_flops,
+        hbm_bw=hw.hbm_bandwidth,
+        overhead_s=step_overhead_s,
+    )
+    prefill_s = prefill_terms.step_time_s + step_overhead_s
+    decode_s = batch_model.step_s(1)
+
+    profiles = {
+        f"{name}_tokenize": ColdStartProfile(SANDBOX_SETUP_S, 0.2e-3, 0.05),
+        f"{name}_prefill": ColdStartProfile(
+            SANDBOX_SETUP_S, prefill_s, 0.05, cold_setup_s=weight_cold.total_s,
+        ),
+        f"{name}_decode": ColdStartProfile(
+            # jitter-free: the batching engine must be able to substitute
+            # step_s(n) for n independent durations without RNG skew
+            SANDBOX_SETUP_S, decode_s, 0.0, cold_setup_s=weight_cold.total_s,
+        ),
+        f"{name}_detok": ColdStartProfile(SANDBOX_SETUP_S, 0.2e-3, 0.05),
+    }
+    return InferenceService(
+        spec=spec,
+        profiles=profiles,
+        batch_model=batch_model,
+        weight_cold=weight_cold,
+        prefill_step_s=prefill_s,
+        decode_step_s=decode_s,
+        fn_names=tuple(profiles),
+    )
+
+
+def build_request_composition(
+    spec: LMSpec,
+    *,
+    prompt_len: int,
+    n_decode: int,
+) -> Composition:
+    """One serving request as a DAG: the decode chain is unrolled to this
+    request's token budget, each link passing the (growing) KV cache item
+    and the previous token forward, every token also feeding detokenize.
+    The functions must already be registered (``register_inference_service``).
+    """
+    kv_bpt = spec.kv_bytes_per_token
+    name = spec.name
+    c = Composition(f"{name}_p{prompt_len}_d{n_decode}")
+    tok = c.compute("tokenize", f"{name}_tokenize",
+                    inputs=("prompt",), outputs=("tokens",),
+                    context_bytes=1 << 20)
+    pre = c.compute("prefill", f"{name}_prefill",
+                    inputs=("tokens",), outputs=("kv", "tok"),
+                    context_bytes=prompt_len * kv_bpt + (4 << 20))
+    det = c.compute("detokenize", f"{name}_detok",
+                    inputs=("toks",), outputs=("text",),
+                    context_bytes=1 << 20)
+    c.edge(tok["tokens"], pre["tokens"])
+    c.edge(pre["tok"], det["toks"])
+    prev = pre
+    for i in range(n_decode):
+        # context sized to the cache at this step: in + out copies
+        d = c.compute(f"decode{i}", f"{name}_decode",
+                      inputs=("kv", "tok"), outputs=("kv", "tok"),
+                      context_bytes=2 * (prompt_len + i + 1) * kv_bpt + (1 << 20))
+        c.edge(prev["kv"], d["kv"])
+        c.edge(prev["tok"], d["tok"])
+        c.edge(d["tok"], det["toks"])
+        prev = d
+    c.bind_input("prompt", tok["prompt"])
+    c.bind_output("text", det["text"])
+    c.validate()
+    return c
+
+
+def expected_tokens(prompt: bytes, spec: LMSpec, n_decode: int) -> List[int]:
+    """Reference token stream for a prompt — what any platform run must
+    produce regardless of batching, placement, or policy (the pure-
+    function contract)."""
+    digest_p = hashlib.blake2b(prompt, digest_size=8).hexdigest()
+    n = max(1, len(prompt) // 4)
+    rng = np.random.default_rng(int(digest_p, 16) % (2**32))
+    toks = rng.integers(0, spec.vocab_size, size=n, dtype=np.int32)
+    digest = hashlib.blake2b(toks.tobytes(), digest_size=8).hexdigest()
+    return [_next_token(digest, n + i, spec.vocab_size) for i in range(n_decode + 1)]

@@ -45,9 +45,11 @@ from repro.core.tracing import (
     ThroughputStats,
     TransferStats,
 )
+from repro.core.workloads import BatchStepModel, WeightStore
 
 __all__ = [
     "BACKENDS",
+    "BatchStepModel",
     "ClusterManager",
     "CodeCache",
     "ColdStartBreakdown",
@@ -84,6 +86,7 @@ __all__ = [
     "TransferProfile",
     "TransferStats",
     "Vertex",
+    "WeightStore",
     "WorkerNode",
     "cold_start",
     "composition_functions",

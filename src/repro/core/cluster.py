@@ -188,6 +188,7 @@ class CrossNodePlacer:
             self._depend(target, disp, inv)
             vr.exec_engines = target.engines
             vr.exec_code_cache = target.code_cache
+            vr.exec_weights = target.weight_store
 
             def release():
                 self._vload[id(target)] -= 1

@@ -302,11 +302,22 @@ class CodeCache:
 @dataclass
 class ColdStartProfile:
     """Calibrated per-(function, backend) profile consumed by the
-    virtual-time engines: deterministic base + seeded lognormal jitter."""
+    virtual-time engines: deterministic base + seeded lognormal jitter.
+
+    ``cold_setup_s`` is the extra, deliberately jitter-free setup charged
+    when the task runs without resident state (``Task.cold_setup`` set by
+    the dispatcher: a weight-store miss, or — for functions no store
+    handles — a code-residency miss): for ordinary functions a disk code
+    load, for serving functions the model-weight load + compile term
+    priced from the HLO cost models
+    (``repro.launch.hlo_analysis.weight_coldstart_estimate``). Zero by
+    default, so existing profiles and their RNG draw order are untouched
+    (the cross-PR byte-identity contract)."""
 
     setup_s: float            # marshal+load+transfer+execute_setup+output
     execute_s: float
     jitter_sigma: float = 0.08
+    cold_setup_s: float = 0.0  # added when the task is not cached/resident
 
     def sample(self, rng: np.random.Generator) -> Tuple[float, float]:
         j1 = float(rng.lognormal(0.0, self.jitter_sigma))

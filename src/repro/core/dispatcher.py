@@ -38,11 +38,22 @@ from typing import Any, Callable, Dict, List, Optional
 
 from repro.core.coldstart import CodeCache, ColdStartProfile
 from repro.core.dag import COMM, COMPUTE, SUBGRAPH, Composition, Edge, Vertex
-from repro.core.engines import EngineSet, Task
+from repro.core.engines import BATCH, EngineSet, Task
 from repro.core.http import IDEMPOTENT_METHODS, HttpRequest
 from repro.core.items import Item, ItemSet, SetDict, group_by_key
 from repro.core.registry import FunctionRegistry
 from repro.core.sim import EventLoop
+
+
+def release_task_weights(task: Task) -> None:
+    """Balance a ``WeightStore.touch`` made at instance submit. Called on
+    the task's single completion/failure callback, or by ``WorkerNode.fail``
+    for queued tasks that are cancelled before any callback can fire —
+    exactly once per submitted task (idempotent via the meta pop), so
+    weight inflight counts return to zero with the invocations."""
+    ws = task.meta.pop("wstore", None)
+    if ws is not None:
+        ws.task_done(task.fn_name)
 
 
 @dataclass
@@ -69,6 +80,7 @@ class VertexRun:
     exec_node: Any = None           # WorkerNode the placer chose (None=home)
     exec_engines: Any = None        # that node's EngineSet (None=home)
     exec_code_cache: Any = None     # that node's CodeCache
+    exec_weights: Any = None        # that node's WeightStore
     barrier: int = 0                # outstanding inbound transfer tasks
     placed_release: Optional[Callable[[], None]] = None  # vload decrement
     # inbound transfer staging contexts: freed at THIS vertex's own
@@ -112,6 +124,7 @@ class Dispatcher:
         cache_miss_rate: float = 0.0,  # fraction of requests loading from disk
         code_cache: Optional["CodeCache"] = None,  # per-node residency model
         placer: Optional[Any] = None,  # cluster.CrossNodePlacer (attached)
+        weights: Optional[Any] = None,  # workloads.WeightStore (per node)
     ):
         self.loop = loop
         self.engines = engines
@@ -123,6 +136,7 @@ class Dispatcher:
         self.cache_miss_rate = cache_miss_rate
         self.code_cache = code_cache
         self.placer = placer
+        self.weights = weights
         self._ids = itertools.count()
         self.completed_count = 0
         self.failed_count = 0
@@ -283,33 +297,56 @@ class Dispatcher:
     ):
         v = vr.vertex
         kind = COMM if v.kind == COMM else COMPUTE
+        engines = vr.exec_engines or self.engines
+        # batchable compute vertices go to the executing node's batching
+        # engine when it models one; platforms without batch slots run
+        # them as ordinary compute tasks (identical dataflow, unshared
+        # step durations — the batching-off baseline)
+        if (
+            kind == COMPUTE
+            and engines.batch_slots
+            and self.registry.get(v.function).batchable
+        ):
+            kind = BATCH
         # remotely placed vertices run on the target node's engines and
         # warm the target node's code cache (locality is per node)
         code_cache = (
             self.code_cache if vr.exec_engines is None else vr.exec_code_cache
         )
         cached = True
-        if kind == COMPUTE and code_cache is not None:
+        if kind != COMM and code_cache is not None:
             cached = code_cache.touch(v.function)
         elif self.cache_miss_rate > 0:
             # deterministic low-discrepancy (golden-ratio Weyl) sequence:
             # misses interleave uniformly across the run instead of the
             # old counter scheme's front-loaded block of misses
             cached = (next(self.rng_seq) * 0.6180339887498949) % 1.0 >= self.cache_miss_rate
+        meta = {"inv": inv, "vr": vr, "inst": inst}
+        # model-weight residency (workloads.WeightStore) is per executing
+        # node, like the code cache; a miss makes the task pay its
+        # profile's deterministic cold_setup_s term. The store — not the
+        # code-cache bit — is the authority for functions it handles: a
+        # code miss must never bill a weight load that is resident
+        cold_setup = not cached
+        weights = self.weights if vr.exec_engines is None else vr.exec_weights
+        if kind != COMM and weights is not None and weights.handles(v.function):
+            cold_setup = not weights.touch(v.function)
+            meta["wstore"] = weights
         task = Task(
             kind=kind,
-            fn_name=v.function if kind == COMPUTE else "http",
+            fn_name=v.function if kind != COMM else "http",
             inputs=inst.inputs,
             context_bytes=v.context_bytes,
             profile=self.profiles.get(v.function),
             cached=cached,
+            cold_setup=cold_setup,
             timeout_s=v.timeout_s,
             attempts=attempts,
-            meta={"inv": inv, "vr": vr, "inst": inst},
+            meta=meta,
             on_complete=self._on_task_complete,
             on_failed=self._on_task_failed,
         )
-        (vr.exec_engines or self.engines).submit(task)
+        engines.submit(task)
 
     def _hedge(self, inv: InvocationRun, vr: VertexRun):
         if inv.failed or vr.n_done == len(vr.instances):
@@ -320,44 +357,56 @@ class Dispatcher:
 
     # ------------------------------------------------------------------
     def _on_task_complete(self, task: Task, outputs: SetDict, ctx):
-        inv: InvocationRun = task.meta["inv"]
-        vr: VertexRun = task.meta["vr"]
-        inst: InstanceState = task.meta["inst"]
-        if inv.failed or inst.done:  # hedge loser or dead invocation
-            ctx.free()
-            return
-        inst.done = True
-        inst.outputs = outputs
-        vr.contexts.append(ctx)
-        vr.n_done += 1
-        if vr.n_done == len(vr.instances):
-            self._vertex_done(inv, vr)
+        # weight refcounts are released in the finally, AFTER successor
+        # vertices have been fed and submitted (their touch lands first):
+        # a back-to-back decode chain keeps its model's inflight count
+        # above zero, so weights survive even at keepalive 0
+        try:
+            inv: InvocationRun = task.meta["inv"]
+            vr: VertexRun = task.meta["vr"]
+            inst: InstanceState = task.meta["inst"]
+            if inv.failed or inst.done:  # hedge loser or dead invocation
+                ctx.free()
+                return
+            inst.done = True
+            inst.outputs = outputs
+            vr.contexts.append(ctx)
+            vr.n_done += 1
+            if vr.n_done == len(vr.instances):
+                self._vertex_done(inv, vr)
+        finally:
+            release_task_weights(task)
 
     def _on_task_failed(self, task: Task, reason: str):
-        inv: InvocationRun = task.meta["inv"]
-        vr: VertexRun = task.meta["vr"]
-        inst: InstanceState = task.meta["inst"]
-        if inv.failed or inst.done:
-            return
-        if reason == "timeout":
-            self._fail(inv, f"{vr.vertex.name}: timeout (preempted)")
-            return
-        idempotent = True
-        if vr.vertex.kind == COMM:
-            idempotent = all(
-                (it.data.method if isinstance(it.data, HttpRequest)
-                 else str(it.data).split()[0]) in IDEMPOTENT_METHODS
-                for it in inst.inputs.get("requests", [])
-                if it.data
-            )
-        if task.attempts < self.max_retries and idempotent:
-            self._submit_instance(inv, vr, inst, attempts=task.attempts + 1)
-        else:
-            self._fail(
-                inv,
-                f"{vr.vertex.name}: {reason}"
-                + ("" if idempotent else " (not idempotent; not retried)"),
-            )
+        # release in the finally: a retry's re-touch must land before
+        # this attempt's refcount drops (same rule as _on_task_complete)
+        try:
+            inv: InvocationRun = task.meta["inv"]
+            vr: VertexRun = task.meta["vr"]
+            inst: InstanceState = task.meta["inst"]
+            if inv.failed or inst.done:
+                return
+            if reason == "timeout":
+                self._fail(inv, f"{vr.vertex.name}: timeout (preempted)")
+                return
+            idempotent = True
+            if vr.vertex.kind == COMM:
+                idempotent = all(
+                    (it.data.method if isinstance(it.data, HttpRequest)
+                     else str(it.data).split()[0]) in IDEMPOTENT_METHODS
+                    for it in inst.inputs.get("requests", [])
+                    if it.data
+                )
+            if task.attempts < self.max_retries and idempotent:
+                self._submit_instance(inv, vr, inst, attempts=task.attempts + 1)
+            else:
+                self._fail(
+                    inv,
+                    f"{vr.vertex.name}: {reason}"
+                    + ("" if idempotent else " (not idempotent; not retried)"),
+                )
+        finally:
+            release_task_weights(task)
 
     # ------------------------------------------------------------------
     def _vertex_done(self, inv: InvocationRun, vr: VertexRun, merged: bool = False):

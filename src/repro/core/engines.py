@@ -35,6 +35,17 @@ Cross-node scheduling adds a third task kind, ``TRANSFER``: a modeled
 inter-node byte movement charged to the *sending* node's comm slots.
 Like HTTP comm tasks it is cooperative — the protocol/copy CPU occupies
 the slot, the wire time does not.
+
+Serving workloads add a fourth kind, ``BATCH`` (continuous batching at
+the platform layer): a batch slot models one accelerator/model replica
+and coalesces every queued batchable task (up to ``max_batch``) into ONE
+modeled step whose duration comes from the node's
+``workloads.BatchStepModel`` roofline — the per-step weight read
+amortizes over co-resident sequences, so ``step_s(8) << 8 * step_s(1)``.
+Each coalesced task still executes its own payload (real token streams
+flow through the DAG, identical with batching on or off); only the
+virtual duration is shared. Batch slots exist only when
+``batch_slots > 0`` and never retype.
 """
 from __future__ import annotations
 
@@ -55,6 +66,7 @@ from repro.core.sim import EventLoop
 
 COMPUTE, COMM = "compute", "comm"
 TRANSFER = "transfer"   # modeled inter-node byte movement (comm slots)
+BATCH = "batch"         # coalesced serving steps (model-replica slots)
 
 
 @dataclass
@@ -66,6 +78,11 @@ class Task:
     profile: Optional[ColdStartProfile] = None  # None -> measure real run
     warm_context: Optional[MemoryContext] = None  # keep-warm platforms
     cached: bool = True             # code in RAM cache?
+    # charge the profile's cold_setup_s (non-resident state: a weight-
+    # store miss, or — when no store handles the function — a code-
+    # residency miss). Kept separate from ``cached`` so a code-cache
+    # miss can never bill a weight load the WeightStore says is resident
+    cold_setup: bool = False
     timeout_s: float = 60.0
     attempts: int = 0
     cancelled: bool = False
@@ -116,6 +133,10 @@ class EngineSlot:
             )
             if modeled:
                 setup_s, exec_s = task.profile.sample(node.rng)
+                if task.cold_setup:
+                    # non-resident state (model weights / code): the
+                    # deterministic cold term on top of the jittered base
+                    setup_s += task.profile.cold_setup_s
                 outputs = run()  # real (memoized) outputs, modeled duration
             else:
                 t0 = time.perf_counter()
@@ -222,6 +243,72 @@ class EngineSlot:
         loop.after(cpu_s, cpu_done)
         loop.after(cpu_s + io_s, io_done)
 
+    # ------------------------------------------------------------------
+    def _serve_batch(self, tasks: List[Task]):
+        """One coalesced serving step over co-resident batchable tasks.
+
+        Every task runs its own cold-start bind + payload (real outputs,
+        per-task contexts, per-task setup jitter), but the execute phase
+        is shared: ONE roofline step of ``batch_model.step_s(n)`` replaces
+        ``n`` independent execute durations. All tasks in the step
+        complete at the same virtual instant — iteration-level continuous
+        batching, where a new request waits at most one step."""
+        node = self.node
+        loop = node.loop
+        self.busy = True
+        served = []
+        setup_span = 0.0
+        for task in tasks:
+            node.inflight_tasks.add(id(task))
+            modeled = task.profile is not None
+            ctx, bd, run = cold_start(
+                node.registry,
+                task.fn_name,
+                task.inputs,
+                backend=node.backend,
+                cached=task.cached,
+                tracker=node.tracker,
+                modeled=modeled,
+            )
+            if modeled:
+                setup_s, _ = task.profile.sample(node.rng)
+                if task.cold_setup:
+                    setup_s += task.profile.cold_setup_s
+            else:
+                setup_s = bd.total
+            outputs = run()
+            served.append((task, ctx, outputs, setup_s))
+            setup_span = max(setup_span, setup_s)
+
+        step_s = node.batch_model.step_s(len(served))
+        total = setup_span + step_s
+        node.stats_busy(BATCH, total)
+
+        def finish():
+            self.busy = False
+            for task, ctx, outputs, setup_s in served:
+                node.inflight_tasks.discard(id(task))
+                # same timeout contract as the compute path (a task whose
+                # own setup + the shared step exceed its budget fails);
+                # the callback fires at batch end rather than at the
+                # timeout instant — the outcome, not the timing, is what
+                # the batching-on/off invariant guarantees
+                if setup_s + step_s > task.timeout_s:
+                    ctx.free()
+                    if task.on_failed:
+                        task.on_failed(task, "timeout")
+                elif task.cancelled:
+                    ctx.free()
+                else:
+                    for name, items in outputs.items():
+                        if name not in ctx.outputs:
+                            ctx.write_set(name, items, into="outputs")
+                    if task.on_complete:
+                        task.on_complete(task, outputs, ctx)
+            node.slot_available(self)
+
+        loop.after(total, finish)
+
 
 class EngineSet:
     """All engine slots of one worker node + the two typed queues.
@@ -241,6 +328,10 @@ class EngineSet:
         backend: str = "dandelion",
         tracker: Optional[MemoryTracker] = None,
         seed: int = 0,
+        batch_slots: int = 0,
+        batch_model=None,            # workloads.BatchStepModel (required
+                                     # when batch_slots > 0)
+        max_batch: int = 32,
     ):
         self.loop = loop
         self.registry = registry
@@ -250,12 +341,18 @@ class EngineSet:
         self.rng = np.random.default_rng(seed)
         self.compute_q: deque = deque()
         self.comm_q: deque = deque()
+        self.batch_q: deque = deque()
+        if batch_slots > 0 and batch_model is None:
+            raise ValueError("batch slots need a BatchStepModel")
+        self.batch_slots = batch_slots
+        self.batch_model = batch_model
+        self.max_batch = max_batch
         self.slots: List[EngineSlot] = []
         # per-kind idle free-lists: min-heaps of slot ids, so dispatch
         # always picks the lowest-numbered idle slot (the same assignment
         # the old full scan produced, kept for bit-stable benchmarks)
-        self._idle: Dict[str, List[int]] = {COMPUTE: [], COMM: []}
-        self._counts: Dict[str, int] = {COMPUTE: 0, COMM: 0}
+        self._idle: Dict[str, List[int]] = {COMPUTE: [], COMM: [], BATCH: []}
+        self._counts: Dict[str, int] = {COMPUTE: 0, COMM: 0, BATCH: 0}
         for i in range(num_slots):
             kind = COMM if i < comm_slots else COMPUTE
             s = EngineSlot(self, i, kind)
@@ -263,23 +360,41 @@ class EngineSet:
             self._counts[kind] += 1
             s.in_idle = True
             self._idle[kind].append(i)
-        self.busy_s = {COMPUTE: 0.0, COMM: 0.0}
-        self._arrivals = {COMPUTE: 0, COMM: 0}
+        # batch slots (model replicas) come AFTER the CPU slots so the
+        # compute/comm slot numbering — and therefore every existing
+        # benchmark's slot pairing — is untouched; they never retype
+        for i in range(num_slots, num_slots + batch_slots):
+            s = EngineSlot(self, i, BATCH)
+            self.slots.append(s)
+            self._counts[BATCH] += 1
+            s.in_idle = True
+            self._idle[BATCH].append(i)
+        self.busy_s = {COMPUTE: 0.0, COMM: 0.0, BATCH: 0.0}
+        self._arrivals = {COMPUTE: 0, COMM: 0, BATCH: 0}
         self.inflight_tasks: set = set()
         # EWMA of time tasks sat queued before a slot picked them up - the
         # signal the elastic control plane scales on (Dirigent-style)
-        self.queue_delay_ewma = {COMPUTE: 0.0, COMM: 0.0}
+        self.queue_delay_ewma = {COMPUTE: 0.0, COMM: 0.0, BATCH: 0.0}
         self._qdelay_alpha = 0.2
 
     # ------------------------------------------------------------------
     def queue(self, kind: str) -> deque:
         """Queue serving ``kind``; TRANSFER shares the comm queue (and
         therefore comm slots and FIFO order with HTTP tasks)."""
-        return self.compute_q if kind == COMPUTE else self.comm_q
+        if kind == COMPUTE:
+            return self.compute_q
+        if kind == BATCH:
+            return self.batch_q
+        return self.comm_q
 
     def submit(self, task: Task):
         task.enqueue_t = self.loop.now
-        slot_kind = COMPUTE if task.kind == COMPUTE else COMM
+        if task.kind == COMPUTE:
+            slot_kind = COMPUTE
+        elif task.kind == BATCH:
+            slot_kind = BATCH
+        else:
+            slot_kind = COMM
         self.queue(slot_kind).append(task)
         self._arrivals[slot_kind] += 1
         self._dispatch(slot_kind)
@@ -314,7 +429,27 @@ class EngineSet:
             slot = self._pop_idle(kind)
             if slot is None:
                 return
-            self._serve(slot, kind, q.popleft())
+            if kind == BATCH:
+                self._serve_batch_slot(slot)
+            else:
+                self._serve(slot, kind, q.popleft())
+
+    def _serve_batch_slot(self, slot: EngineSlot):
+        """Coalesce every queued batchable task (up to ``max_batch``, in
+        FIFO order) into one modeled step on ``slot``."""
+        q = self.batch_q
+        tasks: List[Task] = []
+        while q and len(tasks) < self.max_batch:
+            task = q.popleft()
+            if task.cancelled:
+                continue
+            self.note_queue_delay(BATCH, self.loop.now - task.enqueue_t)
+            tasks.append(task)
+        if not tasks:       # everything queued had been cancelled
+            slot.in_idle = True
+            heapq.heappush(self._idle[BATCH], slot.slot_id)
+            return
+        slot._serve_batch(tasks)
 
     def slot_available(self, slot: EngineSlot):
         """A slot finished (or freed its CPU phase): apply any pending
@@ -335,7 +470,9 @@ class EngineSet:
         q = self.queue(kind)
         while q and q[0].cancelled:
             q.popleft()
-        if q:
+        if q and kind == BATCH:
+            self._serve_batch_slot(slot)
+        elif q:
             self._serve(slot, kind, q.popleft())
         elif not slot.in_idle:
             slot.in_idle = True
@@ -345,6 +482,8 @@ class EngineSet:
         """Re-sync queues with idle slots (O(1) when queues are empty)."""
         self._dispatch(COMPUTE)
         self._dispatch(COMM)
+        if self.batch_slots:
+            self._dispatch(BATCH)
 
     def stats_busy(self, kind: str, seconds: float):
         self.busy_s[kind] += seconds
@@ -358,11 +497,19 @@ class EngineSet:
     # ----------------------------------------------------- controller API
     def counts(self) -> Dict[str, int]:
         """Slots per kind (excluding retype-pending), maintained
-        incrementally - the controller ticks every 30ms."""
-        return dict(self._counts)
+        incrementally - the controller ticks every 30ms. The BATCH entry
+        appears only on nodes that model a batching engine, so platforms
+        without one keep their pre-serving dict shape."""
+        c = {COMPUTE: self._counts[COMPUTE], COMM: self._counts[COMM]}
+        if self.batch_slots:
+            c[BATCH] = self._counts[BATCH]
+        return c
 
     def queue_lengths(self) -> Dict[str, int]:
-        return {COMPUTE: len(self.compute_q), COMM: len(self.comm_q)}
+        q = {COMPUTE: len(self.compute_q), COMM: len(self.comm_q)}
+        if self.batch_slots:
+            q[BATCH] = len(self.batch_q)
+        return q
 
     def retype_one(self, frm: str, to: str) -> bool:
         """Move one slot between engine types (finishes current task first)."""

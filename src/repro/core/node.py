@@ -34,7 +34,7 @@ from repro.core.coldstart import CodeCache, ColdStartProfile
 from repro.core.context import MemoryTracker
 from repro.core.controller import PIController
 from repro.core.dag import Composition
-from repro.core.dispatcher import Dispatcher, InvocationRun
+from repro.core.dispatcher import Dispatcher, InvocationRun, release_task_weights
 from repro.core.engines import EngineSet, Task
 from repro.core.http import ServiceRegistry
 from repro.core.items import SetDict
@@ -61,6 +61,10 @@ class WorkerNode:
         cache_miss_rate: float = 0.0,
         code_cache_entries: int = 0,   # >0 -> model per-node code residency
         base_bytes: int = 0,           # node runtime/OS footprint while up
+        batch_slots: int = 0,          # >0 -> model a batching engine
+        batch_model=None,              # workloads.BatchStepModel
+        max_batch: int = 32,
+        weight_store=None,             # workloads.WeightStore (unbound)
         seed: int = 0,
         name: str = "node0",
     ):
@@ -78,6 +82,9 @@ class WorkerNode:
             backend=backend,
             tracker=self.tracker,
             seed=seed,
+            batch_slots=batch_slots,
+            batch_model=batch_model,
+            max_batch=max_batch,
         )
         self.controller = PIController(
             self.engines,
@@ -88,6 +95,9 @@ class WorkerNode:
         self.code_cache: Optional[CodeCache] = (
             CodeCache(code_cache_entries) if code_cache_entries > 0 else None
         )
+        self.weight_store = weight_store
+        if weight_store is not None:
+            weight_store.bind(self.loop, self.tracker)
         self.dispatcher = Dispatcher(
             self.loop,
             self.engines,
@@ -97,6 +107,7 @@ class WorkerNode:
             hedge_after_s=hedge_after_s,
             cache_miss_rate=cache_miss_rate,
             code_cache=self.code_cache,
+            weights=weight_store,
         )
         self.num_slots = num_slots
         self.base_bytes = base_bytes
@@ -151,9 +162,11 @@ class WorkerNode:
         live invocation fails with "node_failure" (the cluster manager
         re-executes them on survivors - pure functions are idempotent)."""
         self.alive = False
-        for q in (self.engines.compute_q, self.engines.comm_q):
+        for q in (self.engines.compute_q, self.engines.comm_q,
+                  self.engines.batch_q):
             for task in q:
                 task.cancelled = True
+                release_task_weights(task)  # no callback will ever fire
             q.clear()
         # in-flight tasks: their completion events will observe done flags
         for inv in list(self.dispatcher.active.values()):

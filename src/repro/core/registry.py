@@ -35,6 +35,12 @@ class ComputeFunction:
     service_time_s: Optional[float] = None
     idempotent: bool = True  # pure compute functions always are (SS6.1)
     memoize: bool = True     # pure fn: repeated inputs may reuse outputs
+    # instances of this function may be coalesced with co-resident
+    # instances into one modeled step on a node's batching engine
+    # (continuous batching for serving decode steps; see
+    # repro.core.workloads.BatchStepModel). Platforms without batch
+    # slots run batchable functions as ordinary compute tasks.
+    batchable: bool = False
     disk_path: str = ""
     code: bytes = b""
 
@@ -112,6 +118,7 @@ class FunctionRegistry:
         abstract_args: Tuple[Any, ...] = (),
         service_time_s: Optional[float] = None,
         memoize: bool = True,
+        batchable: bool = False,
     ) -> ComputeFunction:
         try:
             code = pickle.dumps(fn)
@@ -131,6 +138,7 @@ class FunctionRegistry:
             abstract_args=abstract_args,
             service_time_s=service_time_s,
             memoize=memoize,
+            batchable=batchable,
             disk_path=path,
             code=code,
         )

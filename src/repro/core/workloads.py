@@ -1,0 +1,211 @@
+"""Platform-layer support for serving-style workloads (SS4 "higher-level
+services": AI inference as a composition over the elastic platform).
+
+Two pieces the serving-on-Dandelion workload needs that generic
+compositions do not:
+
+``BatchStepModel``
+    Roofline-derived duration model for one *coalesced* batch step on a
+    node's batching engine (``engines.BATCH``): co-resident decode
+    vertices from different requests run as ONE modeled step whose
+    duration is ``max(compute, memory) + overhead`` — the fixed
+    weight-read term amortizes over the batch, so elastic scale-out
+    trades batch efficiency against queueing (the paper's fig-8
+    multiplexing story at cluster scale). The terms come from
+    ``repro.launch.hlo_analysis`` cost models (or the trace-capture
+    calibration in ``repro.serving.trace_capture``); this class keeps
+    only plain floats so core stays below the launch/serving layers.
+
+``WeightStore``
+    Per-node model-weight residency: the multi-GB weight term that
+    FaaSNet-style provisioning identifies as the dominant cold-start
+    cost. Weights commit on first touch (the request then pays the
+    profile's ``cold_setup_s`` — load from disk + compile) and are
+    released once no request holds them and they have sat idle past the
+    keep-alive. ``pinned=True`` models a keep-warm replica: committed
+    from bind to the end of the run. Inflight refcounts guarantee a
+    request never loses its weights between two back-to-back decode
+    steps even at ``keepalive_s=0`` (the per-request-cold policy).
+
+Contract / determinism invariants:
+
+  * ``WeightStore`` commits/releases through the node's
+    ``MemoryTracker`` only — committed bytes return to the pre-bind
+    level once every request completes and keep-alives expire (the
+    freed-exactly-once contract, pinned by
+    tests/test_inference_service.py);
+  * ``BatchStepModel.step_s`` is pure arithmetic on the batch size: no
+    RNG, so batch-step durations are byte-stable run to run;
+  * reap events are daemon events on the virtual loop: they never keep
+    a simulation alive.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.core.context import MemoryTracker
+from repro.core.sim import EventLoop
+
+
+@dataclass(frozen=True)
+class BatchStepModel:
+    """Step time of one coalesced batch of ``n`` co-resident sequences.
+
+    ``compute_s(n) = n * flops_per_seq / peak_flops`` (each sequence adds
+    its own matmul work) vs ``memory_s(n) = (fixed_bytes + n *
+    bytes_per_seq) / hbm_bw`` (the weight read is paid once per step, KV
+    traffic per sequence) — decode is memory-bound at small ``n``, which
+    is exactly why continuous batching wins: ``step_s(8) << 8 *
+    step_s(1)``."""
+
+    flops_per_seq: float        # FLOPs one sequence adds to the step
+    fixed_bytes: float          # HBM bytes read once per step (weights)
+    bytes_per_seq: float        # HBM bytes each sequence adds (KV cache)
+    peak_flops: float
+    hbm_bw: float
+    overhead_s: float = 0.0     # per-step dispatch/kernel-launch floor
+
+    def compute_s(self, batch: int) -> float:
+        return batch * self.flops_per_seq / self.peak_flops
+
+    def memory_s(self, batch: int) -> float:
+        return (self.fixed_bytes + batch * self.bytes_per_seq) / self.hbm_bw
+
+    def step_s(self, batch: int) -> float:
+        """Roofline step time for a batch of ``batch`` sequences."""
+        if batch <= 0:
+            return 0.0
+        return max(self.compute_s(batch), self.memory_s(batch)) + self.overhead_s
+
+    def amortization(self, batch: int) -> float:
+        """Throughput multiplier of batching: ``batch * step_s(1) /
+        step_s(batch)`` — the efficiency elastic scale-out trades away
+        when it spreads co-resident sequences over more nodes."""
+        if batch <= 0:
+            return 1.0
+        return batch * self.step_s(1) / self.step_s(batch)
+
+
+@dataclass
+class _ModelState:
+    param_bytes: int
+    resident: bool = False
+    inflight: int = 0          # tasks submitted, not yet completed/failed
+    idle_since: float = 0.0
+    touches: int = 0
+    cold_touches: int = 0
+
+
+class WeightStore:
+    """Per-node model-weight residency with keep-alive release.
+
+    Construct once per node, ``register`` each model with the compute
+    functions that need it, and hand the store to the node
+    (``WorkerNode(weight_store=...)``); the node binds it to its loop
+    and memory tracker. The dispatcher then calls ``touch`` at instance
+    submit (a miss commits the weights and returns False, so the task's
+    ``cold_setup_s`` is charged) and ``task_done`` when the task
+    completes, fails, or is cancelled.
+    """
+
+    def __init__(self, *, keepalive_s: float = 0.0, pinned: bool = False):
+        self.keepalive_s = keepalive_s
+        self.pinned = pinned
+        self.loop: Optional[EventLoop] = None
+        self.tracker: Optional[MemoryTracker] = None
+        self._models: Dict[str, _ModelState] = {}
+        self._by_fn: Dict[str, str] = {}     # fn_name -> model name
+
+    # ------------------------------------------------------------------
+    def register(self, model: str, param_bytes: int, fn_names) -> None:
+        st = self._models.setdefault(model, _ModelState(param_bytes=param_bytes))
+        st.param_bytes = param_bytes
+        for fn in fn_names:
+            self._by_fn[fn] = model
+
+    def bind(self, loop: EventLoop, tracker: MemoryTracker) -> None:
+        """Attach to the owning node. Pinned stores commit every model's
+        weights immediately (the keep-warm replica holds them for the
+        whole run)."""
+        self.loop = loop
+        self.tracker = tracker
+        if self.pinned:
+            for st in self._models.values():
+                if not st.resident:
+                    st.resident = True
+                    tracker.commit(st.param_bytes)
+
+    def handles(self, fn_name: str) -> bool:
+        return fn_name in self._by_fn
+
+    def resident(self, model: str) -> bool:
+        return self._models[model].resident
+
+    @property
+    def resident_bytes(self) -> int:
+        return sum(s.param_bytes for s in self._models.values() if s.resident)
+
+    # ------------------------------------------------------------------
+    def touch(self, fn_name: str) -> bool:
+        """A task needing ``fn_name``'s model is being submitted. Returns
+        True when the weights are already resident (warm start); a miss
+        commits them and returns False — the caller charges the
+        profile's ``cold_setup_s``."""
+        model = self._by_fn.get(fn_name)
+        if model is None:
+            return True
+        st = self._models[model]
+        st.inflight += 1
+        st.touches += 1
+        if st.resident:
+            return True
+        st.cold_touches += 1
+        st.resident = True
+        if self.tracker is not None:
+            self.tracker.commit(st.param_bytes)
+        return self.pinned  # a pinned store never pays the cold term
+
+    def task_done(self, fn_name: str) -> None:
+        """Balance a prior ``touch``: the task completed, failed, or was
+        cancelled. When the model goes fully idle, schedule the
+        keep-alive reap (a daemon event; pinned stores never release)."""
+        model = self._by_fn.get(fn_name)
+        if model is None:
+            return
+        st = self._models[model]
+        st.inflight -= 1
+        if st.inflight > 0 or self.pinned or not st.resident:
+            return
+        now = self.loop.now if self.loop is not None else 0.0
+        st.idle_since = now
+        if self.keepalive_s <= 0.0:
+            self._release(st)
+        elif self.loop is not None:
+            self.loop.after(self.keepalive_s, lambda: self._reap(st), daemon=True)
+
+    def _reap(self, st: _ModelState) -> None:
+        if (
+            st.resident
+            and st.inflight == 0
+            and not self.pinned
+            and self.loop is not None
+            and self.loop.now - st.idle_since >= self.keepalive_s - 1e-12
+        ):
+            self._release(st)
+
+    def _release(self, st: _ModelState) -> None:
+        st.resident = False
+        if self.tracker is not None:
+            self.tracker.release(st.param_bytes)
+
+    # ------------------------------------------------------------ stats
+    def summary(self) -> Dict[str, float]:
+        touches = sum(s.touches for s in self._models.values())
+        colds = sum(s.cold_touches for s in self._models.values())
+        return {
+            "models": len(self._models),
+            "touches": touches,
+            "cold_touches": colds,
+            "cold_rate": colds / touches if touches else 0.0,
+        }

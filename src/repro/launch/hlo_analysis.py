@@ -212,3 +212,97 @@ class RooflineTerms:
             "useful_flops_fraction": self.useful_flops_fraction,
             "mfu": self.mfu,
         }
+
+
+# ===========================================================================
+# Serving cost models (serving-on-Dandelion: weight cold start + step terms)
+# ===========================================================================
+def count_hlo_ops(hlo_text: str) -> int:
+    """Instruction count of an (optimized) HLO module — the compile-time
+    proxy ``weight_coldstart_estimate`` consumes: XLA compile latency is
+    dominated by per-instruction passes, so seconds-per-op over the op
+    count is a serviceable first-order model."""
+    return sum(1 for line in hlo_text.splitlines() if _DEF_RE.match(line))
+
+
+@dataclass(frozen=True)
+class WeightColdStart:
+    """Model-weight cold-start terms for a serving function.
+
+    The FaaSNet observation (PAPERS.md): for inference functions the
+    dominant provisioning cost is not the sandbox but moving and
+    preparing the model — reading ``param_bytes`` from the code store
+    (disk / object storage) plus (re)building the executable, priced
+    from the HLO instruction count. ``total_s`` feeds the function's
+    ``ColdStartProfile.cold_setup_s``, charged only when the executing
+    node does not already hold the weights (``core.workloads.WeightStore``).
+    """
+
+    param_bytes: float
+    disk_bandwidth_bps: float = 2e9        # NVMe-class read rate
+    hlo_ops: int = 0
+    compile_s_per_op: float = 2e-3         # XLA pass cost per instruction
+
+    @property
+    def load_s(self) -> float:
+        return self.param_bytes / self.disk_bandwidth_bps
+
+    @property
+    def compile_s(self) -> float:
+        return self.hlo_ops * self.compile_s_per_op
+
+    @property
+    def total_s(self) -> float:
+        return self.load_s + self.compile_s
+
+
+def weight_coldstart_estimate(
+    param_bytes: float,
+    *,
+    hlo_text: Optional[str] = None,
+    hlo_ops: Optional[int] = None,
+    disk_bandwidth_bps: float = 2e9,
+    compile_s_per_op: float = 2e-3,
+) -> WeightColdStart:
+    """Build a ``WeightColdStart`` from either a real optimized-HLO dump
+    (``hlo_text``, counted with ``count_hlo_ops``) or a caller-supplied
+    op-count estimate (e.g. layers x ops-per-layer for configs too big
+    to lower on this host)."""
+    ops = count_hlo_ops(hlo_text) if hlo_text is not None else int(hlo_ops or 0)
+    return WeightColdStart(
+        param_bytes=param_bytes,
+        disk_bandwidth_bps=disk_bandwidth_bps,
+        hlo_ops=ops,
+        compile_s_per_op=compile_s_per_op,
+    )
+
+
+def serving_step_terms(
+    *,
+    param_bytes: float,
+    flops_per_seq: float,
+    kv_bytes_per_seq: float,
+    batch: int,
+    peak_flops: float,
+    hbm_bw: float,
+    ici_bw: float = 1.0,
+    chips: int = 1,
+) -> RooflineTerms:
+    """Roofline terms for ONE decode (or prefill) step over ``batch``
+    co-resident sequences on one replica: each sequence adds its own
+    FLOPs and KV traffic while the weight read is paid once per step —
+    the amortization continuous batching exists to exploit. The
+    ``step_time_s`` of the returned terms is what the platform's
+    ``core.workloads.BatchStepModel`` reproduces as ``step_s(batch)``
+    (minus the per-step overhead floor the platform adds)."""
+    return RooflineTerms(
+        chips=chips,
+        flops_per_device=batch * flops_per_seq,
+        hbm_bytes_per_device=param_bytes + batch * kv_bytes_per_seq,
+        collective_link_bytes_per_device=0.0,
+        collective_operand_bytes_per_device=0.0,
+        peak_flops=peak_flops,
+        hbm_bw=hbm_bw,
+        ici_bw=ici_bw,
+        model_flops=batch * flops_per_seq,
+    )

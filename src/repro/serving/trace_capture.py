@@ -1,0 +1,124 @@
+"""Trace capture: measure real prefill/decode step timings to calibrate
+the platform's serving cost models.
+
+The serving simulation (``benchmarks/fig13_serving.py``) runs on
+analytic rooflines so its outputs are byte-stable; this shim is the
+bridge back to reality: it drives the *real* jitted serving steps
+(``repro.serving.engine``) on a small config, records wall-clock step
+times per batch size, and fits them to the platform's
+``core.workloads.BatchStepModel`` shape — ``step_s(n) = fixed + n *
+per_seq`` (the decode roofline is memory-bound at CI scale, so the
+affine fit is the right functional form). Use it to sanity-check the
+analytic model's *shape* (fixed-cost amortization over the batch), or to
+produce a host-calibrated model for what-if runs:
+
+    timings = capture_step_timings(api, params, batches=(1, 4))
+    model = calibrated_batch_model(timings)
+
+Wall-clock numbers are machine-dependent by construction: nothing in the
+committed benchmark path calls this module (determinism contract), and
+the calibration runs real compiles — keep configs at smoke scale.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.workloads import BatchStepModel
+from repro.models.model import ModelApi
+
+
+@dataclass(frozen=True)
+class StepTiming:
+    """Median wall-clock seconds for one prefill + one decode step at a
+    given batch size (post-warmup: compile excluded)."""
+
+    batch: int
+    prefill_s: float
+    decode_s: float
+
+
+def capture_step_timings(
+    api: ModelApi,
+    params,
+    *,
+    batches: Sequence[int] = (1, 2, 4),
+    cache_len: int = 32,
+    prompt_len: int = 8,
+    samples: int = 3,
+    seed: int = 0,
+) -> List[StepTiming]:
+    """Run the real jitted steps per batch size and record medians.
+
+    One warmup call per (shape, step) pays the compile before timing, so
+    the medians measure steady-state step latency — the quantity the
+    ``BatchStepModel`` roofline predicts."""
+    prefill = jax.jit(api.prefill)
+    decode = jax.jit(api.decode_step)
+    rng = np.random.default_rng(seed)
+    out: List[StepTiming] = []
+    for b in batches:
+        toks = jnp.asarray(
+            rng.integers(1, 100, size=(b, cache_len)), jnp.int32
+        )
+        plens = jnp.full((b,), prompt_len, jnp.int32)
+        logits, cache = prefill(params, toks, plens)          # warmup/compile
+        step_toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        decode(params, cache, step_toks)                      # warmup/compile
+
+        pf, dc = [], []
+        for _ in range(samples):
+            t0 = time.perf_counter()
+            logits, cache = prefill(params, toks, plens)
+            jax.block_until_ready(logits)
+            pf.append(time.perf_counter() - t0)
+
+            t0 = time.perf_counter()
+            logits, cache = decode(params, cache, step_toks)
+            jax.block_until_ready(logits)
+            dc.append(time.perf_counter() - t0)
+        out.append(StepTiming(
+            batch=int(b),
+            prefill_s=float(np.median(pf)),
+            decode_s=float(np.median(dc)),
+        ))
+    return out
+
+
+def fit_affine(timings: Sequence[StepTiming]) -> Tuple[float, float]:
+    """Least-squares ``decode_s ~ fixed + batch * per_seq`` fit. With a
+    single batch size the whole cost is attributed to the fixed term
+    (per_seq = 0) — enough for a smoke check, not a calibration."""
+    if not timings:
+        raise ValueError("no timings to fit")
+    if len(timings) == 1:
+        return timings[0].decode_s, 0.0
+    xs = np.asarray([t.batch for t in timings], np.float64)
+    ys = np.asarray([t.decode_s for t in timings], np.float64)
+    per_seq, fixed = np.polyfit(xs, ys, 1)
+    return float(max(fixed, 0.0)), float(max(per_seq, 0.0))
+
+
+def calibrated_batch_model(
+    timings: Sequence[StepTiming],
+    *,
+    reference_bw: float = 1.0,
+) -> BatchStepModel:
+    """Host-calibrated ``BatchStepModel``: the affine fit is encoded as a
+    pure memory-roofline model (``fixed_bytes/hbm_bw = fixed``,
+    ``bytes_per_seq/hbm_bw = per_seq``) with the compute term zeroed, so
+    ``step_s(n)`` reproduces the measured affine curve exactly."""
+    fixed_s, per_seq_s = fit_affine(timings)
+    return BatchStepModel(
+        flops_per_seq=0.0,
+        fixed_bytes=fixed_s * reference_bw,
+        bytes_per_seq=per_seq_s * reference_bw,
+        peak_flops=1.0,
+        hbm_bw=reference_bw,
+        overhead_s=0.0,
+    )

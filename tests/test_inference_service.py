@@ -1,0 +1,304 @@
+"""Serving-on-Dandelion workload invariants.
+
+Pins the contracts the fig13 benchmark and the platform batching engine
+rely on:
+
+  * modeled step durations (and therefore latencies/timelines) are
+    byte-identical across runs given the same seeds;
+  * every KV-cache-carrying MemoryContext is freed exactly once —
+    committed bytes return to zero after the last request drains, on a
+    single node and across cross-node KV migration (CROSSNODE both
+    ways; CI runs this module under both env settings);
+  * batching on vs off produces identical token streams (batching may
+    only reshape *durations*, never dataflow);
+  * WeightStore residency: pinned stores never go cold, keep-alive
+    stores release in idle valleys, inflight refcounts protect
+    back-to-back decode steps at keepalive 0.
+"""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.apps.inference_service import (
+    LMSpec,
+    build_request_composition,
+    expected_tokens,
+    register_inference_service,
+)
+from repro.core import (
+    BatchStepModel,
+    ClusterManager,
+    EventLoop,
+    FunctionRegistry,
+    Item,
+    TransferProfile,
+    WeightStore,
+    WorkerNode,
+)
+
+SPEC = LMSpec()
+
+
+def _platform(*, batch_slots=1, max_batch=16, keepalive_s=0.0, pinned=False,
+              seed=1, loop=None):
+    reg = FunctionRegistry()
+    svc = register_inference_service(reg, SPEC)
+    loop = loop or EventLoop()
+    ws = svc.make_weight_store(keepalive_s=keepalive_s, pinned=pinned)
+    node = WorkerNode(
+        reg, loop=loop, num_slots=6, profiles=svc.profiles,
+        batch_slots=batch_slots, batch_model=svc.batch_model,
+        max_batch=max_batch, weight_store=ws, seed=seed,
+    )
+    return reg, svc, loop, node, ws
+
+
+def _requests(n=6, seed=0):
+    rng = np.random.default_rng(seed)
+    out = []
+    for rid in range(n):
+        p = int(rng.integers(8, 24))
+        d = int(rng.integers(3, 9))
+        prompt = (f"req{rid}:".encode() * p)[: 4 * p]
+        out.append((0.01 * rid, prompt, p, d))
+    return out
+
+
+def _run(node_or_cm, loop, requests, invoke):
+    results = {}
+    for t, prompt, p, d in requests:
+        comp = build_request_composition(SPEC, prompt_len=p, n_decode=d)
+
+        def done(inv, prompt=prompt):
+            assert not inv.failed, inv.failed
+            results[prompt] = inv
+        loop.after(t, lambda c=comp, pr=prompt, cb=done: invoke(
+            c, {"prompt": [Item(pr)]}, cb))
+    loop.run()
+    return results
+
+
+def _tokens_of(inv):
+    text = inv.outputs["text"][0].data.decode()
+    return [int(t) for t in text[len("tok:"):].split(",")]
+
+
+# ---------------------------------------------------------------- tokens
+def test_tokens_match_reference_and_batching_invariant():
+    """Identical token streams with the batching engine on, serialized
+    (max_batch=1), and absent (batch_slots=0) — and all equal to the
+    pure-function reference."""
+    reqs = _requests()
+    streams = []
+    for batch_slots, max_batch in ((1, 16), (1, 1), (0, 16)):
+        if batch_slots == 0:
+            reg = FunctionRegistry()
+            svc = register_inference_service(reg, SPEC)
+            loop = EventLoop()
+            node = WorkerNode(reg, loop=loop, num_slots=6,
+                              profiles=svc.profiles,
+                              weight_store=svc.make_weight_store(), seed=1)
+        else:
+            _, _, loop, node, _ = _platform(
+                batch_slots=batch_slots, max_batch=max_batch)
+        results = _run(node, loop, reqs, node.invoke)
+        streams.append({p: _tokens_of(inv) for p, inv in results.items()})
+    assert streams[0] == streams[1] == streams[2]
+    for t, prompt, p, d in reqs:
+        assert streams[0][prompt] == expected_tokens(prompt, SPEC, d)
+
+
+# ----------------------------------------------------------- determinism
+def test_modeled_durations_deterministic_across_runs():
+    def latencies(max_batch):
+        _, _, loop, node, _ = _platform(max_batch=max_batch, keepalive_s=0.5)
+        results = _run(node, loop, _requests(), node.invoke)
+        lats = sorted((p, inv.latency, inv.t_end) for p, inv in results.items())
+        points = list(node.tracker.timeline.points)
+        return lats, points
+
+    a = latencies(16)
+    b = latencies(16)
+    assert a == b  # latencies AND the full committed-memory step function
+    # batching changes durations, not dataflow: serialized steps differ
+    c = latencies(1)
+    assert [p for p, _, _ in a[0]] == [p for p, _, _ in c[0]]
+    assert a != c
+
+
+# ------------------------------------------------------- freed exactly once
+def test_kv_contexts_freed_exactly_once_single_node():
+    _, _, loop, node, ws = _platform(keepalive_s=0.0)
+    results = _run(node, loop, _requests(n=8), node.invoke)
+    assert len(results) == 8
+    # weights released at inflight 0 (keepalive 0) and every KV context
+    # freed exactly once: committed bytes return to zero
+    assert node.tracker.committed == 0
+    assert all(s.inflight == 0 for s in ws._models.values())
+    assert ws.summary()["cold_touches"] >= 1
+
+
+@pytest.mark.parametrize("crossnode", [False, True])
+def test_kv_freed_exactly_once_crossnode_migration(crossnode):
+    """Decode vertices migrating between nodes stage the KV cache in
+    transfer contexts; committed bytes on BOTH nodes must return to zero
+    and every cross-node KV edge is charged with real cache bytes."""
+    reg = FunctionRegistry()
+    svc = register_inference_service(reg, SPEC)
+    loop = EventLoop()
+    nodes = []
+    for i in range(2):
+        nodes.append(WorkerNode(
+            reg, loop=loop, num_slots=4, profiles=svc.profiles,
+            batch_slots=1, batch_model=svc.batch_model,
+            weight_store=svc.make_weight_store(keepalive_s=0.0),
+            seed=7 + i, name=f"kv{i}",
+        ))
+    cm = ClusterManager(nodes, loop, crossnode=crossnode,
+                        transfer_profile=TransferProfile())
+    if crossnode:
+        # force ping-pong placement so every KV edge crosses nodes: the
+        # load-based policy happily co-locates a decode chain (cheap),
+        # but this test is about the migration mechanics — staging
+        # contexts, ownership transfer, byte-exact charging
+        flip = itertools.count()
+        cm.placer._pick = lambda fn, home: nodes[next(flip) % 2]
+    reqs = _requests(n=6, seed=3)
+    results = _run(cm, loop, reqs, cm.invoke)
+    assert len(results) == len(reqs)
+    for t, prompt, p, d in reqs:
+        assert _tokens_of(results[prompt]) == expected_tokens(prompt, SPEC, d)
+    for n in nodes:
+        assert n.tracker.committed == 0, n.name
+    if crossnode:
+        stats = cm.placer.stats
+        assert stats.remote_placements > 0
+        assert stats.transfers > 0
+        # migrated KV edges move real cache bytes (>= one prompt's cache)
+        min_kv = min(p for _, _, p, _ in reqs) * SPEC.kv_bytes_per_token
+        assert stats.bytes_total >= min_kv
+    else:
+        assert cm.placer is None
+
+
+# ------------------------------------------------------------ weight store
+def test_weight_store_keepalive_and_pinning():
+    spec = SPEC
+
+    # pinned: committed at bind, never cold, never released
+    _, svc, ploop, pnode, pws = _platform(pinned=True)
+    assert pnode.tracker.committed == spec.param_bytes
+    _run(pnode, ploop, _requests(n=2), pnode.invoke)
+    assert pws.summary()["cold_touches"] == 0
+    assert pnode.tracker.committed == spec.param_bytes
+
+    # keep-alive: resident through the run, released after the idle gap
+    _, _, loop, node, ws = _platform(keepalive_s=0.5)
+    _run(node, loop, _requests(n=2), node.invoke)
+    assert node.tracker.committed == spec.param_bytes  # still warm
+    loop.run(until=loop.now + 1.0)                     # let the reap fire
+    assert node.tracker.committed == 0
+    # a second burst pays exactly one more cold touch
+    _run(node, loop, _requests(n=2, seed=9), node.invoke)
+    assert ws.summary()["cold_touches"] == 2
+
+
+def test_isolated_request_pays_exactly_one_cold_at_keepalive_zero():
+    """A single request with no concurrent traffic on a keepalive-0
+    store: the refcount release happens AFTER successor decode steps are
+    submitted, so the chain holds its weights — one cold touch for the
+    whole request, not one per step."""
+    _, _, loop, node, ws = _platform(keepalive_s=0.0)
+    results = _run(node, loop, _requests(n=1), node.invoke)
+    inv = next(iter(results.values()))
+    assert ws.summary()["cold_touches"] == 1
+    # and the latency reflects ONE weight load, not one per decode step
+    cold = ws._models[SPEC.name].param_bytes  # sanity: store is bound
+    assert cold == SPEC.param_bytes
+    assert inv.latency < 2.0 * node.dispatcher.profiles[
+        f"{SPEC.name}_prefill"].cold_setup_s
+    assert node.tracker.committed == 0
+
+
+def test_code_cache_miss_never_bills_resident_weights():
+    """The weight store, not the code-cache bit, decides cold_setup_s:
+    with a 100% code-miss rate and resident weights, no request after
+    the first pays the multi-second weight load."""
+    reg = FunctionRegistry()
+    svc = register_inference_service(reg, SPEC)
+    loop = EventLoop()
+    node = WorkerNode(
+        reg, loop=loop, num_slots=6, profiles=svc.profiles,
+        batch_slots=1, batch_model=svc.batch_model,
+        cache_miss_rate=1.0,      # every submit is a code-cache miss
+        weight_store=svc.make_weight_store(keepalive_s=5.0), seed=1,
+    )
+    results = _run(node, loop, _requests(n=3), node.invoke)
+    cold_s = svc.profiles[f"{SPEC.name}_prefill"].cold_setup_s
+    lats = sorted(inv.latency for inv in results.values())
+    assert lats[-1] > cold_s         # the first request pays the load
+    assert lats[0] < 0.5 * cold_s    # the rest never do, despite the
+    assert lats[1] < 0.5 * cold_s    # forced 100% code-miss rate
+
+
+def test_batch_timeout_matches_compute_path():
+    """A batchable task whose duration exceeds its vertex timeout fails
+    identically with the batching engine on or off (dataflow invariance
+    covers outcomes, not just tokens)."""
+    from repro.core.dag import Composition
+
+    def run_with(batch_slots):
+        reg = FunctionRegistry()
+        svc = register_inference_service(reg, SPEC)
+        loop = EventLoop()
+        node = WorkerNode(
+            reg, loop=loop, num_slots=4, profiles=svc.profiles,
+            batch_slots=batch_slots, batch_model=svc.batch_model,
+            weight_store=svc.make_weight_store(), seed=1,
+        )
+        c = Composition("tight")
+        v = c.compute("d", f"{SPEC.name}_decode", inputs=("kv", "tok"),
+                      outputs=("kv", "tok"), timeout_s=1e-6)
+        c.bind_input("kv", v["kv"])
+        c.bind_input("tok", v["tok"])
+        c.bind_output("tok", v["tok"])
+        c.validate()
+        from repro.apps.inference_service import KVCache
+        out = []
+        node.invoke(c, {"kv": [Item(KVCache(SPEC.name, "ab", 4,
+                                            SPEC.kv_bytes_per_token))],
+                        "tok": [Item(1)]},
+                    on_done=out.append)
+        loop.run()
+        return out[0].failed
+
+    on, off = run_with(1), run_with(0)
+    assert on is not None and "timeout" in on
+    assert off is not None and "timeout" in off
+
+
+def test_batch_step_model_amortizes():
+    m = BatchStepModel(
+        flops_per_seq=2.6e9, fixed_bytes=2.6e9, bytes_per_seq=30e6,
+        peak_flops=197e12, hbm_bw=819e9, overhead_s=100e-6,
+    )
+    assert m.step_s(0) == 0.0
+    assert m.step_s(16) < 16 * m.step_s(1)      # coalescing wins
+    assert m.step_s(16) > m.step_s(1)           # but is not free
+    assert m.amortization(16) > 4.0
+    # monotone in batch size
+    steps = [m.step_s(n) for n in range(1, 33)]
+    assert steps == sorted(steps)
+
+
+def test_weight_cold_rate_prices_hlo_terms():
+    reg = FunctionRegistry()
+    svc = register_inference_service(reg, SPEC)
+    wc = svc.weight_cold
+    assert wc.load_s == pytest.approx(SPEC.param_bytes / 2e9)
+    assert wc.hlo_ops == SPEC.hlo_ops_estimate
+    assert svc.profiles[f"{SPEC.name}_prefill"].cold_setup_s == pytest.approx(
+        wc.total_s)
+    # cold start dominates a warm request end-to-end
+    assert wc.total_s > 100 * svc.prefill_step_s

@@ -1,4 +1,5 @@
-"""Serving: prefill-vs-decode consistency, continuous batching."""
+"""Serving: prefill-vs-decode consistency, continuous batching, and the
+trace-capture shim that calibrates the platform's batch-step model."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,6 +9,11 @@ from repro.configs import ARCH_IDS, get_smoke
 from repro.models.model import build
 from repro.serving.batching import ContinuousBatcher, Request
 from repro.serving.engine import generate
+from repro.serving.trace_capture import (
+    calibrated_batch_model,
+    capture_step_timings,
+    fit_affine,
+)
 
 RNG = jax.random.PRNGKey(0)
 
@@ -64,6 +70,25 @@ def test_continuous_batcher_matches_sequential_generate():
         seq = generate(api, params, toks, plen, max_new)
         want = np.asarray(seq[0]).tolist()
         assert results[rid] == want, f"req {rid}: {results[rid]} != {want}"
+
+
+def test_trace_capture_calibrates_batch_model():
+    """Real jitted step timings fit the platform's BatchStepModel shape:
+    the calibrated model reproduces the measured affine decode curve."""
+    cfg = get_smoke("mamba2-130m")
+    api = build(cfg)
+    params = api.init_params(RNG)
+    timings = capture_step_timings(
+        api, params, batches=(1, 2), cache_len=16, prompt_len=4, samples=2,
+    )
+    assert [t.batch for t in timings] == [1, 2]
+    assert all(t.prefill_s > 0 and t.decode_s > 0 for t in timings)
+    fixed, per_seq = fit_affine(timings)
+    model = calibrated_batch_model(timings)
+    assert model.step_s(1) == pytest.approx(fixed + per_seq)
+    assert model.step_s(2) == pytest.approx(fixed + 2 * per_seq)
+    # batching a calibrated model never beats per-sequence linearity
+    assert model.step_s(4) <= 4 * model.step_s(1) + 1e-12
 
 
 def test_batcher_frees_slots_and_admits_waiting():

@@ -1,0 +1,115 @@
+#!/usr/bin/env python
+"""CI gate: deterministic benchmark CSVs must match their committed seeds.
+
+Regenerates the named benchmarks (default: the fully modeled, seeded
+ones — fig10, fig11, fig12) into a scratch directory and compares their
+*data rows* against the committed files under ``results/bench/``.
+Comment lines (``# ...``, including the machine-dependent ``# perf``
+throughput lines) are excluded; everything else must be byte-identical —
+the cross-PR determinism contract docs/BENCHMARKS.md states, promoted
+here from a manual check into an automated job.
+
+Usage:
+    python tools/check_bench_identity.py [--names fig10,fig11,fig12]
+                                         [--keep-dir DIR] [--skip-run]
+
+``--skip-run`` compares an existing ``--keep-dir`` without regenerating
+(useful when a previous CI step already produced the CSVs there).
+Exit 1 on any drift, listing the first differing lines per file.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+SEED_DIR = ROOT / "results" / "bench"
+DEFAULT_NAMES = "fig10,fig11,fig12"
+
+
+def data_rows(path: Path):
+    return [ln for ln in path.read_text().splitlines()
+            if ln and not ln.startswith("#")]
+
+
+def regenerate(names: str, outdir: str) -> int:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    # identity runs use every benchmark's committed default window: the
+    # quick/smoke knobs produce different (still deterministic) rows
+    for knob in ("FIG10_DURATION_S", "FIG10_RATE_HZ", "FIG11_QUICK",
+                 "FIG12_DURATION_S", "FIG12_RATE_HZ", "FIG13_QUICK",
+                 "FIG13_DURATION_S", "CROSSNODE"):
+        env.pop(knob, None)
+    cmd = [sys.executable, "-m", "benchmarks.run",
+           "--only", names, "--outdir", outdir]
+    return subprocess.run(cmd, cwd=ROOT, env=env).returncode
+
+
+def compare(names, outdir: Path) -> list:
+    errors = []
+    for name in names:
+        fresh, seed = outdir / f"{name}.csv", SEED_DIR / f"{name}.csv"
+        if not seed.is_file():
+            errors.append(f"{name}: committed seed {seed} missing")
+            continue
+        if not fresh.is_file():
+            errors.append(f"{name}: regenerated CSV {fresh} missing")
+            continue
+        got, want = data_rows(fresh), data_rows(seed)
+        if got != want:
+            diff = next(
+                (i for i, (g, w) in enumerate(zip(got, want)) if g != w),
+                min(len(got), len(want)),
+            )
+            errors.append(
+                f"{name}: data rows differ from committed seed at line "
+                f"{diff + 1}:\n    fresh: "
+                f"{got[diff] if diff < len(got) else '<missing>'}\n    seed:  "
+                f"{want[diff] if diff < len(want) else '<missing>'}"
+            )
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--names", default=DEFAULT_NAMES)
+    ap.add_argument("--keep-dir", default=None,
+                    help="write/reuse this directory instead of a tempdir")
+    ap.add_argument("--skip-run", action="store_true",
+                    help="compare --keep-dir contents without regenerating")
+    args = ap.parse_args()
+    names = args.names.split(",")
+
+    if args.keep_dir:
+        outdir = Path(args.keep_dir)
+        outdir.mkdir(parents=True, exist_ok=True)
+    else:
+        outdir = Path(tempfile.mkdtemp(prefix="bench_identity_"))
+    if not args.skip_run:
+        rc = regenerate(args.names, str(outdir))
+        if rc != 0:
+            print(f"check_bench_identity: benchmark run failed (exit {rc})",
+                  file=sys.stderr)
+            return 1
+
+    errors = compare(names, outdir)
+    if errors:
+        print(f"check_bench_identity: {len(errors)} benchmark(s) drifted "
+              f"from the committed seeds:", file=sys.stderr)
+        for e in errors:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    print(f"check_bench_identity: {len(names)} benchmark CSV(s) "
+          f"byte-identical to committed seeds ({', '.join(names)})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
