@@ -29,20 +29,14 @@ import os
 
 import numpy as np
 
-from repro.core import (
-    ColdStartProfile,
-    EventLoop,
-    FunctionRegistry,
-    KeepWarmPlatform,
-    WorkerNode,
-)
+from repro import sdk
+from repro.core import ColdStartProfile, EventLoop, KeepWarmPlatform
 from repro.core.items import Item
 from repro.core.trace import generate_events, generate_functions
 from benchmarks.common import (
     PERF,
     SIMPERF_EXTRA,
     emit,
-    single_function_composition,
     track,
     write_simperf,
 )
@@ -104,29 +98,32 @@ def run():
     })
 
     # ------------------------- Dandelion ------------------------------
-    reg = FunctionRegistry()
-    profiles = {}
+    # SDK front door: one typed declaration per trace function (payload +
+    # context bytes + calibrated profile in one place), deployed onto a
+    # single-node Platform and driven through submit_stream
+    platform = sdk.Platform(node=sdk.NodeSpec(
+        num_slots=CORES, comm_slots=1, cache_miss_rate=0.03, seed=3,
+    ))
     comps = {}
     for f in fns:
-        reg.register_function(
+        spec = sdk.declare(
             f.name, lambda ins: {"out": [Item(1)]},
+            inputs=("x",), outputs=("out",),
             context_bytes=f.context_bytes,
+            profile=ColdStartProfile(
+                DANDELION_SETUP_S, f.exec_median_s, jitter_sigma=f.exec_sigma,
+            ),
         )
-        profiles[f.name] = ColdStartProfile(
-            DANDELION_SETUP_S, f.exec_median_s, jitter_sigma=f.exec_sigma,
-        )
-        comps[f.name] = single_function_composition(reg, f.name)
-    node = WorkerNode(
-        reg, num_slots=CORES, comm_slots=1, profiles=profiles,
-        cache_miss_rate=0.03, seed=3,
-    )
+        comps[f.name] = platform.deploy(sdk.single_function_app(spec))
+    node = platform.node
     with track("fig10/dandelion", len(events)):
-        node.invoke_stream((e.t, comps[e.fn], {"x": [Item(0)]}) for e in events)
-        node.run(until=DURATION_S)
+        platform.submit_stream(
+            (e.t, comps[e.fn], {"x": [Item(0)]}) for e in events)
+        platform.run(until=DURATION_S)
         # window average read before draining keeps the O(1) streaming path
         dd_avg_mb = node.tracker.timeline.average(DURATION_S) / 1024**2
-        node.loop.run()  # drain stragglers past the window
-    s = node.latency.summary()
+        platform.run()  # drain stragglers past the window
+    s = platform.latency.summary()
     rows.append({
         "platform": "dandelion",
         "events": len(events),

@@ -27,19 +27,11 @@ from __future__ import annotations
 import os
 import sys
 
-from repro.core import (
-    ClusterManager,
-    ColdStartProfile,
-    ControlPlaneConfig,
-    ElasticControlPlane,
-    EventLoop,
-    FunctionRegistry,
-    Item,
-    WorkerNode,
-)
+from repro import sdk
+from repro.core import ColdStartProfile, ControlPlaneConfig, Item
 from repro.core.sim import merged_peak
 from repro.core.trace import generate_events, generate_functions
-from benchmarks.common import emit, single_function_composition, track
+from benchmarks.common import emit, track
 
 MAX_NODES = 6
 NODE_SLOTS = 8
@@ -66,20 +58,20 @@ def _workload(duration_s: float):
     return fns, events
 
 
-def _registry(fns):
-    reg = FunctionRegistry()
-    profiles = {}
+def _deploy(platform: sdk.Platform, fns):
+    """Declare + deploy one single-function app per trace function."""
     comps = {}
     for f in fns:
-        reg.register_function(
+        spec = sdk.declare(
             f.name, lambda ins: {"out": [Item(1)]},
+            inputs=("x",), outputs=("out",),
             context_bytes=f.context_bytes,
+            profile=ColdStartProfile(
+                DANDELION_SETUP_S, f.exec_median_s, jitter_sigma=f.exec_sigma,
+            ),
         )
-        profiles[f.name] = ColdStartProfile(
-            DANDELION_SETUP_S, f.exec_median_s, jitter_sigma=f.exec_sigma,
-        )
-        comps[f.name] = single_function_composition(reg, f.name)
-    return reg, profiles, comps
+        comps[f.name] = platform.deploy(sdk.single_function_app(spec))
+    return comps
 
 
 def _row(platform, events, latency, avg_mb, peak_mb, nodes_avg, nodes_peak):
@@ -102,19 +94,19 @@ def run():
     rows = []
 
     # ------------------- static peak-provisioned cluster ------------------
-    reg, profiles, comps = _registry(fns)
-    loop = EventLoop()
-    nodes = [
-        WorkerNode(reg, loop=loop, num_slots=NODE_SLOTS, profiles=profiles,
-                   code_cache_entries=NODE_CACHE_ENTRIES, base_bytes=NODE_BASE_BYTES,
-                   seed=10 + i, name=f"sn{i}")
+    static = sdk.Platform(pool=[
+        sdk.NodeSpec(num_slots=NODE_SLOTS,
+                     code_cache_entries=NODE_CACHE_ENTRIES,
+                     base_bytes=NODE_BASE_BYTES, seed=10 + i, name=f"sn{i}")
         for i in range(MAX_NODES)
-    ]
-    static = ClusterManager(nodes, loop)
+    ])
+    comps = _deploy(static, fns)
     with track("fig11/static", len(events)):
-        static.invoke_stream((e.t, comps[e.fn], {"x": [Item(0)]}) for e in events)
+        static.submit_stream(
+            (e.t, comps[e.fn], {"x": [Item(0)]}) for e in events)
         static.run(until=duration_s)
-        loop.run()  # drain stragglers past the window
+        static.run()  # drain stragglers past the window
+    nodes = static.nodes
     static_avg_mb = (
         MAX_NODES * NODE_BASE_BYTES
         + sum(n.tracker.timeline.average(duration_s) for n in nodes)
@@ -127,14 +119,6 @@ def run():
                      static_avg_mb, static_peak_mb, MAX_NODES, MAX_NODES))
 
     # --------------------- elastic control plane --------------------------
-    reg, profiles, comps = _registry(fns)
-    loop = EventLoop()
-
-    def factory(name):
-        return WorkerNode(reg, loop=loop, num_slots=NODE_SLOTS,
-                          profiles=profiles, code_cache_entries=NODE_CACHE_ENTRIES,
-                          base_bytes=NODE_BASE_BYTES, seed=20, name=name)
-
     cfg = ControlPlaneConfig(
         min_nodes=1, max_nodes=MAX_NODES,
         target_outstanding_per_node=1.5 * NODE_SLOTS,
@@ -144,12 +128,19 @@ def run():
         keepalive_s=20.0, tick_interval_s=0.25,
         node_boot=NODE_BOOT, node_base_bytes=NODE_BASE_BYTES,
     )
-    cp = ElasticControlPlane(loop, factory, config=cfg, seed=2)
-    elastic = ClusterManager(control_plane=cp)
+    elastic = sdk.Platform(elastic=sdk.Elastic(
+        config=cfg, seed=2,
+        node=sdk.NodeSpec(num_slots=NODE_SLOTS,
+                          code_cache_entries=NODE_CACHE_ENTRIES,
+                          base_bytes=NODE_BASE_BYTES, seed=20),
+    ))
+    comps = _deploy(elastic, fns)
     with track("fig11/elastic", len(events)):
-        elastic.invoke_stream((e.t, comps[e.fn], {"x": [Item(0)]}) for e in events)
+        elastic.submit_stream(
+            (e.t, comps[e.fn], {"x": [Item(0)]}) for e in events)
         elastic.run(until=duration_s)
-        loop.run()
+        elastic.run()
+    cp = elastic.control_plane
     summ = cp.summary(duration_s)
     rows.append(_row("elastic", len(events), elastic.latency,
                      summ["committed_avg_mb"], summ["committed_peak_mb"],

@@ -41,16 +41,8 @@ from __future__ import annotations
 
 import os
 
-from repro.core import (
-    ClusterManager,
-    ColdStartProfile,
-    Composition,
-    EventLoop,
-    FunctionRegistry,
-    Item,
-    TransferProfile,
-    WorkerNode,
-)
+from repro import sdk
+from repro.core import ColdStartProfile, Item, TransferProfile
 from repro.core.sim import merged_peak
 from benchmarks.common import emit, track
 
@@ -66,61 +58,62 @@ DURATION_S = float(os.environ.get("FIG12_DURATION_S", 20.0))
 RATE_HZ = float(os.environ.get("FIG12_RATE_HZ", 6.0))
 
 
-def _fanout_dag(width: int):
-    reg = FunctionRegistry()
-    reg.register_function(
-        "src", lambda ins: {"out": [Item(b"x" * PAYLOAD_BYTES)]}
+def _fanout_app(width: int) -> sdk.App:
+    """src --(payload)--> b0..b{W-1} (heavy contexts) --> join, declared
+    through the SDK with per-function calibrated profiles."""
+    src = sdk.declare(
+        "src", lambda ins: {"out": [Item(b"x" * PAYLOAD_BYTES)]},
+        inputs=("x",), outputs=("out",),
+        profile=ColdStartProfile(0.3e-3, 1e-3, 0.0),
     )
-    profiles = {"src": ColdStartProfile(0.3e-3, 1e-3, 0.0),
-                "join": ColdStartProfile(0.3e-3, 2e-3, 0.0)}
-    for k in range(width):
-        reg.register_function(
-            f"b{k}",
-            lambda ins, k=k: {"out": [Item(f"b{k}:{len(ins['xs'][0].data)}")]},
-            context_bytes=BRANCH_CONTEXT_BYTES,
-        )
-        profiles[f"b{k}"] = ColdStartProfile(0.3e-3, BRANCH_EXEC_S, 0.0)
-    reg.register_function(
+    join = sdk.declare(
         "join",
         lambda ins: {"out": [Item("|".join(sorted(i.data for i in ins["xs"])))]},
+        inputs=("xs",), outputs=("out",),
+        profile=ColdStartProfile(0.3e-3, 2e-3, 0.0),
     )
-    c = Composition(f"fanout{width}")
-    s = c.compute("src", "src", inputs=("x",), outputs=("out",))
-    j = c.compute("join", "join", inputs=("xs",), outputs=("out",))
-    for k in range(width):
-        b = c.compute(f"b{k}", f"b{k}", inputs=("xs",), outputs=("out",),
-                      context_bytes=BRANCH_CONTEXT_BYTES)
-        c.edge(s["out"], b["xs"], "all")
-        c.edge(b["out"], j["xs"], "all")
-    c.bind_input("x", s["x"])
-    c.bind_output("result", j["out"])
-    c.validate()
-    return reg, profiles, c
+    branches = [
+        sdk.declare(
+            f"b{k}",
+            lambda ins, k=k: {"out": [Item(f"b{k}:{len(ins['xs'][0].data)}")]},
+            inputs=("xs",), outputs=("out",),
+            context_bytes=BRANCH_CONTEXT_BYTES,
+            profile=ColdStartProfile(0.3e-3, BRANCH_EXEC_S, 0.0),
+        )
+        for k in range(width)
+    ]
+    with sdk.composition(f"fanout{width}") as app:
+        s = app.input("x")
+        sv = src(x=s)
+        j = join()
+        for spec in branches:
+            b = spec(xs=sv.out)
+            j.feed(xs=b.out)
+        app.output("result", j.out)
+    return app
 
 
 def _run_mode(mode: str, width: int):
     crossnode = mode == "crossnode"
-    reg, profiles, comp = _fanout_dag(width)
-    loop = EventLoop()
-    nodes = [
-        WorkerNode(reg, loop=loop, num_slots=NODE_SLOTS, profiles=profiles,
-                   seed=30 + i, name=f"n{i}")
-        for i in range(N_NODES)
-    ]
-    cm = ClusterManager(nodes, loop, crossnode=crossnode,
-                        transfer_profile=LINK)
+    platform = sdk.Platform(
+        pool=[sdk.NodeSpec(num_slots=NODE_SLOTS, seed=30 + i, name=f"n{i}")
+              for i in range(N_NODES)],
+        crossnode=crossnode, transfer_profile=LINK,
+    )
+    comp = platform.deploy(_fanout_app(width))
     n_events = int(DURATION_S * RATE_HZ)
     arrivals = ((i / RATE_HZ, comp, {"x": [Item(b"go")]})
                 for i in range(n_events))
     with track(f"fig12/{mode}_w{width}", n_events):
-        cm.invoke_stream(arrivals)
-        cm.run(until=DURATION_S)
+        platform.submit_stream(arrivals)
+        platform.run(until=DURATION_S)
         # window aggregates read before draining (streaming fast path)
+        nodes = platform.nodes
         node_avgs = [n.tracker.timeline.average(DURATION_S) for n in nodes]
-        loop.run()   # drain stragglers
-    s = cm.latency.summary()
+        platform.run()   # drain stragglers
+    s = platform.latency.summary()
     node_peaks = [n.tracker.timeline.peak() for n in nodes]
-    stats = cm.placer.stats if cm.placer is not None else None
+    stats = platform.placer.stats if platform.placer is not None else None
     return {
         "mode": mode,
         "fanout": width,

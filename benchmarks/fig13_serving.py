@@ -47,19 +47,13 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
+from repro import sdk
 from repro.apps.inference_service import (
     LMSpec,
     build_request_composition,
     register_inference_service,
 )
-from repro.core import (
-    ClusterManager,
-    EventLoop,
-    FunctionRegistry,
-    Item,
-    LatencyStats,
-    WorkerNode,
-)
+from repro.core import FunctionRegistry, Item, LatencyStats
 from repro.core.sim import merged_peak
 from benchmarks.common import emit, track
 
@@ -104,22 +98,20 @@ def _requests(duration_s: float, seed: int = 0):
 def _run_policy(policy: str, requests, duration_s: float) -> Dict[str, float]:
     reg = FunctionRegistry()
     svc = register_inference_service(reg, SPEC)
-    loop = EventLoop()
-    stores = []
-    nodes = []
-    for i in range(N_NODES):
-        ws = svc.make_weight_store(
-            keepalive_s=KEEPALIVE_S if policy == "elastic" else 0.0,
-            pinned=policy == "keepwarm",
-        )
-        stores.append(ws)
-        nodes.append(WorkerNode(
-            reg, loop=loop, num_slots=NODE_SLOTS, profiles=svc.profiles,
+    platform = sdk.Platform(
+        registry=reg, profiles=svc.profiles,
+        pool=[sdk.NodeSpec(
+            num_slots=NODE_SLOTS,
             batch_slots=1, batch_model=svc.batch_model,
             max_batch=1 if policy == "percold" else MAX_BATCH,
-            weight_store=ws, seed=40 + i, name=f"sv{i}",
-        ))
-    cm = ClusterManager(nodes, loop)
+            # per-node weight residency: a fresh store per node built
+            weight_store=lambda: svc.make_weight_store(
+                keepalive_s=KEEPALIVE_S if policy == "elastic" else 0.0,
+                pinned=policy == "keepwarm",
+            ),
+            seed=40 + i, name=f"sv{i}",
+        ) for i in range(N_NODES)],
+    )
 
     comps: Dict[Tuple[int, int], object] = {}
     ttft = LatencyStats()
@@ -143,19 +135,17 @@ def _run_policy(policy: str, requests, duration_s: float) -> Dict[str, float]:
             yield t, comp, {"prompt": [Item(prompt)]}, make_done(d)
 
     with track(f"fig13/{policy}", len(requests)):
-        loop.at_stream(
-            ((t, (comp, ins, cb)) for t, comp, ins, cb in arrivals()),
-            lambda cic: cm.invoke(cic[0], cic[1], cic[2]),
-        )
-        cm.run(until=duration_s)
+        platform.submit_stream(arrivals())
+        platform.run(until=duration_s)
+        nodes = platform.nodes
         avg_committed = sum(
             n.tracker.timeline.average(duration_s) for n in nodes
         )
-        loop.run()   # drain stragglers past the window
+        platform.run()   # drain stragglers past the window
 
-    e2e = cm.latency.summary()
+    e2e = platform.latency.summary()
     tf = ttft.summary()
-    ws_summ = [s.summary() for s in stores]
+    ws_summ = [n.weight_store.summary() for n in nodes]
     touches = sum(s["touches"] for s in ws_summ)
     colds = sum(s["cold_touches"] for s in ws_summ)
     return {

@@ -1,27 +1,48 @@
 """The paper's Figure 3 application: distributed log processing.
 
 Access -> HTTP(auth) -> FanOut -> HTTP(each log shard, in parallel)
--> Render. Run under a bursty load and watch the PI controller re-balance
-compute vs communication cores.
+-> Render, authored through the declarative SDK: typed function
+declarations, ``sdk.each`` fan-out over the shard fetches, one Platform
+front door. Run under a bursty load and watch the PI controller
+re-balance compute vs communication cores.
 
     PYTHONPATH=src python examples/log_processing.py
 """
 import numpy as np
 
-from repro.core import (
-    Composition,
-    FunctionRegistry,
-    HttpRequest,
-    HttpResponse,
-    Item,
-    ServiceRegistry,
-    WorkerNode,
-)
+from repro import sdk
+from repro.core import HttpRequest, HttpResponse, Item
 
 
-def build(reg: FunctionRegistry, services: ServiceRegistry, shards: int = 8):
+@sdk.function(inputs=("token",), outputs=("auth_req",))
+def access(ins):
+    return {"auth_req": [Item(HttpRequest(
+        "GET", f"http://auth.svc/endpoints?tok={ins['token'][0].data}"))]}
+
+
+@sdk.function(inputs=("endpoints",), outputs=("log_reqs",))
+def fanout(ins):
+    return {"log_reqs": [
+        Item(HttpRequest("GET", u), key=str(i))
+        for i, u in enumerate(str(ins["endpoints"][0].data.body).split())
+    ]}
+
+
+@sdk.function(inputs=("logs",), outputs=("page",))
+def render(ins):
+    lines = errors = 0
+    for it in ins["logs"]:
+        body = it.data.body
+        text = body.decode() if isinstance(body, bytes) else str(body)
+        for line in text.splitlines():
+            lines += 1
+            errors += "lvl=3" in line
+    return {"page": [Item(f"<html>{lines} lines, {errors} errors</html>".encode())]}
+
+
+def build(platform: sdk.Platform, shards: int = 8) -> sdk.App:
     hosts = [f"logs{i}.svc" for i in range(shards)]
-    services.register(
+    platform.service(
         "auth.svc",
         lambda req: HttpResponse(200, " ".join(f"http://{h}/tail" for h in hosts)),
         base_latency_s=1e-3,
@@ -32,66 +53,37 @@ def build(reg: FunctionRegistry, services: ServiceRegistry, shards: int = 8):
             b"2026-07-15T12:00:00 svc=api lvl=%d msg=request" % rng.integers(0, 4)
             for _ in range(200)
         )
-        services.register(h, lambda req, blob=blob: HttpResponse(200, blob),
-                          base_latency_s=2e-3, bandwidth_bps=1e9)
+        platform.service(h, lambda req, blob=blob: HttpResponse(200, blob),
+                         base_latency_s=2e-3, bandwidth_bps=1e9)
 
-    reg.register_function(
-        "access",
-        lambda ins: {"auth_req": [Item(HttpRequest(
-            "GET", f"http://auth.svc/endpoints?tok={ins['token'][0].data}"))]},
-    )
-    reg.register_function(
-        "fanout",
-        lambda ins: {"log_reqs": [
-            Item(HttpRequest("GET", u), key=str(i))
-            for i, u in enumerate(str(ins["endpoints"][0].data.body).split())
-        ]},
-    )
-
-    def render(ins):
-        lines = errors = 0
-        for it in ins["logs"]:
-            body = it.data.body
-            text = body.decode() if isinstance(body, bytes) else str(body)
-            for line in text.splitlines():
-                lines += 1
-                errors += "lvl=3" in line
-        return {"page": [Item(f"<html>{lines} lines, {errors} errors</html>".encode())]}
-
-    reg.register_function("render", render)
-
-    c = Composition("log_processing")
-    acc = c.compute("access", "access", inputs=("token",), outputs=("auth_req",))
-    h1 = c.http("auth_call")
-    fan = c.compute("fanout", "fanout", inputs=("endpoints",), outputs=("log_reqs",))
-    h2 = c.http("fetch_logs")
-    ren = c.compute("render", "render", inputs=("logs",), outputs=("page",))
-    c.edge(acc["auth_req"], h1["requests"], "all")
-    c.edge(h1["responses"], fan["endpoints"], "all")
-    c.edge(fan["log_reqs"], h2["requests"], "each")   # parallel shard fetch
-    c.edge(h2["responses"], ren["logs"], "all")
-    c.bind_input("token", acc["token"])
-    c.bind_output("result", ren["page"])
-    reg.register_composition(c)
-    return c
+    with sdk.composition("log_processing") as app:
+        acc = access(token=app.input("token"))
+        h1 = sdk.http("auth_call", requests=acc.auth_req)
+        fan = fanout(endpoints=h1.responses)
+        h2 = sdk.http("fetch_logs", requests=sdk.each(fan.log_reqs))
+        ren = render(logs=h2.responses)
+        app.output("result", ren.page)
+    platform.deploy(app)
+    return app
 
 
 def main():
-    reg, services = FunctionRegistry(), ServiceRegistry()
-    comp = build(reg, services)
-    node = WorkerNode(reg, services, num_slots=8, comm_slots=1)
+    platform = sdk.Platform(node=sdk.NodeSpec(num_slots=8, comm_slots=1))
+    app = build(platform)
 
     rng = np.random.default_rng(1)
     t, n = 0.0, 0
     while t < 4.0:
         rate = 300.0 if 1.0 < t < 3.0 else 40.0  # burst in the middle
         t += float(rng.exponential(1.0 / rate))
-        node.invoke_at(t, comp, {"token": [Item(f"tok{n}")]})
+        platform.invoke(app, {"token": [Item(f"tok{n}")]}, at=t)
         n += 1
-    node.run()
+    platform.run()
 
+    node = platform.node
     print(f"invocations: {n}, failed: {node.failed_count}")
-    print("latency:", {k: round(v, 2) for k, v in node.latency.summary().items()})
+    print("latency:", {k: round(v, 2)
+                       for k, v in platform.latency.summary().items()})
     alloc = [(round(t, 2), c, m) for t, c, m, _ in node.controller.history[::20]]
     print("controller (t, compute_cores, comm_cores) samples:", alloc[:12])
     print("peak committed KiB:", round(node.committed_peak_bytes / 1024, 1))

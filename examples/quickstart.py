@@ -1,103 +1,107 @@
-"""Quickstart: register a compute function, compose it with an HTTP call,
-invoke through a worker node, and inspect the cold-start breakdown.
+"""Quickstart: the declarative SDK front door in one file.
+
+1. declare a typed compute function with ``@sdk.function``;
+2. compose it with an HTTP communication function using port-level
+   dataflow expressions;
+3. deploy + invoke through a single-node ``sdk.Platform`` and await
+   ``InvocationHandle`` futures;
+4. inspect the real cold-start breakdown;
+5. rerun the same app, unchanged, on an elastic cluster — the platform
+   shape is configuration, not code.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
+from repro import sdk
+from repro.core import HttpRequest, HttpResponse, Item, measure
 
-from repro.core import (
-    ClusterManager,
-    ColdStartProfile,
-    Composition,
-    ControlPlaneConfig,
-    ElasticControlPlane,
-    EventLoop,
-    FunctionRegistry,
-    HttpRequest,
-    HttpResponse,
-    Item,
-    ServiceRegistry,
-    WorkerNode,
-    measure,
-)
 
 # 1. A pure compute function: declared inputs -> declared outputs, no
 #    syscalls, no sockets. This is the unit Dandelion cold-starts in ~us.
+#    The decorator captures every piece of ComputeFunction metadata at
+#    the definition site (context bytes, timeouts, jax payloads, ...).
+@sdk.function(inputs=("doc",), outputs=("stats",))
 def word_count(inputs):
     text = inputs["doc"][0].data.body
     words = len(text.split())
     return {"stats": [Item(f"words={words}".encode())]}
 
 
+# 2. A composition: fetch a document over HTTP, count its words. Edges
+#    are written as dataflow (`doc=fetch.responses`), validated eagerly,
+#    and compile to the core Composition IR unchanged.
+def quickstart_app() -> sdk.App:
+    with sdk.composition("quickstart") as app:
+        fetch = sdk.http("fetch", requests=app.input("request"))
+        count = word_count(_name="count", doc=fetch.responses)
+        app.output("stats", count.stats)
+    return app
+
+
 def main():
-    reg = FunctionRegistry()
-    services = ServiceRegistry()
-    reg.register_function("word_count", word_count)
-    services.register(
+    app = quickstart_app()
+
+    # 3. One Platform object owns the registry, services, event loop and
+    #    node; deploy() registers functions + graph, invoke() returns a
+    #    future-style handle that works the same on every platform shape.
+    platform = sdk.Platform(node=sdk.NodeSpec(num_slots=4, comm_slots=1))
+    platform.service(
         "docs.svc",
         lambda req: HttpResponse(200, b"the quick brown fox " * 128),
         base_latency_s=1e-3,
     )
+    platform.deploy(app)
 
-    # 2. A composition: fetch a document over HTTP, count its words.
-    comp = Composition("quickstart")
-    fetch = comp.http("fetch")
-    count = comp.compute("count", "word_count", inputs=("doc",), outputs=("stats",))
-    comp.edge(fetch["responses"], count["doc"], "all")
-    comp.bind_input("request", fetch["requests"])
-    comp.bind_output("stats", count["stats"])
-    reg.register_composition(comp)
-
-    # 3. Invoke through the worker node (frontend -> dispatcher -> engines).
-    node = WorkerNode(reg, services, num_slots=4, comm_slots=1)
-    results = []
-    for i in range(10):
-        node.invoke_at(
-            i * 1e-3, comp,
-            {"request": [Item(HttpRequest("GET", "http://docs.svc/doc1"))]},
-            on_done=results.append,
+    handles = [
+        platform.invoke(
+            app, {"request": [Item(HttpRequest("GET", "http://docs.svc/doc1"))]},
+            at=i * 1e-3,
         )
-    node.run()
+        for i in range(10)
+    ]
+    print("results:", handles[0].result()["stats"][0].data)
+    print("latency:", {k: round(v, 3)
+                       for k, v in platform.latency.summary().items()})
+    print("committed memory after drain:",
+          platform.node.tracker.committed, "bytes")
 
-    print("results:", results[0].outputs["stats"][0].data)
-    print("latency:", {k: round(v, 3) for k, v in node.latency.summary().items()})
-    print("committed memory after drain:", node.tracker.committed, "bytes")
-
-    # 4. The platform's headline: per-request sandbox creation cost.
-    bd, exec_s = measure(reg, "word_count",
+    # 4. The platform's headline: per-request sandbox creation cost,
+    #    measured on the real cold-start code paths.
+    bd, exec_s = measure(platform.registry, "word_count",
                          {"doc": [Item(HttpResponse(200, b"hello world"))]},
                          samples=7)
     print("cold-start breakdown (us):",
           {k: round(v, 1) for k, v in bd.us().items()})
 
-    # 5. Cluster scale: the Dirigent-style elastic control plane routes on
-    #    code-cache locality and grows/shrinks the node pool with load.
-    loop = EventLoop()
-    profiles = {"word_count": ColdStartProfile(3e-4, 20e-3, 0.0)}
-
-    def factory(name):
-        return WorkerNode(reg, services, loop=loop, num_slots=4,
-                          profiles=profiles, code_cache_entries=32,
-                          base_bytes=256 << 20, name=name)
-
-    cp = ElasticControlPlane(
-        loop, factory,
-        config=ControlPlaneConfig(
-            min_nodes=1, max_nodes=4, target_outstanding_per_node=6.0,
-            keepalive_s=5.0, tick_interval_s=0.25,
-            node_boot=ColdStartProfile(0.5, 0.0, 0.0),
+    # 5. Cluster scale: the SAME app on the Dirigent-style elastic
+    #    control plane (code-cache-affinity routing, autoscaled pool) —
+    #    only the Platform shape changes.
+    cluster = sdk.Platform(
+        elastic=sdk.Elastic(
+            config=sdk.ControlPlaneConfig(
+                min_nodes=1, max_nodes=4, target_outstanding_per_node=6.0,
+                keepalive_s=5.0, tick_interval_s=0.25,
+                node_boot=sdk.ColdStartProfile(0.5, 0.0, 0.0),
+            ),
+            node=sdk.NodeSpec(num_slots=4, code_cache_entries=32,
+                              base_bytes=256 << 20),
         ),
+        profiles={"word_count": sdk.ColdStartProfile(3e-4, 20e-3, 0.0)},
     )
-    cluster = ClusterManager(control_plane=cp)
+    cluster.service(
+        "docs.svc",
+        lambda req: HttpResponse(200, b"the quick brown fox " * 128),
+        base_latency_s=1e-3,
+    )
+    cluster.deploy(app)
     for i in range(300):  # 2s burst, then silence
-        cluster.invoke_at(
-            i * (2.0 / 300), comp,
-            {"request": [Item(HttpRequest("GET", "http://docs.svc/doc1"))]},
+        cluster.invoke(
+            app, {"request": [Item(HttpRequest("GET", "http://docs.svc/doc1"))]},
+            at=i * (2.0 / 300),
         )
     cluster.run(until=30.0)
-    loop.run()
+    cluster.run()
     print("elastic cluster:",
-          {k: round(v, 3) for k, v in cp.summary().items()})
+          {k: round(v, 3) for k, v in cluster.control_plane.summary().items()})
 
 
 if __name__ == "__main__":

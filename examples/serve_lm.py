@@ -3,8 +3,11 @@
 Client requests enter a Dandelion composition whose compute function is a
 *prefill+decode generation call* against the continuous-batching engine -
 i.e. the model is the payload and the platform owns admission, fan-out,
-memory contexts, and engine scheduling. Any of the 10 assigned
-architectures is selectable with --arch (reduced config on CPU).
+memory contexts, and engine scheduling. The generation call is declared
+through the SDK (``sdk.declare``; ``memoize=False`` because the batcher
+is stateful) and driven through a single-node Platform's handle API.
+Any of the 10 assigned architectures is selectable with --arch (reduced
+config on CPU).
 
     PYTHONPATH=src python examples/serve_lm.py --arch olmoe-1b-7b --requests 12
 """
@@ -15,13 +18,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import sdk
 from repro.configs import ARCH_IDS, get_smoke
-from repro.core import (
-    Composition,
-    FunctionRegistry,
-    Item,
-    WorkerNode,
-)
+from repro.core import Item
 from repro.models.model import build as build_model
 from repro.serving.batching import ContinuousBatcher, Request
 
@@ -60,35 +59,36 @@ def main():
         out = batcher.run_to_completion()[rid]
         return {"tokens": [Item(np.asarray(out, np.int32).tobytes())]}
 
-    reg = FunctionRegistry()
-    reg.register_function("generate", generate_fn, context_bytes=8 << 20)
+    generate = sdk.declare(
+        "generate", generate_fn, inputs=("prompt",), outputs=("tokens",),
+        context_bytes=8 << 20, memoize=False,
+    )
+    with sdk.composition("serve_lm") as app:
+        g = generate(prompt=app.input("prompt"))
+        app.output("tokens", g.tokens)
 
-    comp = Composition("serve_lm")
-    g = comp.compute("generate", "generate", inputs=("prompt",), outputs=("tokens",))
-    comp.bind_input("prompt", g["prompt"])
-    comp.bind_output("tokens", g["tokens"])
-    reg.register_composition(comp)
+    platform = sdk.Platform(node=sdk.NodeSpec(num_slots=4, comm_slots=1))
+    platform.deploy(app)
 
-    node = WorkerNode(reg, num_slots=4, comm_slots=1)
     rng = np.random.default_rng(0)
-    results = []
+    handles = []
     t0 = time.time()
     for i in range(args.requests):
         plen = int(rng.integers(3, 12))
         prompt = rng.integers(0, cfg.vocab_size, plen, dtype=np.int32)
-        node.invoke_at(i * 1e-3, comp, {"prompt": [Item(prompt.tobytes())]},
-                       on_done=results.append)
-    node.run()
+        handles.append(platform.invoke(
+            app, {"prompt": [Item(prompt.tobytes())]}, at=i * 1e-3))
+    platform.run()
     wall = time.time() - t0
 
-    ok = [r for r in results if not r.failed]
-    toks = sum(len(np.frombuffer(r.outputs["tokens"][0].data, np.int32)) for r in ok)
+    ok = [h for h in handles if h.done]
+    toks = sum(len(np.frombuffer(h.outputs["tokens"][0].data, np.int32)) for h in ok)
     print(f"served {len(ok)}/{args.requests} requests, {toks} tokens, "
           f"{wall:.2f}s wall ({toks/wall:.1f} tok/s)")
     print("platform latency (virtual):",
-          {k: round(v, 3) for k, v in node.latency.summary().items()})
-    for r in ok[:3]:
-        print("  ->", np.frombuffer(r.outputs["tokens"][0].data, np.int32).tolist())
+          {k: round(v, 3) for k, v in platform.latency.summary().items()})
+    for h in ok[:3]:
+        print("  ->", np.frombuffer(h.outputs["tokens"][0].data, np.int32).tolist())
 
 
 if __name__ == "__main__":

@@ -1,4 +1,4 @@
-"""SS7.7: Text2SQL agentic AI workflow as a Dandelion composition.
+"""SS7.7: Text2SQL agentic AI workflow as a declarative SDK application.
 
 Five steps, mirroring the paper's pipeline:
   1. parse the natural-language prompt        (compute)
@@ -11,7 +11,8 @@ The LLM endpoint is served by OUR OWN serving stack: a reduced-config
 granite-8b running under the continuous batcher (examples are CPU-sized;
 the same code drives a TPU slice). The database is an in-process table
 with a tiny WHERE-clause evaluator. The pipeline structure, scheduling,
-and both HTTP hops are real platform code paths.
+and both HTTP hops are real platform code paths — declared as dataflow
+through the SDK, deployed and invoked through one Platform object.
 
     PYTHONPATH=src python examples/text2sql_agent.py
 """
@@ -19,18 +20,10 @@ import json
 import re
 
 import jax
-import numpy as np
 
+from repro import sdk
 from repro.configs import get_smoke
-from repro.core import (
-    Composition,
-    FunctionRegistry,
-    HttpRequest,
-    HttpResponse,
-    Item,
-    ServiceRegistry,
-    WorkerNode,
-)
+from repro.core import HttpRequest, HttpResponse, Item
 from repro.models.model import build as build_model
 from repro.serving.batching import ContinuousBatcher, Request
 
@@ -77,7 +70,8 @@ def db_handler(req: HttpRequest) -> HttpResponse:
     return HttpResponse(200, json.dumps(rows))
 
 
-# ------------------------------------------------------- compute functions
+# ------------------------------------------------- compute declarations
+@sdk.function(inputs=("question",), outputs=("llm_req",))
 def parse_prompt(ins):
     prompt = ins["question"][0].data
     llm_prompt = f"Translate to SQL over table cities(city, population): {prompt}"
@@ -85,6 +79,7 @@ def parse_prompt(ins):
     return {"llm_req": [Item(HttpRequest("POST", "http://llm.svc/v1/complete", body))]}
 
 
+@sdk.function(inputs=("llm_resp",), outputs=("db_req",))
 def extract_sql(ins):
     resp = json.loads(ins["llm_resp"][0].data.body)
     sql = resp["sql"]
@@ -92,48 +87,40 @@ def extract_sql(ins):
                                         json.dumps({"sql": sql})))]}
 
 
+@sdk.function(inputs=("db_resp",), outputs=("answer",))
 def format_rows(ins):
     rows = json.loads(ins["db_resp"][0].data.body)
     lines = [f"{c}: {p:,}" for c, p in rows]
     return {"answer": [Item(("\n".join(lines)).encode())]}
 
 
+def text2sql_app() -> sdk.App:
+    with sdk.composition("text2sql") as app:
+        p = parse_prompt(_name="parse", question=app.input("question"))
+        h1 = sdk.http("llm_call", requests=p.llm_req)
+        e = extract_sql(_name="extract", llm_resp=h1.responses)
+        h2 = sdk.http("db_call", requests=e.db_req)
+        f = format_rows(_name="format", db_resp=h2.responses)
+        app.output("answer", f.answer)
+    return app
+
+
 def main():
-    reg, services = FunctionRegistry(), ServiceRegistry()
-    llm = TinyLLMService()
-    services.register("llm.svc", llm.handle, base_latency_s=5e-3)
-    services.register("db.svc", db_handler, base_latency_s=1e-3)
-    for name, fn in (("parse_prompt", parse_prompt),
-                     ("extract_sql", extract_sql),
-                     ("format_rows", format_rows)):
-        reg.register_function(name, fn)
+    platform = sdk.Platform(node=sdk.NodeSpec(num_slots=4, comm_slots=2))
+    platform.service("llm.svc", TinyLLMService().handle, base_latency_s=5e-3)
+    platform.service("db.svc", db_handler, base_latency_s=1e-3)
+    app = text2sql_app()
+    platform.deploy(app)
 
-    c = Composition("text2sql")
-    p = c.compute("parse", "parse_prompt", inputs=("question",), outputs=("llm_req",))
-    h1 = c.http("llm_call")
-    e = c.compute("extract", "extract_sql", inputs=("llm_resp",), outputs=("db_req",))
-    h2 = c.http("db_call")
-    f = c.compute("format", "format_rows", inputs=("db_resp",), outputs=("answer",))
-    c.edge(p["llm_req"], h1["requests"])
-    c.edge(h1["responses"], e["llm_resp"])
-    c.edge(e["db_req"], h2["requests"])
-    c.edge(h2["responses"], f["db_resp"])
-    c.bind_input("question", p["question"])
-    c.bind_output("answer", f["answer"])
-    reg.register_composition(c)
-
-    node = WorkerNode(reg, services, num_slots=4, comm_slots=2)
-    done = []
-    node.invoke(c, {"question": [Item("which cities have over a million people?")]},
-                on_done=done.append)
-    node.run()
-    inv = done[0]
-    assert not inv.failed, inv.failed
-    print("answer:\n" + inv.outputs["answer"][0].data.decode())
+    handle = platform.invoke(
+        app, {"question": [Item("which cities have over a million people?")]})
+    answer = handle.result()
+    print("answer:\n" + answer["answer"][0].data.decode())
     # per-step completion times (the paper reports a per-step breakdown)
+    inv = handle.invocation
     steps = {name: round(vr.done_t * 1e3, 2) for name, vr in inv.vertex_runs.items()}
     print("step completion times (virtual ms):", steps)
-    print(f"end-to-end: {inv.latency*1e3:.2f} ms (virtual)")
+    print(f"end-to-end: {handle.latency*1e3:.2f} ms (virtual)")
 
 
 if __name__ == "__main__":

@@ -2,9 +2,16 @@
 fault-tolerance loop: async checkpoints, a simulated mid-run crash, and
 bitwise-exact resume.
 
+Each training phase runs as a declarative-SDK compute function invoked
+through a single-node ``sdk.Platform`` (``memoize=False``: the payload
+mutates the checkpoint directory) — the same front door the serving and
+log-processing examples use, here carrying an arbitrary heavyweight jax
+payload.
+
     PYTHONPATH=src python examples/train_lm.py --steps 200
 """
 import argparse
+import json
 import os
 import shutil
 import tempfile
@@ -13,7 +20,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import sdk
 from repro.config import ModelConfig
+from repro.core import Item
 from repro.config.parallel import ParallelPlan
 from repro.config.shapes import ShapeConfig
 from repro.models.model import build
@@ -76,6 +85,27 @@ def run(steps, batch, seq, ckpt_dir, crash_at=None, lr=3e-4, log_every=None,
     return state, losses
 
 
+@sdk.function(inputs=("cmd",), outputs=("report",), memoize=False,
+              timeout_s=7 * 86400.0)  # effectively unlimited, like the
+                                      # pre-SDK direct run() call
+def train_phase(ins):
+    """One training phase as a platform payload: config in, loss report
+    out. Crash/resume state lives in the checkpoint directory."""
+    cmd = json.loads(ins["cmd"][0].data)
+    state, losses = run(**cmd)
+    return {"report": [Item(json.dumps({
+        "completed": state is not None,
+        "losses": {str(k): v for k, v in losses.items()},
+    }))]}
+
+
+def train_app() -> sdk.App:
+    with sdk.composition("train_lm") as app:
+        phase = train_phase(cmd=app.input("cmd"))
+        app.output("report", phase.report)
+    return app
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=200)
@@ -85,13 +115,24 @@ def main():
     args = ap.parse_args()
     ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="train_lm_ckpt_")
 
+    app = train_app()
+    platform = sdk.Platform(node=sdk.NodeSpec(num_slots=2, comm_slots=1))
+    platform.deploy(app)
+
+    def invoke_phase(**cmd):
+        handle = platform.invoke(app, {"cmd": [Item(json.dumps(cmd))]})
+        return json.loads(handle.result()["report"][0].data)
+
+    base = dict(steps=args.steps, batch=args.batch, seq=args.seq,
+                ckpt_dir=ckpt_dir)
     crash_at = max(1, min(args.steps // 2, 100))
     print(f"phase 1: train to step {crash_at}, then crash")
-    run(args.steps, args.batch, args.seq, ckpt_dir, crash_at=crash_at)
+    invoke_phase(crash_at=crash_at, **base)
 
     print("phase 2: restart from the latest checkpoint and finish")
-    state, losses = run(args.steps, args.batch, args.seq, ckpt_dir)
-    assert state is not None
+    report = invoke_phase(**base)
+    assert report["completed"]
+    losses = {int(k): v for k, v in report["losses"].items()}
     if losses:
         print(f"final loss {losses[max(losses)]:.4f} "
               f"(from {losses[min(losses)]:.4f} at step {min(losses)})")

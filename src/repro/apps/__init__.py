@@ -1,4 +1,12 @@
-"""Reference applications built on the public composition API."""
-from repro.apps.log_processing import build_log_processing
+"""Reference applications authored through the declarative SDK."""
+from repro.apps.log_processing import (
+    build_log_processing,
+    log_processing_app,
+    register_log_services,
+)
 
-__all__ = ["build_log_processing"]
+__all__ = [
+    "build_log_processing",
+    "log_processing_app",
+    "register_log_services",
+]

@@ -31,11 +31,12 @@ tests/test_inference_service.py).
 from __future__ import annotations
 
 import hashlib
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import sdk
 from repro.config.parallel import HardwareSpec, TPU_V5E
 from repro.core import (
     BatchStepModel,
@@ -114,8 +115,8 @@ def _next_token(digest: str, position: int, vocab: int) -> int:
 @dataclass
 class InferenceService:
     """Everything a platform needs to run the workload: registered
-    function names, calibrated profiles, the batch-step model, and the
-    weight-store spec."""
+    function names, SDK function declarations, calibrated profiles, the
+    batch-step model, and the weight-store spec."""
 
     spec: LMSpec
     profiles: Dict[str, ColdStartProfile]
@@ -124,6 +125,9 @@ class InferenceService:
     prefill_step_s: float
     decode_step_s: float
     fn_names: Tuple[str, ...] = ()
+    # the four stage declarations, keyed "tokenize"/"prefill"/"decode"/
+    # "detok" — already registered; carry their calibrated profiles
+    specs: Dict[str, sdk.FunctionSpec] = field(default_factory=dict)
 
     def make_weight_store(self, *, keepalive_s: float = 0.0,
                           pinned: bool = False) -> WeightStore:
@@ -184,12 +188,29 @@ def register_inference_service(
         text = ("tok:" + ",".join(str(t) for t in toks)).encode()
         return {"text": [Item(text)]}
 
-    reg.register_function(f"{name}_tokenize", tokenize, context_bytes=1 << 20)
-    reg.register_function(f"{name}_prefill", prefill,
-                          context_bytes=spec.prompt_len_hint * kv_bpt + (4 << 20))
-    reg.register_function(f"{name}_decode", decode, batchable=True,
-                          context_bytes=spec.seq_len_hint * kv_bpt + (1 << 20))
-    reg.register_function(f"{name}_detok", detokenize, context_bytes=1 << 20)
+    # typed declarations (SDK front door); registered in the legacy order
+    specs = {
+        "tokenize": sdk.declare(
+            f"{name}_tokenize", tokenize,
+            inputs=("prompt",), outputs=("tokens",), context_bytes=1 << 20,
+        ),
+        "prefill": sdk.declare(
+            f"{name}_prefill", prefill,
+            inputs=("tokens",), outputs=("kv", "tok"),
+            context_bytes=spec.prompt_len_hint * kv_bpt + (4 << 20),
+        ),
+        "decode": sdk.declare(
+            f"{name}_decode", decode,
+            inputs=("kv", "tok"), outputs=("kv", "tok"), batchable=True,
+            context_bytes=spec.seq_len_hint * kv_bpt + (1 << 20),
+        ),
+        "detok": sdk.declare(
+            f"{name}_detok", detokenize,
+            inputs=("toks",), outputs=("text",), context_bytes=1 << 20,
+        ),
+    }
+    for s in specs.values():
+        s.register_into(reg)
 
     # ---- cost models (launch.hlo_analysis) -----------------------------
     weight_cold = weight_coldstart_estimate(
@@ -236,6 +257,8 @@ def register_inference_service(
         ),
         f"{name}_detok": ColdStartProfile(SANDBOX_SETUP_S, 0.2e-3, 0.05),
     }
+    for s in specs.values():
+        s.profile = profiles[s.name]
     return InferenceService(
         spec=spec,
         profiles=profiles,
@@ -244,7 +267,58 @@ def register_inference_service(
         prefill_step_s=prefill_s,
         decode_step_s=decode_s,
         fn_names=tuple(profiles),
+        specs=specs,
     )
+
+
+def request_app(
+    spec: LMSpec,
+    *,
+    prompt_len: int,
+    n_decode: int,
+    specs: Optional[Dict[str, sdk.FunctionSpec]] = None,
+) -> sdk.App:
+    """One serving request as a declarative SDK application: the decode
+    chain is unrolled to this request's token budget, each link passing
+    the (growing) KV cache item and the previous token forward, every
+    token also feeding detokenize. Without ``specs`` (an
+    ``InferenceService.specs`` mapping), typed references to the
+    registered function names are used."""
+    kv_bpt = spec.kv_bytes_per_token
+    name = spec.name
+    if specs is None:
+        specs = {
+            "tokenize": sdk.ref(f"{name}_tokenize",
+                                inputs=("prompt",), outputs=("tokens",)),
+            "prefill": sdk.ref(f"{name}_prefill",
+                               inputs=("tokens",), outputs=("kv", "tok")),
+            "decode": sdk.ref(f"{name}_decode",
+                              inputs=("kv", "tok"), outputs=("kv", "tok")),
+            "detok": sdk.ref(f"{name}_detok",
+                             inputs=("toks",), outputs=("text",)),
+        }
+    with sdk.composition(f"{name}_p{prompt_len}_d{n_decode}") as app:
+        tok = specs["tokenize"](_name="tokenize", _context_bytes=1 << 20,
+                                prompt=app.input("prompt"))
+        pre = specs["prefill"](
+            _name="prefill",
+            _context_bytes=prompt_len * kv_bpt + (4 << 20),
+            tokens=tok.tokens,
+        )
+        det = specs["detok"](_name="detokenize", _context_bytes=1 << 20)
+        det.feed(toks=pre.tok)
+        prev = pre
+        for i in range(n_decode):
+            # context sized to the cache at this step: in + out copies
+            d = specs["decode"](
+                _name=f"decode{i}",
+                _context_bytes=2 * (prompt_len + i + 1) * kv_bpt + (1 << 20),
+                kv=prev.kv, tok=prev.tok,
+            )
+            det.feed(toks=d.tok)
+            prev = d
+        app.output("text", det.text)
+    return app
 
 
 def build_request_composition(
@@ -253,39 +327,12 @@ def build_request_composition(
     prompt_len: int,
     n_decode: int,
 ) -> Composition:
-    """One serving request as a DAG: the decode chain is unrolled to this
-    request's token budget, each link passing the (growing) KV cache item
-    and the previous token forward, every token also feeding detokenize.
-    The functions must already be registered (``register_inference_service``).
-    """
-    kv_bpt = spec.kv_bytes_per_token
-    name = spec.name
-    c = Composition(f"{name}_p{prompt_len}_d{n_decode}")
-    tok = c.compute("tokenize", f"{name}_tokenize",
-                    inputs=("prompt",), outputs=("tokens",),
-                    context_bytes=1 << 20)
-    pre = c.compute("prefill", f"{name}_prefill",
-                    inputs=("tokens",), outputs=("kv", "tok"),
-                    context_bytes=prompt_len * kv_bpt + (4 << 20))
-    det = c.compute("detokenize", f"{name}_detok",
-                    inputs=("toks",), outputs=("text",),
-                    context_bytes=1 << 20)
-    c.edge(tok["tokens"], pre["tokens"])
-    c.edge(pre["tok"], det["toks"])
-    prev = pre
-    for i in range(n_decode):
-        # context sized to the cache at this step: in + out copies
-        d = c.compute(f"decode{i}", f"{name}_decode",
-                      inputs=("kv", "tok"), outputs=("kv", "tok"),
-                      context_bytes=2 * (prompt_len + i + 1) * kv_bpt + (1 << 20))
-        c.edge(prev["kv"], d["kv"])
-        c.edge(prev["tok"], d["tok"])
-        c.edge(d["tok"], det["toks"])
-        prev = d
-    c.bind_input("prompt", tok["prompt"])
-    c.bind_output("text", det["text"])
-    c.validate()
-    return c
+    """The request DAG as a validated IR ``Composition`` (see
+    ``request_app``). The functions must already be registered
+    (``register_inference_service``)."""
+    return request_app(
+        spec, prompt_len=prompt_len, n_decode=n_decode,
+    ).compile()
 
 
 def expected_tokens(prompt: bytes, spec: LMSpec, n_decode: int) -> List[int]:

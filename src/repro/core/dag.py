@@ -16,6 +16,7 @@ The builder doubles as the composition DSL (SS4.1 "composition language").
 """
 from __future__ import annotations
 
+import heapq
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -63,6 +64,18 @@ class Composition:
     edges: List[Edge] = field(default_factory=list)
     input_bindings: Dict[str, PortRef] = field(default_factory=dict)
     output_bindings: Dict[str, PortRef] = field(default_factory=dict)
+    # adjacency cache: per-vertex in/out edge lists in edge-append order.
+    # ``edges`` is append-only through the DSL; ``edge()`` maintains the
+    # cache incrementally, and direct appends by legacy callers are
+    # detected by length and trigger a full rebuild. Direct *non-append*
+    # mutation of ``edges`` (element replacement, removal) is outside
+    # the contract — undetectable at O(1) unless a later ``edge()`` call
+    # notices the length mismatch; no caller does it.
+    _in_adj: Dict[str, List[Edge]] = field(
+        default_factory=dict, init=False, repr=False, compare=False)
+    _out_adj: Dict[str, List[Edge]] = field(
+        default_factory=dict, init=False, repr=False, compare=False)
+    _adj_edges_n: int = field(default=0, init=False, repr=False, compare=False)
 
     # ------------------------------------------------------------- DSL
     def _add(self, v: Vertex) -> Vertex:
@@ -109,7 +122,17 @@ class Composition:
             raise ValueError(f"{src.vertex} has no output set {src.set_name!r}")
         if dst.set_name not in dv.inputs:
             raise ValueError(f"{dst.vertex} has no input set {dst.set_name!r}")
-        self.edges.append(Edge(src, dst, mode))
+        e = Edge(src, dst, mode)
+        if self._adj_edges_n == len(self.edges):   # cache fresh: extend it
+            self._out_adj.setdefault(e.src.vertex, []).append(e)
+            self._in_adj.setdefault(e.dst.vertex, []).append(e)
+            self._adj_edges_n += 1
+        else:
+            # edges was mutated behind the DSL; appending now could make
+            # the lengths coincide again, so force the next query to
+            # rebuild instead of trusting the stale cache
+            self._adj_edges_n = -1
+        self.edges.append(e)
 
     def bind_input(self, name: str, dst: PortRef) -> None:
         self.input_bindings[name] = dst
@@ -118,17 +141,41 @@ class Composition:
         self.output_bindings[name] = src
 
     # ------------------------------------------------------ validation
+    def _refresh_adjacency(self) -> None:
+        if self._adj_edges_n == len(self.edges):
+            return
+        self._in_adj, self._out_adj = {}, {}
+        for e in self.edges:
+            self._out_adj.setdefault(e.src.vertex, []).append(e)
+            self._in_adj.setdefault(e.dst.vertex, []).append(e)
+        self._adj_edges_n = len(self.edges)
+
     def in_edges(self, vertex: str) -> List[Edge]:
-        return [e for e in self.edges if e.dst.vertex == vertex]
+        """Edges targeting ``vertex``, in edge-append order. O(1) via the
+        adjacency cache; treat the returned list as read-only."""
+        self._refresh_adjacency()
+        row = self._in_adj.get(vertex)
+        return row if row is not None else []
 
     def out_edges(self, vertex: str) -> List[Edge]:
-        return [e for e in self.edges if e.src.vertex == vertex]
+        """Edges leaving ``vertex``, in edge-append order. O(1) via the
+        adjacency cache; treat the returned list as read-only."""
+        self._refresh_adjacency()
+        row = self._out_adj.get(vertex)
+        return row if row is not None else []
 
     def validate(self) -> None:
         # acyclic
         order = self.topo_order()
         if len(order) != len(self.vertices):
-            raise ValueError(f"{self.name}: composition graph has a cycle")
+            # every vertex on a cycle is stuck, but so is anything
+            # downstream of one — name them as unorderable, not "the"
+            # cycle
+            stuck = sorted(set(self.vertices) - set(order))
+            raise ValueError(
+                f"{self.name}: composition graph has a cycle; vertices "
+                f"not topologically orderable: {stuck}"
+            )
         for v in self.vertices.values():
             fan = [e for e in self.in_edges(v.name) if e.mode in ("each", "key")]
             if len(fan) > 1:
@@ -152,19 +199,22 @@ class Composition:
                 raise ValueError(f"output binding {name!r} invalid")
 
     def topo_order(self) -> List[str]:
+        """Kahn's algorithm with a min-heap ready set: the lexicographic
+        tie-break of the old sorted-list/pop(0) implementation at
+        O((V+E) log V) instead of re-sorting per pop."""
         indeg = {v: 0 for v in self.vertices}
         for e in self.edges:
             indeg[e.dst.vertex] += 1
-        ready = sorted(v for v, d in indeg.items() if d == 0)
+        ready = [v for v, d in indeg.items() if d == 0]
+        heapq.heapify(ready)
         order: List[str] = []
         while ready:
-            v = ready.pop(0)
+            v = heapq.heappop(ready)
             order.append(v)
             for e in self.out_edges(v):
                 indeg[e.dst.vertex] -= 1
                 if indeg[e.dst.vertex] == 0:
-                    ready.append(e.dst.vertex)
-            ready.sort()
+                    heapq.heappush(ready, e.dst.vertex)
         return order
 
     def io_intensity(self) -> float:

@@ -129,7 +129,9 @@ class Dispatcher:
         self.loop = loop
         self.engines = engines
         self.registry = registry
-        self.profiles = profiles or {}
+        # keep the caller's dict object (even while empty): platforms
+        # share one profiles dict across nodes and populate it at deploy
+        self.profiles = {} if profiles is None else profiles
         self.max_retries = max_retries
         self.hedge_after_s = hedge_after_s
         self.hedge_min_instances = hedge_min_instances

@@ -19,7 +19,7 @@ from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional, Tuple
 
-from repro.core.dag import Composition
+from repro.core.dag import COMPUTE, SUBGRAPH, Composition
 from repro.core.items import SetDict, fingerprint_sets
 
 
@@ -183,9 +183,25 @@ class FunctionRegistry:
 
     # ---------------------------------------------------- compositions
     def register_composition(self, comp: Composition) -> Composition:
+        """Validate and store a composition. Beyond the structural
+        ``Composition.validate`` checks, every compute vertex (including
+        nested subgraphs) must reference a registered function — a typo'd
+        ``function=`` name fails here, naming the vertex, instead of at
+        invoke time."""
         comp.validate()
+        self._check_functions(comp)
         self.compositions[comp.name] = comp
         return comp
+
+    def _check_functions(self, comp: Composition) -> None:
+        for v in comp.vertices.values():
+            if v.kind == COMPUTE and v.function not in self.functions:
+                raise ValueError(
+                    f"{comp.name}: compute vertex {v.name!r} references "
+                    f"unregistered function {v.function!r}"
+                )
+            if v.kind == SUBGRAPH and v.subgraph is not None:
+                self._check_functions(v.subgraph)
 
     def get_composition(self, name: str) -> Composition:
         if name not in self.compositions:

@@ -1,0 +1,107 @@
+"""The Dandelion declarative SDK: the typed front door to the platform.
+
+The paper's programming model (SS4.1) is *declarative* — applications
+are DAGs of pure compute functions and platform communication functions.
+This package makes that the user-facing surface:
+
+  1. **typed function declaration** — ``@sdk.function`` /
+     ``sdk.declare`` / ``sdk.ref`` capture every ``ComputeFunction``
+     metadata field at the definition site (``repro.sdk.functions``);
+  2. **declarative composition building** — port-level dataflow
+     expressions with ``each``/``key`` fan-out sugar, HTTP comm
+     vertices, nested compositions, and eager validation that names the
+     offending vertex/edge (``repro.sdk.builder``); compiles to the
+     ``repro.core.dag:Composition`` IR unchanged;
+  3. **the Platform facade** — one object owning registries, the event
+     loop, and a single/pool/elastic execution backend, with a unified
+     ``deploy`` / ``invoke -> InvocationHandle`` / ``submit_stream``
+     API (``repro.sdk.platform``).
+
+Minimal application:
+
+    from repro import sdk
+    from repro.core import Item
+
+    @sdk.function(inputs=("doc",), outputs=("stats",))
+    def word_count(ins):
+        n = len(ins["doc"][0].data.body.split())
+        return {"stats": [Item(f"words={n}".encode())]}
+
+    with sdk.composition("quickstart") as app:
+        fetch = sdk.http("fetch", requests=app.input("request"))
+        count = word_count(_name="count", doc=fetch.responses)
+        app.output("stats", count.stats)
+
+    platform = sdk.Platform(node=sdk.NodeSpec(num_slots=4))
+    platform.deploy(app)
+    print(platform.invoke(app, {"request": [...]}).result())
+
+Error taxonomy in ``repro.sdk.errors``; full reference in docs/API.md.
+"""
+from repro.core.coldstart import ColdStartProfile, TransferProfile
+from repro.core.control_plane import ControlPlaneConfig
+from repro.core.http import HttpRequest, HttpResponse
+from repro.core.items import Item
+from repro.core.workloads import BatchStepModel, WeightStore
+from repro.sdk.builder import (
+    App,
+    InputRef,
+    Port,
+    VertexHandle,
+    composition,
+    each,
+    http,
+    key,
+    single_function_app,
+)
+from repro.sdk.errors import (
+    DeclarationError,
+    DeploymentError,
+    InvocationFailed,
+    SDKError,
+    UnknownPortError,
+    ValidationError,
+    WiringError,
+)
+from repro.sdk.functions import FunctionSpec, declare, function, ref
+from repro.sdk.platform import Elastic, InvocationHandle, NodeSpec, Platform
+
+__all__ = [
+    # declaration
+    "FunctionSpec",
+    "declare",
+    "function",
+    "ref",
+    # composition building
+    "App",
+    "InputRef",
+    "Port",
+    "VertexHandle",
+    "composition",
+    "each",
+    "http",
+    "key",
+    "single_function_app",
+    # platform
+    "Elastic",
+    "InvocationHandle",
+    "NodeSpec",
+    "Platform",
+    # errors
+    "DeclarationError",
+    "DeploymentError",
+    "InvocationFailed",
+    "SDKError",
+    "UnknownPortError",
+    "ValidationError",
+    "WiringError",
+    # convenience re-exports (core types SDK apps touch constantly)
+    "BatchStepModel",
+    "ColdStartProfile",
+    "ControlPlaneConfig",
+    "HttpRequest",
+    "HttpResponse",
+    "Item",
+    "TransferProfile",
+    "WeightStore",
+]

@@ -1,0 +1,213 @@
+"""Typed function declaration: the ``@sdk.function`` decorator.
+
+A ``FunctionSpec`` captures *all* ``ComputeFunction`` metadata at the
+definition site — declared input/output sets, context bytes, timeout,
+the optional jax payload, modeled service time, memoization and
+batchability flags, and an optional calibrated ``ColdStartProfile`` —
+so registries, compositions, and platforms are configured from one
+declaration instead of hand-wired per call site.
+
+Three ways to make one:
+
+  * ``@sdk.function(inputs=("doc",), outputs=("stats",))`` — decorate a
+    pure python payload ``fn(inputs: SetDict) -> SetDict``; the spec
+    name defaults to the function name;
+  * ``sdk.declare(name, fn, inputs=..., outputs=...)`` — programmatic
+    form for dynamically generated payloads (benchmark sweeps);
+  * ``sdk.ref(name, inputs=..., outputs=...)`` — a *reference* to a
+    function registered elsewhere (no payload); compositions may wire
+    it, and deployment checks it resolves.
+
+A spec is used two ways:
+
+  * called with port expressions inside ``with sdk.composition(...)``
+    it adds a compute vertex and returns its handle
+    (``count(doc=fetch.responses)``);
+  * called with a plain ``SetDict`` it executes the payload directly
+    (handy in tests).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional, Tuple
+
+from repro.core.coldstart import ColdStartProfile
+from repro.core.items import SetDict
+from repro.sdk.errors import DeclarationError, WiringError
+
+DEFAULT_CONTEXT_BYTES = 1 << 20
+DEFAULT_TIMEOUT_S = 60.0
+
+
+def _check_sets(name: str, role: str, sets) -> Tuple[str, ...]:
+    if isinstance(sets, str):
+        # tuple("doc") would silently split into per-character set names
+        raise DeclarationError(
+            f"{name}: {role}s must be a tuple of set names, got the "
+            f"string {sets!r} (did you mean ({sets!r},)?)"
+        )
+    sets = tuple(sets)
+    for s in sets:
+        if not isinstance(s, str) or not s:
+            raise DeclarationError(
+                f"{name}: {role} set names must be non-empty strings, got {s!r}"
+            )
+    if len(set(sets)) != len(sets):
+        raise DeclarationError(f"{name}: duplicate {role} set names in {sets}")
+    return sets
+
+
+@dataclass
+class FunctionSpec:
+    """One compute-function declaration (see module docstring)."""
+
+    name: str
+    fn: Optional[Callable[[SetDict], SetDict]]
+    inputs: Tuple[str, ...]
+    outputs: Tuple[str, ...]
+    context_bytes: int = DEFAULT_CONTEXT_BYTES
+    timeout_s: float = DEFAULT_TIMEOUT_S
+    # optional jax payload for the AOT cold-start backends
+    jax_fn: Optional[Callable] = None
+    abstract_args: Tuple[Any, ...] = ()
+    # modeled execution time; None -> execute for real and measure
+    service_time_s: Optional[float] = None
+    memoize: bool = True
+    batchable: bool = False
+    # calibrated dispatcher profile; Platform.deploy collects these
+    profile: Optional[ColdStartProfile] = None
+
+    def __post_init__(self):
+        if not isinstance(self.name, str) or not self.name:
+            raise DeclarationError(
+                f"function name must be a non-empty string, got {self.name!r}"
+            )
+        self.inputs = _check_sets(self.name, "input", self.inputs)
+        self.outputs = _check_sets(self.name, "output", self.outputs)
+        if self.context_bytes <= 0:
+            raise DeclarationError(
+                f"{self.name}: context_bytes must be positive, "
+                f"got {self.context_bytes}"
+            )
+        if self.timeout_s <= 0:
+            raise DeclarationError(
+                f"{self.name}: timeout_s must be positive, got {self.timeout_s}"
+            )
+
+    # ------------------------------------------------------------------
+    @property
+    def is_ref(self) -> bool:
+        """True for ``sdk.ref`` specs: no payload, registered elsewhere."""
+        return self.fn is None
+
+    def register_into(self, registry):
+        """Register the payload into a ``FunctionRegistry`` (the exact
+        ``register_function`` call hand-wired code makes)."""
+        if self.is_ref:
+            raise DeclarationError(
+                f"{self.name}: sdk.ref declarations carry no payload to "
+                f"register; register the real function (or use sdk.declare)"
+            )
+        return registry.register_function(
+            self.name,
+            self.fn,
+            context_bytes=self.context_bytes,
+            jax_fn=self.jax_fn,
+            abstract_args=self.abstract_args,
+            service_time_s=self.service_time_s,
+            memoize=self.memoize,
+            batchable=self.batchable,
+        )
+
+    # ------------------------------------------------------------------
+    def __call__(self, *args, _name: Optional[str] = None,
+                 _context_bytes: Optional[int] = None,
+                 _timeout_s: Optional[float] = None, **ports):
+        """Inside ``with sdk.composition(...)``: add a compute vertex fed
+        by ``ports`` (output ports / ``app.input`` refs / ``each``/``key``
+        wrappers) and return its handle. ``_name`` overrides the vertex
+        name (default: the function name); ``_context_bytes`` and
+        ``_timeout_s`` override the declared per-vertex resources.
+
+        Called with a single ``SetDict`` positional argument instead, the
+        payload executes directly (no platform involved).
+        """
+        if args:
+            if len(args) == 1 and isinstance(args[0], dict) and not ports:
+                if self.is_ref:
+                    raise DeclarationError(
+                        f"{self.name}: reference spec has no payload to run"
+                    )
+                return self.fn(args[0])
+            raise WiringError(
+                f"{self.name}: pass ports as keyword arguments "
+                f"(e.g. {self.name}({self.inputs[0] if self.inputs else 'x'}"
+                f"=other.out)) or a single SetDict to execute the payload"
+            )
+        from repro.sdk.builder import current_app
+
+        app = current_app()
+        return app._add_compute(
+            self, name=_name, context_bytes=_context_bytes,
+            timeout_s=_timeout_s, ports=ports,
+        )
+
+
+def function(
+    inputs: Tuple[str, ...],
+    outputs: Tuple[str, ...],
+    *,
+    name: Optional[str] = None,
+    context_bytes: int = DEFAULT_CONTEXT_BYTES,
+    timeout_s: float = DEFAULT_TIMEOUT_S,
+    jax_fn: Optional[Callable] = None,
+    abstract_args: Tuple[Any, ...] = (),
+    service_time_s: Optional[float] = None,
+    memoize: bool = True,
+    batchable: bool = False,
+    profile: Optional[ColdStartProfile] = None,
+) -> Callable[[Callable[[SetDict], SetDict]], FunctionSpec]:
+    """Decorator form: ``@sdk.function(inputs=..., outputs=...)``."""
+
+    def wrap(fn: Callable[[SetDict], SetDict]) -> FunctionSpec:
+        # inputs/outputs validated (incl. the bare-string typo) by
+        # FunctionSpec.__post_init__
+        return FunctionSpec(
+            name=name or fn.__name__, fn=fn,
+            inputs=inputs, outputs=outputs,
+            context_bytes=context_bytes, timeout_s=timeout_s,
+            jax_fn=jax_fn, abstract_args=tuple(abstract_args),
+            service_time_s=service_time_s, memoize=memoize,
+            batchable=batchable, profile=profile,
+        )
+
+    return wrap
+
+
+def declare(
+    name: str,
+    fn: Callable[[SetDict], SetDict],
+    *,
+    inputs: Tuple[str, ...],
+    outputs: Tuple[str, ...],
+    **kwargs,
+) -> FunctionSpec:
+    """Programmatic form of ``@sdk.function`` for generated payloads."""
+    return FunctionSpec(name=name, fn=fn, inputs=inputs,
+                        outputs=outputs, **kwargs)
+
+
+def ref(
+    name: str,
+    *,
+    inputs: Tuple[str, ...],
+    outputs: Tuple[str, ...],
+    context_bytes: int = DEFAULT_CONTEXT_BYTES,
+    timeout_s: float = DEFAULT_TIMEOUT_S,
+) -> FunctionSpec:
+    """A typed reference to a function registered elsewhere (e.g. by
+    ``repro.apps.inference_service.register_inference_service``): usable
+    in compositions, checked to resolve at deployment."""
+    return FunctionSpec(name=name, fn=None, inputs=inputs,
+                        outputs=outputs, context_bytes=context_bytes,
+                        timeout_s=timeout_s)

@@ -1,0 +1,481 @@
+"""The ``Platform`` facade: one front door for every execution shape.
+
+Hand-wired code picks among three divergent entry-point triplets —
+``WorkerNode.invoke/invoke_at/invoke_stream`` on a node,
+``ClusterManager.invoke/invoke_at/invoke_stream`` on a pool — and wires
+``FunctionRegistry``/``ServiceRegistry``/``EventLoop``/node factories by
+hand per driver. A ``Platform`` owns all of that behind one object:
+
+    platform = sdk.Platform(node=sdk.NodeSpec(num_slots=8))      # 1 node
+    platform = sdk.Platform(pool=[sdk.NodeSpec(...), ...])       # static
+    platform = sdk.Platform(elastic=sdk.Elastic(config=cfg))     # elastic
+
+    platform.deploy(app)                 # register functions + graph
+    h = platform.invoke(app, inputs)     # -> InvocationHandle (future)
+    h.result()                           # run loop until done, or raise
+    platform.submit_stream(arrivals)     # bulk trace injection
+    platform.run(until=...)
+
+``invoke``/``submit_stream`` behave identically across the three shapes
+(same signature, same handle semantics); only the routing underneath
+changes. Nodes are built lazily at first use, after deployments, so the
+shared profiles dict every node's dispatcher reads is fully populated
+when factories run.
+
+Determinism contract: a Platform adds no scheduling, RNG draws, or
+timing of its own — it forwards to exactly the node/cluster calls the
+hand-wired drivers made, so migrated benchmarks reproduce their
+committed CSV rows byte-for-byte (gated by tools/check_bench_identity.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core.cluster import ClusterManager
+from repro.core.coldstart import ColdStartProfile, TransferProfile
+from repro.core.control_plane import ControlPlaneConfig, ElasticControlPlane
+from repro.core.dag import Composition
+from repro.core.http import ServiceRegistry
+from repro.core.items import SetDict
+from repro.core.node import WorkerNode
+from repro.core.registry import FunctionRegistry
+from repro.core.sim import EventLoop
+from repro.sdk.builder import App
+from repro.sdk.errors import DeploymentError, InvocationFailed
+from repro.sdk.functions import FunctionSpec
+
+
+def _safe_eq(a, b) -> bool:
+    """Equality that tolerates values whose ``==`` is non-boolean
+    (numpy arrays in lambda defaults): identity first, then ``==``
+    coerced to bool, treating any comparison error as unequal."""
+    if a is b:
+        return True
+    try:
+        r = a == b
+        if hasattr(r, "all"):   # elementwise (numpy/jax) comparison
+            return (getattr(a, "shape", None) == getattr(b, "shape", None)
+                    and bool(r.all()))
+        return bool(r)
+    except Exception:
+        return False
+
+
+def _same_payload(a, b) -> bool:
+    """Whether two payload callables are interchangeable for idempotent
+    re-deployment: the same object, or functions from the same
+    definition site with equal defaults and closure values (spec
+    factories like ``log_processing_specs`` recreate equivalent lambdas
+    per call)."""
+    if a is b:
+        return True
+    ca, cb = getattr(a, "__code__", None), getattr(b, "__code__", None)
+    if ca is None or cb is None or ca is not cb:
+        return False
+    da = getattr(a, "__defaults__", None) or ()
+    db = getattr(b, "__defaults__", None) or ()
+    if len(da) != len(db) or not all(map(_safe_eq, da, db)):
+        return False
+    fa, fb = a.__closure__, b.__closure__
+    if (fa is None) != (fb is None):
+        return False
+    if fa is not None:
+        try:
+            va = [c.cell_contents for c in fa]
+            vb = [c.cell_contents for c in fb]
+        except ValueError:     # unset cell: treat as conflicting
+            return False
+        if len(va) != len(vb) or not all(map(_safe_eq, va, vb)):
+            return False
+    return True
+
+
+@dataclass
+class NodeSpec:
+    """Declarative ``WorkerNode`` shape: everything the constructor
+    takes, minus the wiring a Platform owns (registry, services, loop,
+    shared profiles). ``weight_store`` may be a ``WeightStore`` instance
+    or a zero-argument factory (per-node stores)."""
+
+    num_slots: int = 16
+    comm_slots: int = 1
+    backend: str = "dandelion"
+    controller_enabled: bool = True
+    controller_interval_s: float = 0.030
+    max_retries: int = 2
+    hedge_after_s: float = 0.0
+    cache_miss_rate: float = 0.0
+    code_cache_entries: int = 0
+    base_bytes: int = 0
+    batch_slots: int = 0
+    batch_model: Any = None
+    max_batch: int = 32
+    weight_store: Any = None
+    seed: int = 0
+    # None -> auto-named: "node0" single, "node<i>" in a pool, control-
+    # plane names ("en<i>") under Elastic
+    name: Optional[str] = None
+
+    def build(self, platform: "Platform",
+              name: Optional[str] = None) -> WorkerNode:
+        ws = self.weight_store() if callable(self.weight_store) \
+            else self.weight_store
+        return WorkerNode(
+            platform.registry,
+            platform.services,
+            loop=platform.loop,
+            num_slots=self.num_slots,
+            comm_slots=self.comm_slots,
+            backend=self.backend,
+            profiles=platform.profiles,
+            controller_enabled=self.controller_enabled,
+            controller_interval_s=self.controller_interval_s,
+            max_retries=self.max_retries,
+            hedge_after_s=self.hedge_after_s,
+            cache_miss_rate=self.cache_miss_rate,
+            code_cache_entries=self.code_cache_entries,
+            base_bytes=self.base_bytes,
+            batch_slots=self.batch_slots,
+            batch_model=self.batch_model,
+            max_batch=self.max_batch,
+            weight_store=ws,
+            seed=self.seed,
+            name=name or self.name or "node0",
+        )
+
+
+@dataclass
+class Elastic:
+    """Elastic-cluster shape: an ``ElasticControlPlane`` over nodes built
+    from ``node`` (names assigned by the control plane)."""
+
+    config: ControlPlaneConfig = field(default_factory=ControlPlaneConfig)
+    node: NodeSpec = field(default_factory=NodeSpec)
+    seed: int = 0
+    journal: bool = False
+
+
+class InvocationHandle:
+    """Future for one invocation: filled by the dispatcher's completion
+    callback; ``result()`` drives the (virtual-time) loop to completion."""
+
+    def __init__(self, platform: "Platform", comp: Composition,
+                 on_done: Optional[Callable] = None):
+        self._platform = platform
+        self.comp = comp
+        self.invocation = None          # InvocationRun once finished
+        self._on_done = on_done
+
+    # dispatcher completion callback
+    def _complete(self, inv) -> None:
+        self.invocation = inv
+        if self._on_done is not None:
+            self._on_done(inv)
+
+    @property
+    def done(self) -> bool:
+        """Completed successfully."""
+        return self.invocation is not None and self.invocation.done
+
+    @property
+    def failed(self) -> Optional[str]:
+        """Failure reason (names the failing vertex), or None."""
+        return None if self.invocation is None else self.invocation.failed
+
+    @property
+    def outputs(self) -> SetDict:
+        return {} if self.invocation is None else self.invocation.outputs
+
+    @property
+    def latency(self) -> Optional[float]:
+        return None if self.invocation is None else self.invocation.latency
+
+    def result(self, until: Optional[float] = None) -> SetDict:
+        """Output sets of the finished invocation; drives the platform
+        loop (to ``until``) if still pending. Raises ``InvocationFailed``
+        on failure or if the loop drains without completing it."""
+        if self.invocation is None:
+            self._platform.run(until=until)
+        if self.invocation is None:
+            if until is not None:
+                # not a failure: the horizon cut the run short
+                raise InvocationFailed(
+                    f"{self.comp.name}: invocation still pending at "
+                    f"t={until}; run() further or call result() again"
+                )
+            raise InvocationFailed(
+                f"{self.comp.name}: loop drained without completing the "
+                f"invocation"
+            )
+        if self.invocation.failed:
+            raise InvocationFailed(
+                f"{self.comp.name}: {self.invocation.failed}"
+            )
+        return self.invocation.outputs
+
+
+class Platform:
+    """Owns registries, services, the event loop, and one execution
+    backend (single node / static pool / elastic cluster). See module
+    docstring for the lifecycle."""
+
+    def __init__(
+        self,
+        *,
+        node: Optional[NodeSpec] = None,
+        pool: Optional[List[NodeSpec]] = None,
+        elastic: Optional[Elastic] = None,
+        registry: Optional[FunctionRegistry] = None,
+        services: Optional[ServiceRegistry] = None,
+        loop: Optional[EventLoop] = None,
+        profiles: Optional[Dict[str, ColdStartProfile]] = None,
+        crossnode: Optional[bool] = None,
+        transfer_links: Optional[Dict[Tuple[str, str], TransferProfile]] = None,
+        transfer_profile: Optional[TransferProfile] = None,
+        memoize: bool = True,
+    ):
+        shapes = [s for s in (node, pool, elastic) if s is not None]
+        if len(shapes) > 1:
+            raise DeploymentError(
+                "pass exactly one of node=, pool=, elastic= (default: one "
+                "node)"
+            )
+        if pool is not None and not pool:
+            raise DeploymentError("pool= needs at least one NodeSpec")
+        if pool is None and elastic is None and (
+            crossnode or transfer_links or transfer_profile
+        ):
+            raise DeploymentError(
+                "crossnode/transfer options need a cluster shape "
+                "(pool= or elastic=); a single node has no peers"
+            )
+        self._node_spec = node if shapes else NodeSpec()
+        self._pool_specs = list(pool) if pool is not None else None
+        self._elastic = elastic
+        self.registry = registry or FunctionRegistry(memoize=memoize)
+        self.services = services or ServiceRegistry()
+        self.loop = loop or EventLoop()
+        # shared per-function dispatcher profiles: deploy() merges each
+        # spec's calibrated profile in-place, so nodes built later (and
+        # the elastic factory's nodes) all read the same dict
+        self.profiles: Dict[str, ColdStartProfile] = \
+            profiles if profiles is not None else {}
+        self._crossnode = crossnode
+        self._transfer_links = transfer_links
+        self._transfer_profile = transfer_profile
+        self._worker: Optional[WorkerNode] = None
+        self._cluster: Optional[ClusterManager] = None
+        self._cp: Optional[ElasticControlPlane] = None
+        self._built = False
+
+    # ------------------------------------------------------- deployment
+    def service(self, host: str, handler, **kwargs) -> None:
+        """Register an external HTTP service endpoint (see
+        ``ServiceRegistry.register`` for latency/bandwidth knobs)."""
+        self.services.register(host, handler, **kwargs)
+
+    def deploy(self, target, *,
+               profiles: Optional[Dict[str, ColdStartProfile]] = None):
+        """Make an application invokable: register its function
+        declarations (payloads, metadata, calibrated profiles) and its
+        validated composition. Accepts an ``App``, a raw IR
+        ``Composition`` (functions must already be registered), or a bare
+        ``FunctionSpec``. Returns the registered ``Composition`` (or
+        ``ComputeFunction`` for a bare spec). ``profiles`` overrides /
+        extends the per-function dispatcher profiles."""
+        if isinstance(target, FunctionSpec):
+            if target.is_ref and target.name not in self.registry.functions:
+                raise DeploymentError(
+                    f"sdk.ref {target.name!r} does not resolve: no such "
+                    f"function registered on this platform"
+                )
+            cf = self._register_spec(target)
+            self._merge_profiles(profiles)
+            return cf
+        if isinstance(target, App):
+            comp = target.compile(self.registry)
+            for spec in target.function_specs():
+                self._register_spec(spec)
+        elif isinstance(target, Composition):
+            comp = target
+        else:
+            raise DeploymentError(
+                f"deploy() takes an App, Composition, or FunctionSpec, "
+                f"got {type(target).__name__}"
+            )
+        try:
+            self.registry.register_composition(comp)
+        except ValueError as e:
+            raise DeploymentError(str(e)) from e
+        self._merge_profiles(profiles)
+        return comp
+
+    def _register_spec(self, spec: FunctionSpec):
+        if spec.is_ref:
+            # reference to a function registered out-of-band; the
+            # composition registration below checks it resolves
+            return None
+        existing = self.registry.functions.get(spec.name)
+        if existing is not None:
+            if not _same_payload(existing.fn, spec.fn):
+                raise DeploymentError(
+                    f"function {spec.name!r} already registered with a "
+                    f"different payload; function names are global to a "
+                    f"platform"
+                )
+            cf = existing              # idempotent re-deploy
+        else:
+            cf = spec.register_into(self.registry)
+        if spec.profile is not None:
+            self.profiles[spec.name] = spec.profile
+        return cf
+
+    def _merge_profiles(self, profiles) -> None:
+        if profiles:
+            self.profiles.update(profiles)
+
+    # ---------------------------------------------------------- backend
+    def _build(self) -> None:
+        if self._built:
+            return
+        self._built = True
+        if self._elastic is not None:
+            e = self._elastic
+            self._cp = ElasticControlPlane(
+                self.loop,
+                lambda name: e.node.build(self, name=name),
+                config=e.config,
+                seed=e.seed,
+                journal=e.journal,
+            )
+            self._cluster = ClusterManager(
+                control_plane=self._cp,
+                crossnode=self._crossnode,
+                transfer_links=self._transfer_links,
+                transfer_profile=self._transfer_profile,
+            )
+        elif self._pool_specs is not None:
+            # auto-name unnamed specs by position; explicit duplicate
+            # names would corrupt per-link transfer accounting
+            nodes = [
+                spec.build(self, name=f"node{i}" if spec.name is None
+                           else None)
+                for i, spec in enumerate(self._pool_specs)
+            ]
+            names = [n.name for n in nodes]
+            if len(set(names)) != len(names):
+                raise DeploymentError(
+                    f"pool node names must be unique, got {names}"
+                )
+            self._cluster = ClusterManager(
+                nodes, self.loop,
+                crossnode=self._crossnode,
+                transfer_links=self._transfer_links,
+                transfer_profile=self._transfer_profile,
+            )
+        else:
+            self._worker = self._node_spec.build(self)
+
+    @property
+    def node(self) -> Optional[WorkerNode]:
+        """The single worker node (single-node shape only)."""
+        self._build()
+        return self._worker
+
+    @property
+    def nodes(self) -> List[WorkerNode]:
+        """All worker nodes currently up."""
+        self._build()
+        if self._worker is not None:
+            return [self._worker]
+        return self._cluster.nodes
+
+    @property
+    def cluster(self) -> Optional[ClusterManager]:
+        self._build()
+        return self._cluster
+
+    @property
+    def control_plane(self) -> Optional[ElasticControlPlane]:
+        self._build()
+        return self._cp
+
+    @property
+    def placer(self):
+        """The ``CrossNodePlacer`` when cross-node scheduling is on."""
+        self._build()
+        return None if self._cluster is None else self._cluster.placer
+
+    @property
+    def latency(self):
+        """End-to-end latency stats at this platform's front door."""
+        self._build()
+        if self._worker is not None:
+            return self._worker.latency
+        return self._cluster.latency
+
+    # -------------------------------------------------------- invocation
+    def _comp(self, target) -> Composition:
+        if isinstance(target, App):
+            return target.compile()
+        if isinstance(target, Composition):
+            return target
+        raise DeploymentError(
+            f"expected an App or Composition, got {type(target).__name__}"
+        )
+
+    def _fire(self, comp: Composition, inputs: SetDict,
+              on_done: Optional[Callable]) -> None:
+        if self._worker is not None:
+            self._worker.invoke(comp, inputs, on_done=on_done)
+        else:
+            self._cluster.invoke(comp, inputs, on_done=on_done)
+
+    def invoke(
+        self,
+        app,
+        inputs: Optional[SetDict] = None,
+        *,
+        at: Optional[float] = None,
+        on_done: Optional[Callable] = None,
+    ) -> InvocationHandle:
+        """Invoke an application (now, or at virtual time ``at``) and
+        return a handle. Works identically on all three backend shapes;
+        ``on_done(inv)`` additionally fires on completion if given."""
+        self._build()
+        comp = self._comp(app)
+        handle = InvocationHandle(self, comp, on_done)
+        inputs = inputs or {}
+        if at is None:
+            self._fire(comp, inputs, handle._complete)
+        else:
+            self.loop.at(at, lambda: self._fire(comp, inputs,
+                                                handle._complete))
+        return handle
+
+    def submit_stream(self, arrivals) -> None:
+        """Bulk trace injection: ``arrivals`` is a time-sorted iterable
+        of ``(t, app, inputs)`` or ``(t, app, inputs, on_done)`` tuples,
+        replayed through one heap cursor (``EventLoop.at_stream``) — the
+        fast path for trace-scale workloads. No handles are created; use
+        per-arrival ``on_done`` callbacks to observe completions."""
+        self._build()
+
+        def norm():
+            for a in arrivals:
+                if len(a) == 3:
+                    t, app, inputs = a
+                    cb = None
+                else:
+                    t, app, inputs, cb = a
+                yield t, (self._comp(app), inputs, cb)
+
+        self.loop.at_stream(
+            norm(), lambda cic: self._fire(cic[0], cic[1], cic[2])
+        )
+
+    def run(self, until: Optional[float] = None) -> None:
+        """Drive the virtual-time loop (to ``until``, or until idle)."""
+        self._build()
+        self.loop.run(until=until)
