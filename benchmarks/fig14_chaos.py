@@ -1,0 +1,315 @@
+"""Figure 14 (extension): reliability under chaos — node churn, timeout
+pressure, and request cancellation on the fig10-style trace workload.
+
+Three segments on an identical 4-node static pool, identical seeded
+arrival process (Poisson) and lognormal execution jitter sized so ~2.3%
+of attempts exceed the per-vertex timeout:
+
+  * ``baseline``      — retry policy on, no churn, no cancellations:
+                        the churn-free latency reference;
+  * ``chaos_on``      — periodic node kills (a replacement node joins
+                        after each), random cancellations, retries ON
+                        (``RetryPolicy(max_retries=3, base_backoff_s=...,
+                        retry_timeouts=True)``) and the cluster's
+                        node-death restart budget raised;
+  * ``chaos_off``     — the same chaos with retries and restarts OFF:
+                        every timeout or lost node is a whole-request
+                        failure.
+
+Each node carries a ``WeightStore`` model bound to the workload function
+so the segments also pin the reliability refcount invariants after the
+loop drains, on every node that ever existed (including the dead ones):
+
+  * freed-exactly-once: ``tracker.committed`` returns to the weight
+    store's resident bytes (0 leaked context/staging bytes);
+  * weights-inflight-zero: every ``touch`` was balanced by ``task_done``
+    across retries, hedges, node death, and cancellation.
+
+Gates (CI): ``chaos_on`` completes >= FIG14_MIN_COMPLETION of the
+non-cancelled requests; ``chaos_off`` records > 0 whole-run failures;
+``chaos_on`` p99 stays within FIG14_MAX_P99_X of ``baseline`` p99; the
+invariants above hold. Summary JSON lands in
+``results/bench/BENCH_chaos.json``. fig14 is NOT in the byte-identity
+set (tools/check_bench_identity.py): it exists to exercise the failure
+paths the gated figures never touch.
+
+Knobs (environment variables):
+
+  FIG14_DURATION_S        trace window, default 120
+  FIG14_RATE_HZ           aggregate arrival rate, default 25
+  FIG14_NODES             pool size, default 4
+  FIG14_CHURN_PERIOD_S    seconds between node kills, default 12
+  FIG14_CANCEL_RATE       fraction of requests cancelled, default 0.05
+  FIG14_MIN_COMPLETION    completion-rate gate, default 0.99
+  FIG14_MAX_P99_X         p99 inflation gate vs baseline, default 5.0
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+from typing import Dict, List
+
+import numpy as np
+
+from repro import sdk
+from repro.core import ColdStartProfile, Item
+from repro.sdk import NodeSpec, RetryPolicy, WeightStore
+from benchmarks.common import emit, track
+
+DURATION_S = float(os.environ.get("FIG14_DURATION_S", 120.0))
+RATE_HZ = float(os.environ.get("FIG14_RATE_HZ", 50.0))
+N_NODES = int(os.environ.get("FIG14_NODES", 4))
+CHURN_PERIOD_S = float(os.environ.get("FIG14_CHURN_PERIOD_S", 12.0))
+CANCEL_RATE = float(os.environ.get("FIG14_CANCEL_RATE", 0.05))
+
+SLOTS = 8
+SETUP_S = 0.3e-3
+# 20ms median keeps ~1-2 requests in flight per node-kill instant, so
+# the churn segments actually exercise the node-death restart path
+MEDIAN_S = 20e-3
+SIGMA = 0.8
+# exec ~ lognormal(median, sigma): P(exec > median * e^{2 sigma}) ~ 2.3%,
+# so this timeout preempts ~2.3% of attempts — retries rescue them,
+# the retries-off segment turns each into a whole-request failure
+TIMEOUT_S = MEDIAN_S * math.exp(2.0 * SIGMA)
+MODEL_BYTES = 64 << 20
+KEEPALIVE_S = 0.05
+
+CHAOS_RETRY = RetryPolicy(
+    max_retries=3, base_backoff_s=0.02, max_backoff_s=0.5,
+    retry_timeouts=True,
+)
+NO_RETRY = RetryPolicy(max_retries=0)
+
+
+def _weight_store_factory():
+    ws = WeightStore(keepalive_s=KEEPALIVE_S)
+    ws.register("chaos_model", MODEL_BYTES, ("churnwork",))
+    return ws
+
+
+def _node_spec(seed: int) -> NodeSpec:
+    return NodeSpec(
+        num_slots=SLOTS, comm_slots=1, seed=seed,
+        weight_store=_weight_store_factory,
+    )
+
+
+def _segment(name: str, *, retry: RetryPolicy, restart_attempts: int,
+             churn: bool, cancels: bool, seed: int) -> Dict[str, object]:
+    platform = sdk.Platform(
+        pool=[_node_spec(seed=seed + i) for i in range(N_NODES)],
+        restart_attempts=restart_attempts,
+    )
+    spec = sdk.declare(
+        "churnwork", lambda ins: {"out": [Item(1)]},
+        inputs=("x",), outputs=("out",),
+        timeout_s=TIMEOUT_S, retry=retry,
+        profile=ColdStartProfile(SETUP_S, MEDIAN_S, jitter_sigma=SIGMA),
+    )
+    comp = platform.deploy(sdk.single_function_app(spec))
+    loop = platform.loop
+    cluster = platform.cluster
+
+    # ---------------- seeded arrival + cancellation plan ----------------
+    rng = np.random.default_rng(seed)
+    arrivals: List[float] = []
+    t = 0.0
+    while True:
+        t += rng.exponential(1.0 / RATE_HZ)
+        if t >= DURATION_S:
+            break
+        arrivals.append(t)
+
+    latencies: List[float] = []
+    handles = []
+    for t in arrivals:
+        def make_done(t0=t):
+            return lambda inv: (
+                latencies.append(loop.now - t0) if not inv.failed else None
+            )
+
+        h = platform.invoke(comp, {"x": [Item(0)]}, at=t,
+                            on_done=make_done())
+        handles.append(h)
+        if cancels and rng.random() < CANCEL_RATE:
+            loop.at(t + rng.uniform(0.0, 2.0 * MEDIAN_S), h.cancel)
+
+    # ------------------------------- churn ------------------------------
+    kills = 0
+    if churn:
+        def kill(k: int):
+            nonlocal kills
+            alive = [n for n in cluster.nodes if n.alive]
+            if len(alive) <= 1:
+                return      # never kill the last survivor
+            victim = alive[0]   # oldest alive node
+            victim.fail()
+            if cluster.placer is not None:
+                cluster.placer.on_node_failure(victim)
+            spare = _node_spec(seed=seed + 1000 + k).build(
+                platform, name=f"spare{k}")
+            cluster.add_node(spare)
+            kills += 1
+
+        n_kills = int(DURATION_S / CHURN_PERIOD_S)
+        for k in range(1, n_kills):
+            loop.at(k * CHURN_PERIOD_S, lambda k=k: kill(k))
+
+    with track(f"fig14/{name}", len(arrivals)):
+        platform.run(until=DURATION_S)
+        platform.run()      # drain stragglers (retries, restarts)
+
+    # --------------------------- classification -------------------------
+    completed = failed = cancelled = 0
+    for h in handles:
+        if h.invocation is None:
+            # cancelled before the scheduled fire: never dispatched
+            assert h.cancelled, "handle neither completed nor cancelled"
+            cancelled += 1
+        elif h.invocation.failure_kind == "cancelled":
+            cancelled += 1
+        elif h.invocation.failed:
+            failed += 1
+        else:
+            completed += 1
+    eligible = len(handles) - cancelled
+    completion_rate = completed / eligible if eligible else 1.0
+
+    # ------------------------ refcount invariants -----------------------
+    # every node that ever existed, dead ones included: committed bytes
+    # must return to exactly the resident weights (nothing leaked), and
+    # the weight-store touch/task_done refcount must balance to zero
+    leak_bytes = 0
+    weights_inflight = 0
+    for node in cluster.nodes:
+        resident = node.weight_store.resident_bytes
+        leak_bytes += node.tracker.committed - resident
+        weights_inflight += node.weight_store.inflight
+    if leak_bytes != 0:
+        raise SystemExit(
+            f"fig14/{name}: freed-exactly-once violated — "
+            f"{leak_bytes} bytes still committed after drain"
+        )
+    if weights_inflight != 0:
+        raise SystemExit(
+            f"fig14/{name}: weight refcount violated — "
+            f"{weights_inflight} touches never balanced"
+        )
+
+    lat = np.array(latencies) if latencies else np.array([0.0])
+    return {
+        "segment": name,
+        "invocations": len(handles),
+        "completed": completed,
+        "failed": failed,
+        "cancelled": cancelled,
+        "completion_rate": completion_rate,
+        "node_kills": kills,
+        "restarts": cluster.restarts,
+        "p50_ms": float(np.percentile(lat, 50)) * 1e3,
+        "p99_ms": float(np.percentile(lat, 99)) * 1e3,
+        "leak_bytes": leak_bytes,
+        "weights_inflight": weights_inflight,
+    }
+
+
+def run() -> List[dict]:
+    rows = [
+        _segment("baseline", retry=CHAOS_RETRY, restart_attempts=3,
+                 churn=False, cancels=False, seed=10),
+        _segment("chaos_on", retry=CHAOS_RETRY, restart_attempts=8,
+                 churn=True, cancels=True, seed=10),
+        _segment("chaos_off", retry=NO_RETRY, restart_attempts=0,
+                 churn=True, cancels=True, seed=10),
+    ]
+    _LAST["rows"] = rows
+    return rows
+
+
+# last run() result, serialized to BENCH_chaos.json by write_json
+# (called from benchmarks.run and from this module's main)
+_LAST: Dict[str, object] = {}
+
+
+def write_json(outdir: str = "results/bench") -> str:
+    rows = _LAST.get("rows")
+    if not rows:
+        raise RuntimeError("fig14: run() before write_json()")
+    by = {r["segment"]: r for r in rows}
+    payload = {
+        "workload": {
+            "duration_s": DURATION_S,
+            "rate_hz": RATE_HZ,
+            "nodes": N_NODES,
+            "slots": SLOTS,
+            "churn_period_s": CHURN_PERIOD_S,
+            "cancel_rate": CANCEL_RATE,
+            "timeout_s": TIMEOUT_S,
+            "exec_median_s": MEDIAN_S,
+            "exec_sigma": SIGMA,
+            "retry": {
+                "max_retries": CHAOS_RETRY.max_retries,
+                "base_backoff_s": CHAOS_RETRY.base_backoff_s,
+                "max_backoff_s": CHAOS_RETRY.max_backoff_s,
+                "retry_timeouts": CHAOS_RETRY.retry_timeouts,
+            },
+        },
+        "segments": by,
+        "chaos_on_vs_off": {
+            "completion_on": by["chaos_on"]["completion_rate"],
+            "completion_off": by["chaos_off"]["completion_rate"],
+            "failures_rescued": (
+                by["chaos_off"]["failed"] - by["chaos_on"]["failed"]
+            ),
+            "p99_inflation_vs_baseline": (
+                by["chaos_on"]["p99_ms"] / max(by["baseline"]["p99_ms"], 1e-9)
+            ),
+        },
+    }
+    os.makedirs(outdir, exist_ok=True)
+    path = os.path.join(outdir, "BENCH_chaos.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def gate() -> None:
+    """CI gates: retries-on survives chaos; retries-off visibly does not;
+    the tail stays bounded (all deterministic in virtual time, so the
+    floors are robust on any runner)."""
+    rows = _LAST.get("rows") or []
+    by = {r["segment"]: r for r in rows}
+    min_completion = float(os.environ.get("FIG14_MIN_COMPLETION", 0.99))
+    max_p99_x = float(os.environ.get("FIG14_MAX_P99_X", 5.0))
+    on, off, base = by["chaos_on"], by["chaos_off"], by["baseline"]
+    if on["completion_rate"] < min_completion:
+        raise SystemExit(
+            f"fig14 completion gate: chaos_on completes "
+            f"{on['completion_rate']:.4f} < required {min_completion:.4f}"
+        )
+    if off["failed"] <= on["failed"]:
+        raise SystemExit(
+            f"fig14 contrast gate: retries off must fail more requests "
+            f"than retries on (off={off['failed']}, on={on['failed']})"
+        )
+    inflation = on["p99_ms"] / max(base["p99_ms"], 1e-9)
+    if inflation > max_p99_x:
+        raise SystemExit(
+            f"fig14 tail gate: chaos_on p99 {on['p99_ms']:.1f}ms is "
+            f"{inflation:.1f}x baseline {base['p99_ms']:.1f}ms "
+            f"(limit {max_p99_x:.1f}x)"
+        )
+
+
+def main():
+    emit("fig14", run())
+    path = write_json()
+    print(f"# chaos summary written to {path}")
+    gate()
+
+
+if __name__ == "__main__":
+    main()

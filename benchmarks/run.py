@@ -25,6 +25,7 @@ from benchmarks import (
     fig11_elastic_scaleout,
     fig12_crossnode,
     fig13_serving,
+    fig14_chaos,
     roofline,
     table1_coldstart,
 )
@@ -44,6 +45,8 @@ BENCHES = {
               fig12_crossnode.run),
     "fig13": ("Fig 13: LM serving as an elastic composition workload",
               fig13_serving.run),
+    "fig14": ("Fig 14: reliability under chaos (churn + cancellation)",
+              fig14_chaos.run),
     "roofline": ("Roofline: dry-run three-term table", roofline.run),
 }
 
@@ -79,6 +82,15 @@ def main() -> None:
     if status.get("fig13", (False,))[0]:
         print(f"# serving summary written to "
               f"{fig13_serving.write_json(args.outdir)}")
+    # chaos summary + gates (completion rate, contrast, tail bound)
+    if status.get("fig14", (False,))[0]:
+        print(f"# chaos summary written to "
+              f"{fig14_chaos.write_json(args.outdir)}")
+        try:
+            fig14_chaos.gate()
+        except SystemExit as e:
+            print(f"# fig14 gate FAILED: {e}")
+            status["fig14"] = (False, status["fig14"][1])
     # simulator throughput trajectory (events/sec per tracked segment)
     perf_path = write_simperf(args.outdir)
     print(f"# simulator throughput written to {perf_path}")

@@ -60,7 +60,9 @@ import numpy as np
 from repro.core.coldstart import ColdStartProfile, TransferProfile
 from repro.core.context import MemoryContext, MemoryTracker
 from repro.core.dag import COMPUTE, Composition
-from repro.core.dispatcher import Dispatcher, InvocationRun, VertexRun
+from repro.core.dispatcher import (
+    FAIL_CANCELLED, FAIL_NODE, Dispatcher, InvocationRun, VertexRun,
+)
 from repro.core.engines import TRANSFER, Task
 from repro.core.items import SetDict, set_bytes
 from repro.core.node import WorkerNode
@@ -143,7 +145,7 @@ class CrossNodePlacer:
         cluster's restart-on-survivor path re-executes them."""
         for disp, inv in list(self._deps.pop(id(node), {}).values()):
             if not inv.done and not inv.failed:
-                disp._fail(inv, "node_failure")
+                disp._fail(inv, "node_failure", kind=FAIL_NODE)
 
     # ---------------------------------------------------------- policy
     def _pick(self, fn_name: str, home: WorkerNode) -> WorkerNode:
@@ -264,7 +266,13 @@ class ClusterManager:
         crossnode: Optional[bool] = None,   # None -> CROSSNODE env knob
         transfer_links: Optional[Dict[Tuple[str, str], TransferProfile]] = None,
         transfer_profile: Optional[TransferProfile] = None,
+        restart_attempts: int = 3,   # node-death re-executions per request
     ):
+        if restart_attempts < 0:
+            raise ValueError(
+                f"restart_attempts must be >= 0, got {restart_attempts}"
+            )
+        self.restart_attempts = restart_attempts
         self.control_plane = control_plane
         if control_plane is not None:
             if nodes:
@@ -284,6 +292,7 @@ class ClusterManager:
         self.latency = LatencyStats()
         self.restarts = 0
         self.failed = 0
+        self.cancelled = 0
         self._outstanding: Dict[int, int] = {id(n): 0 for n in self._nodes}
         if crossnode is None:
             crossnode = os.environ.get("CROSSNODE") == "1"
@@ -321,7 +330,12 @@ class ClusterManager:
         inputs: SetDict,
         on_done: Optional[Callable[[InvocationRun], None]] = None,
         _attempt: int = 0,
-    ) -> None:
+        on_start: Optional[Callable[[InvocationRun], None]] = None,
+    ) -> InvocationRun:
+        """Route and admit one invocation; returns the live
+        ``InvocationRun``. ``on_start`` fires for every admission —
+        including node-death re-executions — with the (new) live run, so
+        callers holding a handle can track/cancel the current attempt."""
         node = self._route(comp)
         if self.control_plane is not None:
             self.control_plane.on_dispatch(node)
@@ -334,19 +348,33 @@ class ClusterManager:
                 self.control_plane.on_complete(node)
             else:
                 self._outstanding[id(node)] -= 1
-            if inv.failed and "node_failure" in inv.failed and _attempt < 3:
+            # structured failure kind, not a reason-substring match: a
+            # user vertex named "node_failure" must not restart, and a
+            # cancelled request must never be resurrected
+            if (
+                inv.failure_kind == FAIL_NODE
+                and _attempt < self.restart_attempts
+            ):
                 # idempotent re-execution on a surviving node (SS6.1)
                 self.restarts += 1
-                self.invoke(comp, inputs, on_done, _attempt=_attempt + 1)
+                self.invoke(comp, inputs, on_done, _attempt=_attempt + 1,
+                            on_start=on_start)
                 return
-            if inv.failed:
+            if inv.failure_kind == FAIL_CANCELLED:
+                self.cancelled += 1
+            elif inv.failed:
                 self.failed += 1
             else:
                 self.latency.add(self.loop.now - t_submit)
             if on_done:
                 on_done(inv)
 
-        node.invoke(comp, inputs, on_done=done)
+        inv = node.invoke(comp, inputs, on_done=done)
+        # a synchronously finished run is never the caller's live attempt
+        # (a restart's recursive invoke already reported the newer one)
+        if on_start is not None and not inv.done and not inv.failed:
+            on_start(inv)
+        return inv
 
     def invoke_at(self, t: float, comp: Composition, inputs: SetDict,
                   on_done=None):

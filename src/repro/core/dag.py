@@ -26,6 +26,51 @@ COMPUTE, COMM, SUBGRAPH = "compute", "comm", "composition"
 
 
 @dataclass(frozen=True)
+class RetryPolicy:
+    """Per-vertex failure handling (SS6.1: pure functions are idempotent,
+    so the platform restarts lost work transparently).
+
+    ``max_retries`` resubmissions after the first attempt; each retry
+    waits ``base_backoff_s * 2**attempts`` capped at ``max_backoff_s``
+    (the astraflow RunOrchestrator schedule). Zero backoff resubmits
+    synchronously from the failure callback — the historical behavior,
+    and the byte-identity default. Failure classes: generic task errors
+    ("error", e.g. comm sanitization) are always retryable within
+    budget; "timeout" only when ``retry_timeouts`` is set;
+    "node_failure" and "cancelled" are never retried at task level (the
+    cluster restart path and the canceller own those)."""
+
+    max_retries: int = 2
+    base_backoff_s: float = 0.0
+    max_backoff_s: float = 30.0
+    retry_timeouts: bool = False
+
+    def __post_init__(self):
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {self.max_retries}")
+        if self.base_backoff_s < 0 or self.max_backoff_s < 0:
+            raise ValueError("backoff durations must be >= 0")
+        if self.base_backoff_s > self.max_backoff_s:
+            raise ValueError(
+                f"base_backoff_s ({self.base_backoff_s}) exceeds "
+                f"max_backoff_s ({self.max_backoff_s})"
+            )
+
+    def retryable(self, kind: str) -> bool:
+        if kind == "timeout":
+            return self.retry_timeouts
+        return kind == "error"
+
+    def backoff_s(self, attempts_done: int) -> float:
+        """Delay before the next resubmission after ``attempts_done``
+        attempts have failed: capped exponential, deterministic."""
+        if self.base_backoff_s <= 0.0:
+            return 0.0
+        return min(self.base_backoff_s * (2.0 ** attempts_done),
+                   self.max_backoff_s)
+
+
+@dataclass(frozen=True)
 class PortRef:
     vertex: str
     set_name: str
@@ -41,6 +86,7 @@ class Vertex:
     subgraph: Optional["Composition"] = None
     context_bytes: int = 1 << 20   # user-declared memory requirement
     timeout_s: float = 60.0
+    retry: Optional[RetryPolicy] = None   # None -> dispatcher default
 
     def __getitem__(self, set_name: str) -> PortRef:
         if set_name not in self.inputs and set_name not in self.outputs:
@@ -92,10 +138,11 @@ class Composition:
         outputs: Tuple[str, ...],
         context_bytes: int = 1 << 20,
         timeout_s: float = 60.0,
+        retry: Optional[RetryPolicy] = None,
     ) -> Vertex:
         return self._add(Vertex(
             name, COMPUTE, function, tuple(inputs), tuple(outputs),
-            context_bytes=context_bytes, timeout_s=timeout_s,
+            context_bytes=context_bytes, timeout_s=timeout_s, retry=retry,
         ))
 
     def http(self, name: str, context_bytes: int = 1 << 20) -> Vertex:

@@ -37,23 +37,24 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
 from repro.core.coldstart import CodeCache, ColdStartProfile
-from repro.core.dag import COMM, COMPUTE, SUBGRAPH, Composition, Edge, Vertex
-from repro.core.engines import BATCH, EngineSet, Task
+from repro.core.dag import (
+    COMM, COMPUTE, SUBGRAPH, Composition, Edge, RetryPolicy, Vertex,
+)
+from repro.core.engines import BATCH, EngineSet, Task, release_task_weights
 from repro.core.http import IDEMPOTENT_METHODS, HttpRequest
 from repro.core.items import Item, ItemSet, SetDict, group_by_key
 from repro.core.registry import FunctionRegistry
 from repro.core.sim import EventLoop
 
-
-def release_task_weights(task: Task) -> None:
-    """Balance a ``WeightStore.touch`` made at instance submit. Called on
-    the task's single completion/failure callback, or by ``WorkerNode.fail``
-    for queued tasks that are cancelled before any callback can fire —
-    exactly once per submitted task (idempotent via the meta pop), so
-    weight inflight counts return to zero with the invocations."""
-    ws = task.meta.pop("wstore", None)
-    if ws is not None:
-        ws.task_done(task.fn_name)
+# structured failure classes (InvocationRun.failure_kind): what failed,
+# independent of the human-readable reason string. The cluster restart
+# path keys on FAIL_NODE — never on reason substrings — so a user vertex
+# named (or failing with a reason containing) "node_failure" cannot
+# trigger bogus restarts.
+FAIL_ERROR = "error"            # generic task failure (e.g. sanitization)
+FAIL_TIMEOUT = "timeout"
+FAIL_NODE = "node_failure"
+FAIL_CANCELLED = "cancelled"
 
 
 @dataclass
@@ -62,6 +63,11 @@ class InstanceState:
     inputs: SetDict
     done: bool = False
     outputs: SetDict = field(default_factory=dict)
+    # highest attempt number submitted for this instance: hedges carry
+    # it (no fresh retry budget), and a failing task older than it is a
+    # hedge sibling whose retry is already out (deduped, see
+    # _on_task_failed)
+    attempts: int = 0
 
 
 @dataclass
@@ -88,6 +94,9 @@ class VertexRun:
     # lifecycle instance contexts follow — a zero-instance vertex must
     # still release its staged bytes
     staged: List[Any] = field(default_factory=list)
+    # nested InvocationRun while a SUBGRAPH vertex is in flight (so
+    # cancellation can cascade into it)
+    sub_inv: Any = None
 
 
 @dataclass
@@ -102,11 +111,27 @@ class InvocationRun:
     outputs: SetDict = field(default_factory=dict)
     done: bool = False
     failed: Optional[str] = None
+    # structured failure class (FAIL_* above) set alongside ``failed``;
+    # the cluster restart path and cancellation bookkeeping key on this,
+    # never on reason substrings
+    failure_kind: Optional[str] = None
     t_end: float = 0.0
+    # live engine tasks by id: registered at submit, dropped at the
+    # completion/failure callback. Cancellation marks them cancelled and
+    # balances their weight touches; failure flushes the still-queued
+    # ones so a dead invocation cannot leak work into live engine slots
+    live_tasks: Dict[int, Task] = field(default_factory=dict)
+    # back-pointer to the admitting dispatcher (set in Dispatcher.invoke)
+    # so handles can route cancel() without knowing the node
+    dispatcher: Any = field(default=None, repr=False, compare=False)
 
     @property
     def latency(self) -> float:
         return self.t_end - self.t_start
+
+    @property
+    def cancelled(self) -> bool:
+        return self.failure_kind == FAIL_CANCELLED
 
 
 class Dispatcher:
@@ -119,6 +144,7 @@ class Dispatcher:
         profiles: Optional[Dict[str, ColdStartProfile]] = None,
         comm_profile_cpu_only: bool = False,
         max_retries: int = 2,
+        default_retry: Optional[RetryPolicy] = None,  # node-level policy
         hedge_after_s: float = 0.0,   # 0 = hedging off
         hedge_min_instances: int = 4,
         cache_miss_rate: float = 0.0,  # fraction of requests loading from disk
@@ -133,6 +159,7 @@ class Dispatcher:
         # share one profiles dict across nodes and populate it at deploy
         self.profiles = {} if profiles is None else profiles
         self.max_retries = max_retries
+        self.default_retry = default_retry
         self.hedge_after_s = hedge_after_s
         self.hedge_min_instances = hedge_min_instances
         self.cache_miss_rate = cache_miss_rate
@@ -174,6 +201,7 @@ class Dispatcher:
             inv_id=next(self._ids), comp=comp, on_done=on_done,
             t_start=self.loop.now, inputs=inputs,
             remaining=len(comp.vertices),
+            dispatcher=self,
         )
         self.active[inv.inv_id] = inv
         for name, v in comp.vertices.items():
@@ -282,15 +310,19 @@ class Dispatcher:
         sub = vr.vertex.subgraph
 
         def sub_done(sub_inv: InvocationRun):
+            vr.sub_inv = None
             if sub_inv.failed:
-                self._fail(inv, f"{vr.vertex.name}: {sub_inv.failed}")
+                # propagate the structured kind: a node death inside the
+                # nested graph must still reach the cluster restart path
+                self._fail(inv, f"{vr.vertex.name}: {sub_inv.failed}",
+                           kind=sub_inv.failure_kind or FAIL_ERROR)
                 return
             vr.outputs = sub_inv.outputs
             vr.instances = [InstanceState(0, {})]
             vr.n_done = 1
             self._vertex_done(inv, vr, merged=True)
 
-        self.invoke(sub, vr.delivered, on_done=sub_done)
+        vr.sub_inv = self.invoke(sub, vr.delivered, on_done=sub_done)
 
     # ------------------------------------------------------------------
     def _submit_instance(
@@ -348,6 +380,9 @@ class Dispatcher:
             on_complete=self._on_task_complete,
             on_failed=self._on_task_failed,
         )
+        if attempts > inst.attempts:
+            inst.attempts = attempts
+        inv.live_tasks[id(task)] = task
         engines.submit(task)
 
     def _hedge(self, inv: InvocationRun, vr: VertexRun):
@@ -355,7 +390,10 @@ class Dispatcher:
             return
         for inst in vr.instances:
             if not inst.done:
-                self._submit_instance(inv, vr, inst, attempts=0)
+                # the backup rides the instance's REAL attempt count: a
+                # hedged straggler must not hand its failures a fresh
+                # retry budget
+                self._submit_instance(inv, vr, inst, attempts=inst.attempts)
 
     # ------------------------------------------------------------------
     def _on_task_complete(self, task: Task, outputs: SetDict, ctx):
@@ -367,6 +405,7 @@ class Dispatcher:
             inv: InvocationRun = task.meta["inv"]
             vr: VertexRun = task.meta["vr"]
             inst: InstanceState = task.meta["inst"]
+            inv.live_tasks.pop(id(task), None)
             if inv.failed or inst.done:  # hedge loser or dead invocation
                 ctx.free()
                 return
@@ -379,33 +418,92 @@ class Dispatcher:
         finally:
             release_task_weights(task)
 
+    def _policy(self, vr: VertexRun) -> RetryPolicy:
+        """Effective retry policy: vertex override, else the node-level
+        default, else the legacy ``max_retries`` knob (zero backoff,
+        timeouts fatal — the historical behavior)."""
+        if vr.vertex.retry is not None:
+            return vr.vertex.retry
+        if self.default_retry is not None:
+            return self.default_retry
+        return RetryPolicy(max_retries=self.max_retries)
+
+    @staticmethod
+    def _comm_idempotent(inst: InstanceState) -> bool:
+        """Whether every request payload of a COMM instance is safe to
+        re-send. Empty/whitespace payloads carry no method at all — they
+        cannot mutate anything, so they count as idempotent (the old
+        ``split()[0]`` probe crashed on them instead)."""
+        for it in inst.inputs.get("requests", []):
+            if not it.data:
+                continue
+            if isinstance(it.data, HttpRequest):
+                method = it.data.method
+            else:
+                words = str(it.data).split()
+                if not words:
+                    continue
+                method = words[0]
+            if method not in IDEMPOTENT_METHODS:
+                return False
+        return True
+
     def _on_task_failed(self, task: Task, reason: str):
-        # release in the finally: a retry's re-touch must land before
-        # this attempt's refcount drops (same rule as _on_task_complete)
+        # release in the finally: a zero-backoff retry's re-touch must
+        # land before this attempt's refcount drops (same rule as
+        # _on_task_complete). A backed-off retry re-touches at resubmit
+        # time instead — during the wait the task is not in flight, so
+        # the weights may legitimately reap and the retry pays the cold
+        # term again.
         try:
             inv: InvocationRun = task.meta["inv"]
             vr: VertexRun = task.meta["vr"]
             inst: InstanceState = task.meta["inst"]
+            inv.live_tasks.pop(id(task), None)
             if inv.failed or inst.done:
                 return
-            if reason == "timeout":
-                self._fail(inv, f"{vr.vertex.name}: timeout (preempted)")
+            if task.attempts < inst.attempts:
+                # hedge sibling of an attempt that already failed and
+                # re-armed: its retry is out — don't double-retry
                 return
-            idempotent = True
-            if vr.vertex.kind == COMM:
-                idempotent = all(
-                    (it.data.method if isinstance(it.data, HttpRequest)
-                     else str(it.data).split()[0]) in IDEMPOTENT_METHODS
-                    for it in inst.inputs.get("requests", [])
-                    if it.data
-                )
-            if task.attempts < self.max_retries and idempotent:
-                self._submit_instance(inv, vr, inst, attempts=task.attempts + 1)
+            kind = FAIL_TIMEOUT if reason == "timeout" else FAIL_ERROR
+            policy = self._policy(vr)
+            idempotent = (
+                self._comm_idempotent(inst) if vr.vertex.kind == COMM
+                else True
+            )
+            if (
+                idempotent
+                and task.attempts < policy.max_retries
+                and policy.retryable(kind)
+            ):
+                next_attempts = task.attempts + 1
+                delay = policy.backoff_s(task.attempts)
+                if delay <= 0.0:
+                    # synchronous resubmit: the historical event ordering
+                    # (an after(0) round-trip through the heap would run
+                    # behind events already queued at this instant)
+                    self._submit_instance(inv, vr, inst,
+                                          attempts=next_attempts)
+                else:
+                    inst.attempts = next_attempts  # dedupe while waiting
+
+                    def resubmit():
+                        if inv.failed or inst.done:
+                            return
+                        self._submit_instance(inv, vr, inst,
+                                              attempts=next_attempts)
+
+                    self.loop.after(delay, resubmit)
+            elif reason == "timeout":
+                self._fail(inv, f"{vr.vertex.name}: timeout (preempted)",
+                           kind=FAIL_TIMEOUT)
             else:
                 self._fail(
                     inv,
                     f"{vr.vertex.name}: {reason}"
                     + ("" if idempotent else " (not idempotent; not retried)"),
+                    kind=kind,
                 )
         finally:
             release_task_weights(task)
@@ -450,13 +548,25 @@ class Dispatcher:
             c.free()
         vr.contexts = []
 
-    def _fail(self, inv: InvocationRun, reason: str):
+    def _fail(self, inv: InvocationRun, reason: str,
+              kind: str = FAIL_ERROR):
         if inv.failed:
             return
         inv.failed = reason
+        inv.failure_kind = kind
         self.failed_count += 1
         inv.t_end = self.loop.now
         self.active.pop(inv.inv_id, None)
+        # flush still-QUEUED sibling tasks: a dead invocation must not
+        # leak its pending work into live engine slots (in-flight tasks
+        # keep their already-charged busy time; their callbacks observe
+        # inv.failed and release through the normal path)
+        for task in list(inv.live_tasks.values()):
+            engines = task.meta["vr"].exec_engines or self.engines
+            if id(task) not in engines.inflight_tasks:
+                task.cancelled = True
+                release_task_weights(task)
+                inv.live_tasks.pop(id(task), None)
         # release whatever is still held
         for vr in inv.vertex_runs.values():
             if vr.placed_release is not None:
@@ -468,3 +578,30 @@ class Dispatcher:
             self._free_vertex_contexts(vr)
         if inv.on_done:
             inv.on_done(inv)
+
+    # ------------------------------------------------------------------
+    def cancel(self, inv: InvocationRun) -> bool:
+        """Cancel a live invocation. Flushes its queued vertices, marks
+        every live engine task ``cancelled`` (queued tasks are skipped at
+        dispatch; in-flight tasks free their context without firing a
+        callback), balances each task's weight touch exactly once,
+        cascades into nested subgraph invocations, and fails the
+        invocation with kind ``FAIL_CANCELLED`` — which the cluster never
+        restarts. Returns False if the invocation already finished."""
+        if inv.done or inv.failed:
+            return False
+        for vr in inv.vertex_runs.values():
+            sub = vr.sub_inv
+            if sub is not None and not sub.done and not sub.failed:
+                self.cancel(sub)
+            for inst in vr.instances:
+                inst.done = True   # suppress straggling completions
+        # in-flight cancelled tasks never reach a callback, so their
+        # weight touch is balanced here (idempotent via the meta pop:
+        # callbacks that DO fire release nothing twice)
+        for task in list(inv.live_tasks.values()):
+            task.cancelled = True
+            release_task_weights(task)
+        inv.live_tasks.clear()
+        self._fail(inv, "cancelled", kind=FAIL_CANCELLED)
+        return True

@@ -97,6 +97,18 @@ class Task:
     on_failed: Optional[Callable[["Task", str], None]] = None
 
 
+def release_task_weights(task: Task) -> None:
+    """Balance a ``WeightStore.touch`` made at instance submit. Called on
+    the task's single completion/failure callback, or by whoever cancels
+    a task whose callbacks will never fire (``WorkerNode.fail``,
+    ``Dispatcher.cancel``, the failed-invocation queue flush) — exactly
+    once per submitted task (idempotent via the meta pop), so weight
+    inflight counts return to zero with the invocations."""
+    ws = task.meta.pop("wstore", None)
+    if ws is not None:
+        ws.task_done(task.fn_name)
+
+
 class EngineSlot:
     def __init__(self, node: "EngineSet", slot_id: int, kind: str):
         self.node = node

@@ -33,8 +33,10 @@ from typing import Callable, Dict, Optional
 from repro.core.coldstart import CodeCache, ColdStartProfile
 from repro.core.context import MemoryTracker
 from repro.core.controller import PIController
-from repro.core.dag import Composition
-from repro.core.dispatcher import Dispatcher, InvocationRun, release_task_weights
+from repro.core.dag import Composition, RetryPolicy
+from repro.core.dispatcher import (
+    FAIL_NODE, Dispatcher, InvocationRun, release_task_weights,
+)
 from repro.core.engines import EngineSet, Task
 from repro.core.http import ServiceRegistry
 from repro.core.items import SetDict
@@ -57,6 +59,7 @@ class WorkerNode:
         controller_enabled: bool = True,
         controller_interval_s: float = 0.030,
         max_retries: int = 2,
+        retry_policy: Optional[RetryPolicy] = None,  # node-wide default
         hedge_after_s: float = 0.0,
         cache_miss_rate: float = 0.0,
         code_cache_entries: int = 0,   # >0 -> model per-node code residency
@@ -104,6 +107,7 @@ class WorkerNode:
             registry,
             profiles=profiles,
             max_retries=max_retries,
+            default_retry=retry_policy,
             hedge_after_s=hedge_after_s,
             cache_miss_rate=cache_miss_rate,
             code_cache=self.code_cache,
@@ -173,7 +177,7 @@ class WorkerNode:
             for vr in inv.vertex_runs.values():
                 for inst in vr.instances:
                     inst.done = True  # suppress straggling completions
-            self.dispatcher._fail(inv, "node_failure")
+            self.dispatcher._fail(inv, "node_failure", kind=FAIL_NODE)
 
     # ------------------------------------------------- control-plane API
     @property

@@ -146,6 +146,13 @@ class WeightStore:
     def resident_bytes(self) -> int:
         return sum(s.param_bytes for s in self._models.values() if s.resident)
 
+    @property
+    def inflight(self) -> int:
+        """Outstanding touch/task_done imbalance across all models — must
+        drain to zero once every invocation completes, fails, or is
+        cancelled (the reliability tests' refcount invariant)."""
+        return sum(s.inflight for s in self._models.values())
+
     # ------------------------------------------------------------------
     def touch(self, fn_name: str) -> bool:
         """A task needing ``fn_name``'s model is being submitted. Returns

@@ -40,6 +40,7 @@ Error taxonomy in ``repro.sdk.errors``; full reference in docs/API.md.
 """
 from repro.core.coldstart import ColdStartProfile, TransferProfile
 from repro.core.control_plane import ControlPlaneConfig
+from repro.core.dag import RetryPolicy
 from repro.core.http import HttpRequest, HttpResponse
 from repro.core.items import Item
 from repro.core.workloads import BatchStepModel, WeightStore
@@ -102,6 +103,7 @@ __all__ = [
     "HttpRequest",
     "HttpResponse",
     "Item",
+    "RetryPolicy",
     "TransferProfile",
     "WeightStore",
 ]

@@ -39,7 +39,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
-from repro.core.dag import Composition, PortRef
+from repro.core.dag import Composition, PortRef, RetryPolicy
 from repro.sdk.errors import (
     DeclarationError,
     UnknownPortError,
@@ -240,7 +240,8 @@ class App:
 
     def _add_compute(self, spec: FunctionSpec, *, name: Optional[str],
                      context_bytes: Optional[int], timeout_s: Optional[float],
-                     ports: dict) -> VertexHandle:
+                     ports: dict,
+                     retry: Optional[RetryPolicy] = None) -> VertexHandle:
         vname = self._new_vertex_name(name or spec.name)
         self._adopt_spec(spec)
         self.comp.compute(
@@ -248,6 +249,7 @@ class App:
             context_bytes=spec.context_bytes if context_bytes is None
             else context_bytes,
             timeout_s=spec.timeout_s if timeout_s is None else timeout_s,
+            retry=spec.retry if retry is None else retry,
         )
         handle = VertexHandle(self, vname, spec.inputs, spec.outputs)
         self._wire(handle, ports)

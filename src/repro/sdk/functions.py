@@ -32,11 +32,43 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Optional, Tuple
 
 from repro.core.coldstart import ColdStartProfile
+from repro.core.dag import RetryPolicy
 from repro.core.items import SetDict
 from repro.sdk.errors import DeclarationError, WiringError
 
 DEFAULT_CONTEXT_BYTES = 1 << 20
 DEFAULT_TIMEOUT_S = 60.0
+
+
+def _retry_from_sugar(
+    name: str,
+    retry: Optional[RetryPolicy],
+    retries: Optional[int],
+    backoff_s: float,
+    max_backoff_s: float,
+    retry_timeouts: bool,
+) -> Optional[RetryPolicy]:
+    """Fold the ``retries=``/``backoff_s=``/``retry_timeouts=`` sugar into
+    a ``RetryPolicy`` (None when nothing was asked for: the platform /
+    dispatcher default applies)."""
+    if retry is not None:
+        if retries is not None or backoff_s or retry_timeouts:
+            raise DeclarationError(
+                f"{name}: pass retry= OR the retries=/backoff_s=/"
+                f"retry_timeouts= sugar, not both"
+            )
+        return retry
+    if retries is None and not backoff_s and not retry_timeouts:
+        return None
+    try:
+        return RetryPolicy(
+            max_retries=2 if retries is None else retries,
+            base_backoff_s=backoff_s,
+            max_backoff_s=max_backoff_s,
+            retry_timeouts=retry_timeouts,
+        )
+    except ValueError as e:
+        raise DeclarationError(f"{name}: {e}") from e
 
 
 def _check_sets(name: str, role: str, sets) -> Tuple[str, ...]:
@@ -76,6 +108,8 @@ class FunctionSpec:
     batchable: bool = False
     # calibrated dispatcher profile; Platform.deploy collects these
     profile: Optional[ColdStartProfile] = None
+    # per-vertex failure handling; None -> platform/dispatcher default
+    retry: Optional[RetryPolicy] = None
 
     def __post_init__(self):
         if not isinstance(self.name, str) or not self.name:
@@ -122,12 +156,14 @@ class FunctionSpec:
     # ------------------------------------------------------------------
     def __call__(self, *args, _name: Optional[str] = None,
                  _context_bytes: Optional[int] = None,
-                 _timeout_s: Optional[float] = None, **ports):
+                 _timeout_s: Optional[float] = None,
+                 _retry: Optional[RetryPolicy] = None, **ports):
         """Inside ``with sdk.composition(...)``: add a compute vertex fed
         by ``ports`` (output ports / ``app.input`` refs / ``each``/``key``
         wrappers) and return its handle. ``_name`` overrides the vertex
-        name (default: the function name); ``_context_bytes`` and
-        ``_timeout_s`` override the declared per-vertex resources.
+        name (default: the function name); ``_context_bytes``,
+        ``_timeout_s``, and ``_retry`` override the declared per-vertex
+        resources / failure policy.
 
         Called with a single ``SetDict`` positional argument instead, the
         payload executes directly (no platform involved).
@@ -149,7 +185,7 @@ class FunctionSpec:
         app = current_app()
         return app._add_compute(
             self, name=_name, context_bytes=_context_bytes,
-            timeout_s=_timeout_s, ports=ports,
+            timeout_s=_timeout_s, retry=_retry, ports=ports,
         )
 
 
@@ -166,8 +202,19 @@ def function(
     memoize: bool = True,
     batchable: bool = False,
     profile: Optional[ColdStartProfile] = None,
+    retry: Optional[RetryPolicy] = None,
+    retries: Optional[int] = None,      # sugar: RetryPolicy.max_retries
+    backoff_s: float = 0.0,             # sugar: capped exponential base
+    max_backoff_s: float = 30.0,        # sugar: backoff cap
+    retry_timeouts: bool = False,       # sugar: timeouts retryable too
 ) -> Callable[[Callable[[SetDict], SetDict]], FunctionSpec]:
-    """Decorator form: ``@sdk.function(inputs=..., outputs=...)``."""
+    """Decorator form: ``@sdk.function(inputs=..., outputs=...)``.
+
+    Failure handling: pass a full ``sdk.RetryPolicy`` via ``retry=``, or
+    the ``retries=``/``backoff_s=``/``retry_timeouts=`` sugar (e.g.
+    ``@sdk.function(..., retries=3, backoff_s=0.05, retry_timeouts=True)``
+    for 3 resubmissions at 50/100/200ms capped backoff, rescuing
+    timeouts). Omit all of them to inherit the platform default."""
 
     def wrap(fn: Callable[[SetDict], SetDict]) -> FunctionSpec:
         # inputs/outputs validated (incl. the bare-string typo) by
@@ -179,6 +226,10 @@ def function(
             jax_fn=jax_fn, abstract_args=tuple(abstract_args),
             service_time_s=service_time_s, memoize=memoize,
             batchable=batchable, profile=profile,
+            retry=_retry_from_sugar(
+                name or fn.__name__, retry, retries, backoff_s,
+                max_backoff_s, retry_timeouts,
+            ),
         )
 
     return wrap
@@ -190,9 +241,18 @@ def declare(
     *,
     inputs: Tuple[str, ...],
     outputs: Tuple[str, ...],
+    retries: Optional[int] = None,
+    backoff_s: float = 0.0,
+    max_backoff_s: float = 30.0,
+    retry_timeouts: bool = False,
     **kwargs,
 ) -> FunctionSpec:
-    """Programmatic form of ``@sdk.function`` for generated payloads."""
+    """Programmatic form of ``@sdk.function`` for generated payloads.
+    Accepts the same retry sugar (or a full ``retry=RetryPolicy``)."""
+    kwargs["retry"] = _retry_from_sugar(
+        name, kwargs.get("retry"), retries, backoff_s, max_backoff_s,
+        retry_timeouts,
+    )
     return FunctionSpec(name=name, fn=fn, inputs=inputs,
                         outputs=outputs, **kwargs)
 

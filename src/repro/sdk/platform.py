@@ -35,7 +35,7 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 from repro.core.cluster import ClusterManager
 from repro.core.coldstart import ColdStartProfile, TransferProfile
 from repro.core.control_plane import ControlPlaneConfig, ElasticControlPlane
-from repro.core.dag import Composition
+from repro.core.dag import Composition, RetryPolicy
 from repro.core.http import ServiceRegistry
 from repro.core.items import SetDict
 from repro.core.node import WorkerNode
@@ -104,6 +104,9 @@ class NodeSpec:
     controller_enabled: bool = True
     controller_interval_s: float = 0.030
     max_retries: int = 2
+    # node-wide RetryPolicy default (vertices may override); None keeps
+    # the legacy max_retries behavior: zero backoff, timeouts fatal
+    retry: Optional[RetryPolicy] = None
     hedge_after_s: float = 0.0
     cache_miss_rate: float = 0.0
     code_cache_entries: int = 0
@@ -132,6 +135,7 @@ class NodeSpec:
             controller_enabled=self.controller_enabled,
             controller_interval_s=self.controller_interval_s,
             max_retries=self.max_retries,
+            retry_policy=self.retry,
             hedge_after_s=self.hedge_after_s,
             cache_miss_rate=self.cache_miss_rate,
             code_cache_entries=self.code_cache_entries,
@@ -158,7 +162,8 @@ class Elastic:
 
 class InvocationHandle:
     """Future for one invocation: filled by the dispatcher's completion
-    callback; ``result()`` drives the (virtual-time) loop to completion."""
+    callback; ``result()`` drives the (virtual-time) loop to completion.
+    ``cancel()`` revokes the request mid-flight (or before dispatch)."""
 
     def __init__(self, platform: "Platform", comp: Composition,
                  on_done: Optional[Callable] = None):
@@ -166,12 +171,22 @@ class InvocationHandle:
         self.comp = comp
         self.invocation = None          # InvocationRun once finished
         self._on_done = on_done
+        self._live_inv = None           # current live InvocationRun
+        self._cancel_requested = False
 
     # dispatcher completion callback
     def _complete(self, inv) -> None:
         self.invocation = inv
+        self._live_inv = None
         if self._on_done is not None:
             self._on_done(inv)
+
+    # cluster admission callback: fires per attempt (incl. node-death
+    # re-executions), so cancel() always reaches the CURRENT run
+    def _started(self, inv) -> None:
+        self._live_inv = inv
+        if self._cancel_requested:
+            inv.dispatcher.cancel(inv)
 
     @property
     def done(self) -> bool:
@@ -182,6 +197,28 @@ class InvocationHandle:
     def failed(self) -> Optional[str]:
         """Failure reason (names the failing vertex), or None."""
         return None if self.invocation is None else self.invocation.failed
+
+    @property
+    def cancelled(self) -> bool:
+        """Cancellation took effect: revoked before dispatch, or the
+        live run was torn down with kind "cancelled"."""
+        if self.invocation is not None:
+            return self.invocation.failure_kind == "cancelled"
+        return self._cancel_requested
+
+    def cancel(self) -> bool:
+        """Revoke this request. Mid-flight, the dispatcher flushes its
+        queued vertices, marks its live engine tasks cancelled, and
+        releases contexts and weight refcounts exactly once; before the
+        scheduled fire time (``invoke(at=...)``), the dispatch is simply
+        skipped. Returns False if the invocation already finished."""
+        if self.invocation is not None:
+            return False
+        self._cancel_requested = True
+        inv = self._live_inv
+        if inv is None:
+            return True     # not fired yet; _fire will skip the dispatch
+        return inv.dispatcher.cancel(inv)
 
     @property
     def outputs(self) -> SetDict:
@@ -234,6 +271,7 @@ class Platform:
         transfer_links: Optional[Dict[Tuple[str, str], TransferProfile]] = None,
         transfer_profile: Optional[TransferProfile] = None,
         memoize: bool = True,
+        restart_attempts: int = 3,
     ):
         shapes = [s for s in (node, pool, elastic) if s is not None]
         if len(shapes) > 1:
@@ -264,6 +302,8 @@ class Platform:
         self._crossnode = crossnode
         self._transfer_links = transfer_links
         self._transfer_profile = transfer_profile
+        # node-death re-execution budget for cluster shapes
+        self._restart_attempts = restart_attempts
         self._worker: Optional[WorkerNode] = None
         self._cluster: Optional[ClusterManager] = None
         self._cp: Optional[ElasticControlPlane] = None
@@ -354,6 +394,7 @@ class Platform:
                 crossnode=self._crossnode,
                 transfer_links=self._transfer_links,
                 transfer_profile=self._transfer_profile,
+                restart_attempts=self._restart_attempts,
             )
         elif self._pool_specs is not None:
             # auto-name unnamed specs by position; explicit duplicate
@@ -373,6 +414,7 @@ class Platform:
                 crossnode=self._crossnode,
                 transfer_links=self._transfer_links,
                 transfer_profile=self._transfer_profile,
+                restart_attempts=self._restart_attempts,
             )
         else:
             self._worker = self._node_spec.build(self)
@@ -426,11 +468,19 @@ class Platform:
         )
 
     def _fire(self, comp: Composition, inputs: SetDict,
-              on_done: Optional[Callable]) -> None:
+              on_done: Optional[Callable],
+              handle: Optional[InvocationHandle] = None) -> None:
         if self._worker is not None:
-            self._worker.invoke(comp, inputs, on_done=on_done)
+            inv = self._worker.invoke(comp, inputs, on_done=on_done)
+            if handle is not None and not inv.done and not inv.failed:
+                handle._started(inv)
         else:
-            self._cluster.invoke(comp, inputs, on_done=on_done)
+            # on_start fires per admission (including node-death
+            # re-executions), keeping handle.cancel() aimed at the
+            # current live run
+            on_start = None if handle is None else handle._started
+            self._cluster.invoke(comp, inputs, on_done=on_done,
+                                 on_start=on_start)
 
     def invoke(
         self,
@@ -448,10 +498,14 @@ class Platform:
         handle = InvocationHandle(self, comp, on_done)
         inputs = inputs or {}
         if at is None:
-            self._fire(comp, inputs, handle._complete)
+            self._fire(comp, inputs, handle._complete, handle=handle)
         else:
-            self.loop.at(at, lambda: self._fire(comp, inputs,
-                                                handle._complete))
+            def fire():
+                if handle._cancel_requested:
+                    return      # cancelled before the scheduled dispatch
+                self._fire(comp, inputs, handle._complete, handle=handle)
+
+            self.loop.at(at, fire)
         return handle
 
     def submit_stream(self, arrivals) -> None:

@@ -1,0 +1,569 @@
+"""Reliability-semantics tests: retry policies, cancellation, restart
+caps, and the dispatcher failure-path regressions this subsystem fixed.
+
+Families:
+
+1. **RetryPolicy unit semantics** — capped exponential backoff values,
+   failure-class gating (timeouts only with ``retry_timeouts``), input
+   validation.
+2. **Dispatcher retry paths** — backed-off retries fire on a
+   deterministic schedule; timeouts stay fatal under the default policy
+   (byte-identity contract) and are rescued under an opted-in policy;
+   hedged attempts carry the instance's real attempt count and failures
+   of stale siblings are deduped (regression: hedges used to hand their
+   failures a fresh retry budget).
+3. **COMM idempotency probe** — empty/whitespace payloads are treated
+   as idempotent instead of crashing (regression: ``split()[0]``
+   IndexError), and non-idempotent methods still block retries.
+4. **Cluster restart policy** — restarts key on the structured
+   ``failure_kind`` (a vertex *named* "node_failure" that times out
+   must not restart) and respect the configurable attempt cap.
+5. **Cancellation** — ``InvocationHandle.cancel()`` before dispatch,
+   mid-flight, and after completion; queued work flushed, contexts and
+   weight refcounts released exactly once.
+6. **Chaos property** — seeded random churn + cancellation over a
+   cluster keeps the freed-exactly-once / weights-inflight-zero
+   invariants, with cross-node placement both off and on.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, strategies as st
+
+import repro.core.coldstart as coldstart_mod
+import repro.core.engines as engines_mod
+from repro import sdk
+from repro.core import (
+    ColdStartProfile,
+    Composition,
+    EventLoop,
+    FunctionRegistry,
+    HttpRequest,
+    Item,
+    ServiceRegistry,
+    WorkerNode,
+)
+from repro.core.cluster import ClusterManager
+from repro.core.context import MemoryContext
+from repro.core.dag import RetryPolicy
+from repro.core.dispatcher import (
+    FAIL_CANCELLED,
+    FAIL_NODE,
+    FAIL_TIMEOUT,
+)
+from repro.core.workloads import WeightStore
+from repro.sdk.errors import DeclarationError
+
+
+# ===========================================================================
+# helpers
+# ===========================================================================
+@pytest.fixture
+def recorded_contexts(monkeypatch):
+    """Swap MemoryContext for a recording subclass in every module that
+    instantiates contexts; yields the list of created contexts."""
+    created = []
+
+    class Recording(MemoryContext):
+        def __init__(self, *a, **kw):
+            super().__init__(*a, **kw)
+            self.effective_frees = 0
+            created.append(self)
+
+        def free(self):
+            if not self.freed:
+                self.effective_frees += 1
+            super().free()
+
+    monkeypatch.setattr(coldstart_mod, "MemoryContext", Recording)
+    monkeypatch.setattr(engines_mod, "MemoryContext", Recording)
+    return created
+
+
+def _registry():
+    reg = FunctionRegistry()
+    reg.register_function("work", lambda ins: {"out": [Item(1)]})
+    return reg
+
+
+def _single(name="work", timeout_s=60.0, retry=None):
+    c = Composition(f"single_{name}")
+    v = c.compute(name, "work", inputs=("x",), outputs=("out",),
+                  timeout_s=timeout_s, retry=retry)
+    c.bind_input("x", v["x"])
+    c.bind_output("out", v["out"])
+    return c
+
+
+def _count_submits(node):
+    """Wrap the node's engine submit; returns the list of submit times."""
+    times = []
+    orig = node.engines.submit
+
+    def submit(task):
+        times.append(node.loop.now)
+        return orig(task)
+
+    node.engines.submit = submit
+    return times
+
+
+# ===========================================================================
+# 1. RetryPolicy unit semantics
+# ===========================================================================
+def test_backoff_values_capped_exponential():
+    p = RetryPolicy(max_retries=5, base_backoff_s=4e-3, max_backoff_s=10e-3)
+    assert p.backoff_s(0) == pytest.approx(4e-3)
+    assert p.backoff_s(1) == pytest.approx(8e-3)
+    assert p.backoff_s(2) == pytest.approx(10e-3)   # capped
+    assert p.backoff_s(9) == pytest.approx(10e-3)
+    assert RetryPolicy(base_backoff_s=0.0).backoff_s(3) == 0.0
+
+
+def test_retryable_classes():
+    p = RetryPolicy()
+    assert p.retryable("error")
+    assert not p.retryable("timeout")
+    assert not p.retryable("node_failure")
+    assert not p.retryable("cancelled")
+    pt = RetryPolicy(retry_timeouts=True)
+    assert pt.retryable("timeout") and pt.retryable("error")
+    assert not pt.retryable("node_failure")
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        RetryPolicy(max_retries=-1)
+    with pytest.raises(ValueError):
+        RetryPolicy(base_backoff_s=-0.1)
+    with pytest.raises(ValueError):
+        RetryPolicy(base_backoff_s=2.0, max_backoff_s=1.0)
+
+
+# ===========================================================================
+# 2. Dispatcher retry paths
+# ===========================================================================
+TIMEOUT_PROFILE = {"work": ColdStartProfile(1e-5, 5e-3, 0.0)}
+
+
+def _run_always_timeout(policy):
+    """One invocation of a vertex whose 5ms exec always overruns a 1ms
+    timeout; returns (submit_times, final InvocationRun, node)."""
+    node = WorkerNode(_registry(), num_slots=4, profiles=TIMEOUT_PROFILE)
+    times = _count_submits(node)
+    done = []
+    node.invoke(_single(timeout_s=1e-3, retry=policy), {"x": [Item(0)]},
+                on_done=done.append)
+    node.run()
+    assert done
+    return times, done[0], node
+
+
+def test_backoff_schedule_deterministic():
+    policy = RetryPolicy(max_retries=3, base_backoff_s=4e-3,
+                         max_backoff_s=8e-3, retry_timeouts=True)
+    times, inv, node = _run_always_timeout(policy)
+    # original + 3 retries, then the invocation fails as a timeout
+    assert len(times) == 4
+    assert inv.failed and inv.failure_kind == FAIL_TIMEOUT
+    assert node.tracker.committed == 0
+    # consecutive resubmit gaps grow by exactly the backoff schedule:
+    # backoff(0)=4ms, backoff(1)=8ms, backoff(2)=8ms (capped)
+    g = [t1 - t0 for t0, t1 in zip(times, times[1:])]
+    assert g[1] - g[0] == pytest.approx(8e-3 - 4e-3)
+    assert g[2] - g[1] == pytest.approx(0.0, abs=1e-12)
+    # and the whole schedule is reproducible
+    times2, inv2, _ = _run_always_timeout(policy)
+    assert times2 == times
+    assert inv2.failed == inv.failed
+
+
+def test_timeout_fatal_under_default_policy():
+    # the byte-identity contract: without opting in, a timeout still
+    # fails the invocation on the first attempt with the same reason
+    times, inv, node = _run_always_timeout(None)
+    assert len(times) == 1
+    assert inv.failed == "work: timeout (preempted)"
+    assert inv.failure_kind == FAIL_TIMEOUT
+    assert node.dispatcher.failed_count == 1
+
+
+def test_timeout_retry_rescues_jittered_exec():
+    # heavy-tailed exec: most attempts overrun sometimes, retries with
+    # fresh samples rescue the invocation (seeded => deterministic)
+    reg = _registry()
+    profiles = {"work": ColdStartProfile(1e-5, 1e-3, 2.0)}
+    policy = RetryPolicy(max_retries=6, retry_timeouts=True)
+    node = WorkerNode(reg, num_slots=8, profiles=profiles, seed=7)
+    done = []
+    for _ in range(20):
+        node.invoke(_single(timeout_s=2e-3, retry=policy), {"x": [Item(0)]},
+                    on_done=done.append)
+    node.run()
+    assert len(done) == 20
+    assert all(not inv.failed for inv in done)
+    assert node.tracker.committed == 0
+
+    # same workload, same seed, no retries: some invocations must fail
+    # (otherwise this test exercises nothing)
+    node2 = WorkerNode(reg, num_slots=8, profiles=profiles, seed=7)
+    done2 = []
+    for _ in range(20):
+        node2.invoke(_single(timeout_s=2e-3), {"x": [Item(0)]},
+                     on_done=done2.append)
+    node2.run()
+    assert any(inv.failed for inv in done2)
+
+
+def test_hedge_carries_attempts_and_dedupes(recorded_contexts):
+    # always-timeout vertex, hedging on, one retry allowed. The hedge
+    # rides attempt 0; when the original's failure arms the retry
+    # (attempt 1), the hedge's later failure is a stale sibling and must
+    # NOT arm another retry: exactly 3 submissions total.
+    node = WorkerNode(_registry(), num_slots=4, profiles=TIMEOUT_PROFILE,
+                      hedge_after_s=1e-3)
+    node.dispatcher.hedge_min_instances = 1
+    times = _count_submits(node)
+    policy = RetryPolicy(max_retries=1, retry_timeouts=True)
+    done = []
+    node.invoke(_single(timeout_s=2e-3, retry=policy), {"x": [Item(0)]},
+                on_done=done.append)
+    node.run()
+    assert done and done[0].failed and done[0].failure_kind == FAIL_TIMEOUT
+    assert len(times) == 3, (
+        f"expected original + hedge + one retry, saw {len(times)} submits "
+        f"(a stale hedge sibling re-armed the retry budget?)"
+    )
+    assert node.tracker.committed == 0
+    for ctx in recorded_contexts:
+        assert ctx.freed and ctx.effective_frees == 1
+
+
+# ===========================================================================
+# 3. COMM idempotency probe
+# ===========================================================================
+def _http_comp():
+    c = Composition("call_out")
+    h = c.http("call")
+    c.bind_input("request", h["requests"])
+    c.bind_output("resp", h["responses"])
+    return c
+
+
+def test_empty_payload_idempotency_probe_regression():
+    # empty/whitespace payloads fail sanitization; probing them for an
+    # HTTP method used to crash with IndexError — they carry no method,
+    # so they are idempotent: retried, then failed cleanly
+    node = WorkerNode(FunctionRegistry(), ServiceRegistry(), num_slots=2,
+                      max_retries=2)
+    done = []
+    node.invoke(_http_comp(),
+                {"request": [Item(""), Item("   ")]}, on_done=done.append)
+    node.run()
+    assert done and done[0].failed and "sanitization" in done[0].failed
+    assert node.dispatcher.failed_count == 1
+    assert node.tracker.committed == 0
+
+
+def test_non_idempotent_method_blocks_retry():
+    node = WorkerNode(FunctionRegistry(), ServiceRegistry(), num_slots=2,
+                      max_retries=2)
+    times = _count_submits(node)
+    done = []
+    # whitespace payload (idempotent, skipped) + a POST to a bad host:
+    # the POST makes the instance non-idempotent -> no retry, one submit
+    node.invoke(
+        _http_comp(),
+        {"request": [Item("   "),
+                     Item(HttpRequest("POST", "http://bad_host!/x"))]},
+        on_done=done.append,
+    )
+    node.run()
+    assert done and done[0].failed
+    assert "not idempotent; not retried" in done[0].failed
+    assert len(times) == 1
+    assert node.tracker.committed == 0
+
+
+def test_idempotent_get_still_retried():
+    node = WorkerNode(FunctionRegistry(), ServiceRegistry(), num_slots=2,
+                      max_retries=2)
+    times = _count_submits(node)
+    done = []
+    node.invoke(_http_comp(),
+                {"request": [Item(HttpRequest("GET", "http://bad_host!/x"))]},
+                on_done=done.append)
+    node.run()
+    assert done and done[0].failed and "sanitization" in done[0].failed
+    assert len(times) == 3          # original + max_retries resubmits
+    assert node.tracker.committed == 0
+
+
+# ===========================================================================
+# 4. Cluster restart policy
+# ===========================================================================
+SLOW = {"work": ColdStartProfile(1e-4, 50e-3, 0.0)}
+
+
+def _cluster(n=2, restart_attempts=3, crossnode=False):
+    loop = EventLoop()
+    nodes = [WorkerNode(_registry(), loop=loop, num_slots=4, profiles=SLOW,
+                        seed=i, name=f"n{i}") for i in range(n)]
+    return ClusterManager(nodes, loop, restart_attempts=restart_attempts,
+                          crossnode=crossnode), loop
+
+
+def test_vertex_named_node_failure_does_not_restart():
+    # regression: restart used to key on a reason-substring match, so a
+    # user vertex NAMED "node_failure" that timed out triggered bogus
+    # re-executions; the structured failure kind must not
+    cluster, loop = _cluster(restart_attempts=3)
+    c = Composition("trap")
+    v = c.compute("node_failure", "work", inputs=("x",), outputs=("out",),
+                  timeout_s=1e-3)
+    c.bind_input("x", v["x"])
+    c.bind_output("out", v["out"])
+    done = []
+    cluster.invoke(c, {"x": [Item(0)]}, on_done=done.append)
+    loop.run()
+    assert done and done[0].failed == "node_failure: timeout (preempted)"
+    assert done[0].failure_kind == FAIL_TIMEOUT
+    assert cluster.restarts == 0
+    assert cluster.failed == 1
+
+
+def test_node_death_restarts_within_budget():
+    cluster, loop = _cluster(restart_attempts=3)
+    done = []
+    cluster.invoke(_single(), {"x": [Item(0)]}, on_done=done.append)
+    cluster.fail_node_at(10e-3, 0)      # mid-exec (50ms service time)
+    loop.run()
+    assert done and not done[0].failed
+    assert cluster.restarts == 1
+    assert cluster.failed == 0
+
+
+def test_restart_attempts_zero_fails_fast():
+    cluster, loop = _cluster(restart_attempts=0)
+    done = []
+    cluster.invoke(_single(), {"x": [Item(0)]}, on_done=done.append)
+    cluster.fail_node_at(10e-3, 0)
+    loop.run()
+    assert done and done[0].failed
+    assert done[0].failure_kind == FAIL_NODE
+    assert cluster.restarts == 0
+    assert cluster.failed == 1
+
+
+def test_restart_attempts_validation():
+    loop = EventLoop()
+    nodes = [WorkerNode(_registry(), loop=loop)]
+    with pytest.raises(ValueError):
+        ClusterManager(nodes, loop, restart_attempts=-1)
+
+
+# ===========================================================================
+# 5. Cancellation
+# ===========================================================================
+def _slow_platform(pool=None):
+    platform = sdk.Platform(
+        pool=pool,
+        node=None if pool else sdk.NodeSpec(num_slots=4),
+    )
+    spec = sdk.declare(
+        "work", lambda ins: {"out": [Item(1)]},
+        inputs=("x",), outputs=("out",),
+        profile=ColdStartProfile(1e-4, 50e-3, 0.0),
+    )
+    comp = platform.deploy(sdk.single_function_app(spec))
+    return platform, comp
+
+
+def test_cancel_mid_flight_releases_everything(recorded_contexts):
+    ws = WeightStore(keepalive_s=0.01)
+    ws.register("m", 16 << 20, ("work",))
+    platform = sdk.Platform(node=sdk.NodeSpec(num_slots=4, weight_store=ws))
+    spec = sdk.declare(
+        "work", lambda ins: {"out": [Item(1)]},
+        inputs=("x",), outputs=("out",),
+        profile=ColdStartProfile(1e-4, 50e-3, 0.0),
+    )
+    comp = platform.deploy(sdk.single_function_app(spec))
+    h = platform.invoke(comp, {"x": [Item(0)]})
+    platform.loop.at(10e-3, h.cancel)   # mid-exec
+    platform.run()
+    assert h.cancelled
+    assert h.invocation is not None
+    assert h.invocation.failure_kind == FAIL_CANCELLED
+    node = platform.node
+    assert node.dispatcher.active == {}
+    assert ws.inflight == 0
+    # committed returns to the resident weights (reaped after keepalive
+    # only if further events fire; the refcount balance is the invariant)
+    assert node.tracker.committed - ws.resident_bytes == 0
+    for ctx in recorded_contexts:
+        assert ctx.freed and ctx.effective_frees == 1
+
+
+def test_cancel_before_scheduled_fire():
+    platform, comp = _slow_platform()
+    h = platform.invoke(comp, {"x": [Item(0)]}, at=5e-3)
+    platform.loop.at(1e-3, h.cancel)
+    platform.run()
+    assert h.cancelled
+    assert h.invocation is None         # never dispatched
+    d = platform.node.dispatcher
+    assert d.completed_count + d.failed_count == 0
+
+
+def test_cancel_after_completion_returns_false():
+    platform, comp = _slow_platform()
+    h = platform.invoke(comp, {"x": [Item(0)]})
+    platform.run()
+    assert h.done
+    assert h.cancel() is False
+    assert not h.cancelled
+
+
+def test_cancel_on_cluster_counts_cancelled_not_failed():
+    platform, comp = _slow_platform(
+        pool=[sdk.NodeSpec(num_slots=4, seed=i) for i in range(2)])
+    h1 = platform.invoke(comp, {"x": [Item(0)]})
+    h2 = platform.invoke(comp, {"x": [Item(0)]})
+    platform.loop.at(10e-3, h1.cancel)
+    platform.run()
+    assert h1.cancelled and not h2.cancelled
+    assert h2.done
+    cluster = platform.cluster
+    assert cluster.cancelled == 1
+    assert cluster.failed == 0
+    assert cluster.restarts == 0
+    for node in cluster.nodes:
+        assert node.tracker.committed == 0
+
+
+def test_cancelled_queued_work_is_flushed(recorded_contexts):
+    # more invocations than slots: cancellation must also flush vertices
+    # still queued behind the busy engines
+    platform, comp = _slow_platform()
+    handles = [platform.invoke(comp, {"x": [Item(0)]}) for _ in range(12)]
+    platform.loop.at(5e-3, lambda: [h.cancel() for h in handles[4:]])
+    platform.run()
+    assert all(h.done for h in handles[:4])
+    assert all(h.cancelled for h in handles[4:])
+    node = platform.node
+    assert node.dispatcher.active == {}
+    assert node.tracker.committed == 0
+    for ctx in recorded_contexts:
+        assert ctx.freed and ctx.effective_frees == 1
+
+
+# ===========================================================================
+# 6. Chaos property: churn + cancellation keeps the refcount invariants
+# ===========================================================================
+def _chaos_round(crossnode, seed):
+    rng = np.random.default_rng(seed)
+    loop = EventLoop()
+    reg = _registry()
+    profiles = {"work": ColdStartProfile(1e-4, 5e-3, 1.0)}
+
+    def node(i, name):
+        ws = WeightStore(keepalive_s=0.01)
+        ws.register("m", 8 << 20, ("work",))
+        return WorkerNode(reg, loop=loop, num_slots=4, profiles=profiles,
+                          weight_store=ws, seed=i, name=name)
+
+    nodes = [node(i, f"n{i}") for i in range(3)]
+    cluster = ClusterManager(nodes, loop, restart_attempts=5,
+                             crossnode=crossnode)
+    policy = RetryPolicy(max_retries=3, base_backoff_s=1e-3,
+                         retry_timeouts=True)
+    comp = _single(timeout_s=12e-3, retry=policy)
+
+    resolved = []
+    invs = []
+    n_req = 30
+    for i in range(n_req):
+        t = float(rng.uniform(0.0, 0.2))
+        loop.at(t, lambda: invs.append(
+            cluster.invoke(comp, {"x": [Item(0)]}, on_done=resolved.append)))
+
+    # one mid-run node kill (placer notified: required under crossnode)
+    def kill():
+        alive = [n for n in cluster.nodes if n.alive]
+        if len(alive) <= 1:
+            return
+        victim = alive[int(rng.integers(0, len(alive)))]
+        victim.fail()
+        if cluster.placer is not None:
+            cluster.placer.on_node_failure(victim)
+
+    loop.at(float(rng.uniform(0.05, 0.15)), kill)
+
+    # random cancellations of whatever run is live at that moment
+    def cancel_some():
+        for inv in invs:
+            if not inv.done and not inv.failed and rng.random() < 0.3:
+                inv.dispatcher.cancel(inv)
+
+    loop.at(float(rng.uniform(0.02, 0.18)), cancel_some)
+
+    loop.run()
+
+    # every admitted run resolved exactly once, nothing leaked anywhere
+    assert len(resolved) == n_req
+    for n in cluster.nodes:
+        assert n.dispatcher.active == {}
+        assert n.weight_store.inflight == 0
+        assert n.tracker.committed - n.weight_store.resident_bytes == 0
+        assert min(v for _, v in n.tracker.timeline.points) >= 0.0
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=5, deadline=None)
+def test_chaos_invariants_local_placement(seed):
+    _chaos_round(False, seed)
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=5, deadline=None)
+def test_chaos_invariants_crossnode_placement(seed):
+    _chaos_round(True, seed)
+
+
+# ===========================================================================
+# SDK surface
+# ===========================================================================
+def test_sdk_retry_sugar_builds_policy():
+    @sdk.function(inputs=("x",), outputs=("out",),
+                  retries=3, backoff_s=0.05, retry_timeouts=True)
+    def fn(ins):
+        return {"out": []}
+
+    assert fn.retry == RetryPolicy(max_retries=3, base_backoff_s=0.05,
+                                   retry_timeouts=True)
+    spec = sdk.declare("g", lambda ins: {"out": []},
+                       inputs=("x",), outputs=("out",), retries=1)
+    assert spec.retry.max_retries == 1
+
+
+def test_sdk_retry_sugar_conflict_rejected():
+    with pytest.raises(DeclarationError):
+        sdk.declare("g", lambda ins: {"out": []},
+                    inputs=("x",), outputs=("out",),
+                    retry=RetryPolicy(), retries=2)
+    with pytest.raises(DeclarationError):
+        sdk.declare("g", lambda ins: {"out": []},
+                    inputs=("x",), outputs=("out",), retries=-2)
+
+
+def test_sdk_nodespec_retry_threads_to_dispatcher():
+    policy = RetryPolicy(max_retries=1, base_backoff_s=0.01)
+    platform = sdk.Platform(node=sdk.NodeSpec(retry=policy))
+    assert platform.node.dispatcher.default_retry == policy
+
+
+def test_sdk_platform_restart_attempts_threads_to_cluster():
+    platform = sdk.Platform(pool=[sdk.NodeSpec(), sdk.NodeSpec()],
+                            restart_attempts=7)
+    assert platform.cluster.restart_attempts == 7
