@@ -46,6 +46,7 @@ from repro.core import (
     Item,
     WeightStore,
 )
+from repro.core.dag import COMPUTE, Edge, PortRef, Vertex
 from repro.launch.hlo_analysis import (
     WeightColdStart,
     serving_step_terms,
@@ -94,8 +95,12 @@ class KVCache:
     pure decode function needs — but reports the *modeled* cache size
     through ``nbytes``, which is the only thing the platform reads:
     ``MemoryContext.write_set`` commits it, ``cluster.CrossNodePlacer``
-    charges it per migrated edge. Deliberately not fingerprintable, so
-    the payload memo skips it (decode bodies are trivial arithmetic)."""
+    charges it per migrated edge. ``fingerprint()`` exposes the handle's
+    full identity to the payload memo (``items.fingerprint_sets``), so a
+    decode chain over a repeated prompt digest replays as memo hits —
+    priced ``BatchStepModel`` steps with fingerprint-stable payloads,
+    never re-running the token arithmetic (pinned by
+    tests/test_inference_service.py)."""
 
     model: str
     digest: str
@@ -105,6 +110,15 @@ class KVCache:
     @property
     def nbytes(self) -> int:
         return self.seq_len * self.bytes_per_token
+
+    def fingerprint(self) -> bytes:
+        """Content identity for the payload memo: decode is a pure
+        function of exactly these four fields (token values derive from
+        ``digest`` + position), so equal fingerprints imply equal
+        outputs."""
+        return (
+            f"{self.model}:{self.digest}:{self.seq_len}:{self.bytes_per_token}"
+        ).encode()
 
 
 def _next_token(digest: str, position: int, vocab: int) -> int:
@@ -327,12 +341,59 @@ def build_request_composition(
     prompt_len: int,
     n_decode: int,
 ) -> Composition:
-    """The request DAG as a validated IR ``Composition`` (see
-    ``request_app``). The functions must already be registered
-    (``register_inference_service``)."""
-    return request_app(
-        spec, prompt_len=prompt_len, n_decode=n_decode,
-    ).compile()
+    """The request DAG as an IR ``Composition`` (see ``request_app``).
+    The functions must already be registered
+    (``register_inference_service``).
+
+    Builds the IR directly — no SDK builder objects — because serving
+    traces construct thousands of distinct ``(prompt_len, n_decode)``
+    shapes per run and the declarative front door dominated the
+    simulator's admission cost. Field-for-field structurally identical
+    to ``request_app(...).compile()``: same vertex declaration order,
+    same edge append order, same bindings (pinned by
+    tests/test_inference_service.py)."""
+    kv_bpt = spec.kv_bytes_per_token
+    name = spec.name
+    comp = Composition(f"{name}_p{prompt_len}_d{n_decode}")
+    vertices = comp.vertices
+    vertices["tokenize"] = Vertex(
+        "tokenize", COMPUTE, f"{name}_tokenize", ("prompt",), ("tokens",),
+        context_bytes=1 << 20,
+    )
+    vertices["prefill"] = Vertex(
+        "prefill", COMPUTE, f"{name}_prefill", ("tokens",), ("kv", "tok"),
+        context_bytes=prompt_len * kv_bpt + (4 << 20),
+    )
+    vertices["detokenize"] = Vertex(
+        "detokenize", COMPUTE, f"{name}_detok", ("toks",), ("text",),
+        context_bytes=1 << 20,
+    )
+    edges = comp.edges
+    in_adj, out_adj = comp._in_adj, comp._out_adj
+
+    def _edge(sv: str, ss: str, dv: str, ds: str) -> None:
+        e = Edge(PortRef(sv, ss), PortRef(dv, ds))
+        edges.append(e)
+        out_adj.setdefault(sv, []).append(e)
+        in_adj.setdefault(dv, []).append(e)
+
+    _edge("tokenize", "tokens", "prefill", "tokens")
+    _edge("prefill", "tok", "detokenize", "toks")
+    prev = "prefill"
+    for i in range(n_decode):
+        vn = f"decode{i}"
+        vertices[vn] = Vertex(
+            vn, COMPUTE, f"{name}_decode", ("kv", "tok"), ("kv", "tok"),
+            context_bytes=2 * (prompt_len + i + 1) * kv_bpt + (1 << 20),
+        )
+        _edge(prev, "kv", vn, "kv")
+        _edge(prev, "tok", vn, "tok")
+        _edge(vn, "tok", "detokenize", "toks")
+        prev = vn
+    comp._adj_edges_n = len(edges)
+    comp.input_bindings["prompt"] = PortRef("tokenize", "prompt")
+    comp.output_bindings["text"] = PortRef("detokenize", "text")
+    return comp
 
 
 def expected_tokens(prompt: bytes, spec: LMSpec, n_decode: int) -> List[int]:

@@ -36,7 +36,7 @@ from repro.core.http import (
 from repro.core.items import Item, ItemSet, SetDict, fingerprint_sets, make_set
 from repro.core.node import WorkerNode
 from repro.core.registry import FunctionRegistry, PayloadMemo
-from repro.core.sim import EventLoop, Timeline, merged_peak
+from repro.core.sim import EventLoop, ShardedEventLoop, Timeline, merged_peak
 from repro.core.tracing import (
     LatencyStats,
     LinkCounters,
@@ -62,6 +62,7 @@ __all__ = [
     "Edge",
     "EngineSet",
     "EventLoop",
+    "ShardedEventLoop",
     "FunctionRegistry",
     "HttpRequest",
     "HttpResponse",

@@ -124,14 +124,14 @@ def cold_start(
 
     if modeled:
         ctx = MemoryContext(capacity=cf.context_bytes, tracker=tracker)
-        ctx.load_code_size(registry.code_size(name))
-        for set_name, items in inputs.items():
-            ctx.write_set(set_name, items)
+        # code + input-set pages commit as one collapsed tracker record
+        # (accounting-identical; see MemoryContext.bulk_load)
+        ctx.bulk_load(len(cf.code), inputs)
+        memo = registry.memo
 
         def run_modeled() -> SetDict:
-            out = registry.run_payload(name, ctx.inputs)
-            for sname, items in out.items():
-                ctx.write_set(sname, items, into="outputs")
+            out = memo.run(cf, ctx.inputs) if memo is not None else cf.fn(ctx.inputs)
+            ctx.write_sets_bulk(out, into="outputs")
             return out
 
         return ctx, bd, run_modeled

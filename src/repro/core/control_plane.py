@@ -177,7 +177,11 @@ class ElasticControlPlane:
     def _boot_node(self, instant: bool = False):
         name = f"en{next(self._ids)}"
         node = self.factory(name)
-        if node.loop is not self.loop:
+        # a node may schedule on its own shard of the shared loop
+        # (ShardedEventLoop), but never on an unrelated loop: clocks
+        # would silently diverge
+        if node.loop is not self.loop and \
+                getattr(node.loop, "_owner", None) is not self.loop:
             raise ValueError(f"{name}: factory must build nodes on the shared loop")
         node.tracker.attach_parent(self.cluster_mem)
         if self.placer is not None:

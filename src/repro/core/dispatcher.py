@@ -57,7 +57,7 @@ FAIL_NODE = "node_failure"
 FAIL_CANCELLED = "cancelled"
 
 
-@dataclass
+@dataclass(slots=True)
 class InstanceState:
     idx: int
     inputs: SetDict
@@ -70,9 +70,81 @@ class InstanceState:
     attempts: int = 0
 
 
-@dataclass
+@dataclass(frozen=True)
+class VertexTemplate:
+    """Invocation-invariant orchestration structure of one vertex,
+    precomputed once per composition (``composition_template``) instead of
+    being re-derived from edge scans on every invocation — serving-scale
+    traces invoke the same composition thousands of times, and the
+    per-invoke edge scans dominated the dispatcher's hot path."""
+
+    vertex: Vertex
+    in_sets: tuple                    # v.inputs (delivered-dict shape)
+    pending_feeds: tuple              # ((set_name, feed_count), ...)
+    consumers: int                    # distinct downstream consumer vertices
+    fan_edge: Optional[Edge]          # the at-most-one each/key in-edge
+    consumed_srcs: tuple              # unique upstream vertex names, in
+                                      # first-occurrence in_edges order
+    out_feeds: tuple                  # (dst_vertex, dst_set, src_set) per
+                                      # out-edge, in edge order
+    out_bindings: tuple               # (output_name, src_set) bound here
+
+
+def composition_template(comp: Composition) -> Dict[str, VertexTemplate]:
+    """Per-vertex orchestration templates for ``comp``, cached on the
+    composition object and invalidated when its structure grows (vertex /
+    edge / binding counts change)."""
+    key = (
+        len(comp.vertices), len(comp.edges),
+        len(comp.input_bindings), len(comp.output_bindings),
+    )
+    cached = comp.__dict__.get("_dispatch_tmpl")
+    if cached is not None and cached[0] == key:
+        return cached[1]
+    tmpl: Dict[str, VertexTemplate] = {}
+    for name, v in comp.vertices.items():
+        in_edges = comp.in_edges(name)
+        pending = []
+        for s in v.inputs:
+            feeds = sum(1 for e in in_edges if e.dst.set_name == s)
+            feeds += sum(
+                1 for p in comp.input_bindings.values()
+                if p.vertex == name and p.set_name == s
+            )
+            pending.append((s, feeds))
+        fan = None
+        consumed: List[str] = []
+        for e in in_edges:
+            if fan is None and e.mode in ("each", "key"):
+                fan = e
+            if e.src.vertex not in consumed:
+                consumed.append(e.src.vertex)
+        out_edges = comp.out_edges(name)
+        tmpl[name] = VertexTemplate(
+            vertex=v,
+            in_sets=tuple(v.inputs),
+            pending_feeds=tuple(pending),
+            consumers=len({e.dst.vertex for e in out_edges}),
+            fan_edge=fan,
+            consumed_srcs=tuple(consumed),
+            out_feeds=tuple(
+                (e.dst.vertex, e.dst.set_name, e.src.set_name)
+                for e in out_edges
+            ),
+            out_bindings=tuple(
+                (out_name, p.set_name)
+                for out_name, p in comp.output_bindings.items()
+                if p.vertex == name
+            ),
+        )
+    comp.__dict__["_dispatch_tmpl"] = (key, tmpl)
+    return tmpl
+
+
+@dataclass(slots=True)
 class VertexRun:
     vertex: Vertex
+    tmpl: Optional[VertexTemplate] = None
     delivered: Dict[str, ItemSet] = field(default_factory=dict)
     pending_feeds: Dict[str, int] = field(default_factory=dict)
     launched: bool = False
@@ -99,7 +171,7 @@ class VertexRun:
     sub_inv: Any = None
 
 
-@dataclass
+@dataclass(slots=True)
 class InvocationRun:
     inv_id: int
     comp: Composition
@@ -197,6 +269,7 @@ class Dispatcher:
         inputs: SetDict,
         on_done: Optional[Callable[[InvocationRun], None]] = None,
     ) -> InvocationRun:
+        tmpl = composition_template(comp)
         inv = InvocationRun(
             inv_id=next(self._ids), comp=comp, on_done=on_done,
             t_start=self.loop.now, inputs=inputs,
@@ -204,18 +277,15 @@ class Dispatcher:
             dispatcher=self,
         )
         self.active[inv.inv_id] = inv
-        for name, v in comp.vertices.items():
-            vr = VertexRun(vertex=v)
-            for s in v.inputs:
-                feeds = sum(1 for e in comp.in_edges(name) if e.dst.set_name == s)
-                feeds += sum(
-                    1 for p in comp.input_bindings.values()
-                    if p.vertex == name and p.set_name == s
-                )
-                vr.pending_feeds[s] = feeds
-                vr.delivered[s] = []
-            vr.consumers_left = len({e.dst.vertex for e in comp.out_edges(name)})
-            inv.vertex_runs[name] = vr
+        vruns = inv.vertex_runs
+        for name, vt in tmpl.items():
+            vruns[name] = VertexRun(
+                vertex=vt.vertex,
+                tmpl=vt,
+                delivered={s: [] for s in vt.in_sets},
+                pending_feeds=dict(vt.pending_feeds),
+                consumers_left=vt.consumers,
+            )
         # deliver composition-level inputs
         for in_name, port in comp.input_bindings.items():
             self._feed(inv, port.vertex, port.set_name, inputs.get(in_name, []))
@@ -225,13 +295,20 @@ class Dispatcher:
     def _feed(self, inv: InvocationRun, vertex: str, set_name: str, items: ItemSet):
         vr = inv.vertex_runs[vertex]
         vr.delivered[set_name].extend(items)
-        vr.pending_feeds[set_name] -= 1
-        if not vr.launched and all(c <= 0 for c in vr.pending_feeds.values()):
-            vr.launched = True
-            self._launch(inv, vr)
+        pf = vr.pending_feeds
+        pf[set_name] -= 1
+        if vr.launched:
+            return
+        for c in pf.values():
+            if c > 0:
+                return
+        vr.launched = True
+        self._launch(inv, vr)
 
     # ------------------------------------------------------------------
     def _fan_edge(self, inv: InvocationRun, vr: VertexRun) -> Optional[Edge]:
+        if vr.tmpl is not None:
+            return vr.tmpl.fan_edge
         for e in inv.comp.in_edges(vr.vertex.name):
             if e.mode in ("each", "key"):
                 return e
@@ -261,17 +338,15 @@ class Dispatcher:
 
     def _launch(self, inv: InvocationRun, vr: VertexRun):
         # upstream contexts can be released once this consumer has copied
-        # its inputs (captured in the instance input dicts below)
-        for e in inv.comp.in_edges(vr.vertex.name):
-            up = inv.vertex_runs[e.src.vertex]
-            # only decrement once per (src, dst) pair
-            key = (e.src.vertex, vr.vertex.name)
-            seen = vr.__dict__.setdefault("_consumed_from", set())
-            if key not in seen:
-                seen.add(key)
-                up.consumers_left -= 1
-                if up.consumers_left == 0 and up.n_done == len(up.instances) and up.instances:
-                    self._free_vertex_contexts(up)
+        # its inputs (captured in the instance input dicts below); the
+        # template's consumed_srcs is already deduped to one entry per
+        # (src, this) vertex pair, so each upstream is decremented once
+        vruns = inv.vertex_runs
+        for src in vr.tmpl.consumed_srcs:
+            up = vruns[src]
+            up.consumers_left -= 1
+            if up.consumers_left == 0 and up.n_done == len(up.instances) and up.instances:
+                self._free_vertex_contexts(up)
 
         if self.placer is not None and self.placer.place(self, inv, vr):
             # inbound cross-node transfers in flight (remote placement, or
@@ -294,7 +369,13 @@ class Dispatcher:
             self._launch_instances(inv, vr)
 
     def _launch_instances(self, inv: InvocationRun, vr: VertexRun):
-        vr.instances = self._make_instances(inv, vr)
+        tmpl = vr.tmpl
+        if tmpl is not None and tmpl.fan_edge is None:
+            # no fan-out edge: exactly one instance over the delivered
+            # sets (what _make_instances returns, without the dispatch)
+            vr.instances = [InstanceState(0, dict(vr.delivered))]
+        else:
+            vr.instances = self._make_instances(inv, vr)
         if not vr.instances:
             self._vertex_done(inv, vr)
             return
@@ -336,12 +417,12 @@ class Dispatcher:
         # engine when it models one; platforms without batch slots run
         # them as ordinary compute tasks (identical dataflow, unshared
         # step durations — the batching-off baseline)
-        if (
-            kind == COMPUTE
-            and engines.batch_slots
-            and self.registry.get(v.function).batchable
-        ):
-            kind = BATCH
+        if kind == COMPUTE and engines.batch_slots:
+            cf = self.registry.functions.get(v.function)
+            if cf is None:
+                cf = self.registry.get(v.function)  # contractual KeyError
+            if cf.batchable:
+                kind = BATCH
         # remotely placed vertices run on the target node's engines and
         # warm the target node's code cache (locality is per node)
         code_cache = (
@@ -511,11 +592,20 @@ class Dispatcher:
     # ------------------------------------------------------------------
     def _vertex_done(self, inv: InvocationRun, vr: VertexRun, merged: bool = False):
         if not merged:
-            vr.outputs = {}
-            for s in vr.vertex.outputs:
-                vr.outputs[s] = []
-                for inst in vr.instances:
-                    vr.outputs[s].extend(inst.outputs.get(s, []))
+            insts = vr.instances
+            if len(insts) == 1:
+                # single-instance fast path (every non-fanned vertex):
+                # instance output lists are per-invocation already —
+                # fresh from the function body or shallow-copied by the
+                # payload memo — so they can be taken without re-copying
+                io = insts[0].outputs
+                vr.outputs = {s: io.get(s) or [] for s in vr.vertex.outputs}
+            else:
+                vr.outputs = {}
+                for s in vr.vertex.outputs:
+                    vr.outputs[s] = []
+                    for inst in insts:
+                        vr.outputs[s].extend(inst.outputs.get(s, []))
         vr.done_t = self.loop.now
         if vr.placed_release is not None:
             vr.placed_release()
@@ -525,12 +615,11 @@ class Dispatcher:
                 c.free()
             vr.staged = []
 
-        comp = inv.comp
-        for e in comp.out_edges(vr.vertex.name):
-            self._feed(inv, e.dst.vertex, e.dst.set_name, vr.outputs[e.src.set_name])
-        for out_name, port in comp.output_bindings.items():
-            if port.vertex == vr.vertex.name:
-                inv.outputs[out_name] = vr.outputs[port.set_name]
+        tmpl = vr.tmpl
+        for dst_vertex, dst_set, src_set in tmpl.out_feeds:
+            self._feed(inv, dst_vertex, dst_set, vr.outputs[src_set])
+        for out_name, src_set in tmpl.out_bindings:
+            inv.outputs[out_name] = vr.outputs[src_set]
         if vr.consumers_left <= 0:
             self._free_vertex_contexts(vr)
 

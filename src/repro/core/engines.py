@@ -69,7 +69,7 @@ TRANSFER = "transfer"   # modeled inter-node byte movement (comm slots)
 BATCH = "batch"         # coalesced serving steps (model-replica slots)
 
 
-@dataclass
+@dataclass(slots=True)
 class Task:
     kind: str                       # compute | comm | transfer
     fn_name: str                    # registry name (compute) / "http" (comm)
@@ -132,8 +132,24 @@ class EngineSlot:
             ctx = task.warm_context
             setup_s = 0.0
             outputs, exec_s = node.execute_payload(task, ctx)
+        elif task.profile is not None:
+            # modeled fast path, inlined from cold_start(modeled=True):
+            # same context binding, same collapsed bulk commits, same
+            # memoized payload execution, same record/draw order — minus
+            # the breakdown object and runner closure per task
+            reg = node.registry
+            cf = reg.functions.get(task.fn_name) or reg.get(task.fn_name)
+            ctx = MemoryContext(capacity=cf.context_bytes, tracker=node.tracker)
+            ctx.bulk_load(len(cf.code), task.inputs)
+            setup_s, exec_s = task.profile.sample(node.rng)
+            if task.cold_setup:
+                # non-resident state (model weights / code): the
+                # deterministic cold term on top of the jittered base
+                setup_s += task.profile.cold_setup_s
+            memo = reg.memo
+            outputs = memo.run(cf, ctx.inputs) if memo is not None else cf.fn(ctx.inputs)
+            ctx.write_sets_bulk(outputs, into="outputs")
         else:
-            modeled = task.profile is not None
             ctx, bd, run = cold_start(
                 node.registry,
                 task.fn_name,
@@ -141,20 +157,11 @@ class EngineSlot:
                 backend=node.backend,
                 cached=task.cached,
                 tracker=node.tracker,
-                modeled=modeled,
             )
-            if modeled:
-                setup_s, exec_s = task.profile.sample(node.rng)
-                if task.cold_setup:
-                    # non-resident state (model weights / code): the
-                    # deterministic cold term on top of the jittered base
-                    setup_s += task.profile.cold_setup_s
-                outputs = run()  # real (memoized) outputs, modeled duration
-            else:
-                t0 = time.perf_counter()
-                outputs = run()
-                exec_s = time.perf_counter() - t0
-                setup_s = bd.total
+            t0 = time.perf_counter()
+            outputs = run()
+            exec_s = time.perf_counter() - t0
+            setup_s = bd.total
 
         total = setup_s + exec_s
         timed_out = total > task.timeout_s
@@ -270,27 +277,65 @@ class EngineSlot:
         self.busy = True
         served = []
         setup_span = 0.0
+        # Vectorized jitter: when every modeled task in the step shares one
+        # jitter sigma (the common case — a batch coalesces instances of
+        # one function), ONE numpy call draws all 2n factors the scalar
+        # path would. Generator.lognormal(size=2n) is draw-for-draw
+        # identical to 2n scalar calls including the final generator state
+        # (pinned by tests/test_perf_identity.py), so the fast path cannot
+        # perturb byte-identity; mixed-sigma steps fall back to per-task
+        # sampling in the exact original order.
+        n_modeled = 0
+        sigma = None
+        uniform = True
+        for t in tasks:
+            if t.profile is not None:
+                n_modeled += 1
+                if sigma is None:
+                    sigma = t.profile.jitter_sigma
+                elif t.profile.jitter_sigma != sigma:
+                    uniform = False
+        draws = (
+            node.rng.lognormal(0.0, sigma, 2 * n_modeled)
+            if uniform and n_modeled > 1
+            else None
+        )
+        di = 0
+        reg = node.registry
+        memo = reg.memo
+        fns = reg.functions
+        tracker = node.tracker
         for task in tasks:
             node.inflight_tasks.add(id(task))
-            modeled = task.profile is not None
-            ctx, bd, run = cold_start(
-                node.registry,
-                task.fn_name,
-                task.inputs,
-                backend=node.backend,
-                cached=task.cached,
-                tracker=node.tracker,
-                modeled=modeled,
-            )
-            if modeled:
-                setup_s, _ = task.profile.sample(node.rng)
+            if task.profile is not None:
+                # modeled fast path, inlined from cold_start(modeled=True)
+                # — identical binding/commit/draw order (see _serve_compute)
+                cf = fns.get(task.fn_name) or reg.get(task.fn_name)
+                ctx = MemoryContext(capacity=cf.context_bytes, tracker=tracker)
+                ctx.bulk_load(len(cf.code), task.inputs)
+                if draws is not None:
+                    setup_s = task.profile.setup_s * float(draws[di])
+                    di += 2
+                else:
+                    setup_s, _ = task.profile.sample(node.rng)
                 if task.cold_setup:
                     setup_s += task.profile.cold_setup_s
+                outputs = memo.run(cf, ctx.inputs) if memo is not None else cf.fn(ctx.inputs)
+                ctx.write_sets_bulk(outputs, into="outputs")
             else:
+                ctx, bd, run = cold_start(
+                    node.registry,
+                    task.fn_name,
+                    task.inputs,
+                    backend=node.backend,
+                    cached=task.cached,
+                    tracker=node.tracker,
+                )
                 setup_s = bd.total
-            outputs = run()
+                outputs = run()
             served.append((task, ctx, outputs, setup_s))
-            setup_span = max(setup_span, setup_s)
+            if setup_s > setup_span:
+                setup_span = setup_s
 
         step_s = node.batch_model.step_s(len(served))
         total = setup_span + step_s

@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import hashlib
 from dataclasses import dataclass, field
+from functools import cached_property
 from typing import Any, Dict, List, Optional
 
 import numpy as np
@@ -19,7 +20,10 @@ class Item:
     data: Any
     key: str = ""
 
-    @property
+    # items are immutable, so both the size and the content digest are
+    # computed once per item and cached (frozen dataclasses still carry a
+    # __dict__, which is what cached_property writes into)
+    @cached_property
     def nbytes(self) -> int:
         d = self.data
         if isinstance(d, (bytes, bytearray)):
@@ -29,6 +33,23 @@ class Item:
         if isinstance(d, str):
             return len(d.encode())
         return 64  # opaque python object: nominal
+
+    @cached_property
+    def content_fp(self) -> Optional[bytes]:
+        """16-byte digest of (key, data), or None when the data is opaque
+        and offers no ``fingerprint()`` hook. Cached so an item flowing
+        through several consumers (or repeated invocations of the same
+        composition) is hashed exactly once."""
+        enc = _data_bytes(self.data)
+        if enc is None:
+            return None
+        h = hashlib.blake2b(digest_size=16)
+        k = self.key.encode()
+        h.update(len(k).to_bytes(8, "little"))
+        h.update(k)
+        h.update(len(enc).to_bytes(8, "little"))
+        h.update(enc)
+        return h.digest()
 
 
 ItemSet = List[Item]
@@ -78,28 +99,36 @@ def _data_bytes(d: Any) -> Optional[bytes]:
         if d.dtype.hasobject:
             return None  # tobytes() would hash PyObject pointers
         return b"a:" + str(d.dtype).encode() + repr(d.shape).encode() + d.tobytes()
+    # opaque objects may opt in to memoization by providing a
+    # ``fingerprint()`` method returning a stable str/bytes content id
+    # (e.g. apps.inference_service.KVCache) — the memoized-decode contract
+    fp = getattr(d, "fingerprint", None)
+    if callable(fp):
+        out = fp()
+        if isinstance(out, str):
+            out = out.encode()
+        if isinstance(out, (bytes, bytearray)):
+            return b"o:" + type(d).__name__.encode() + b":" + bytes(out)
     return None
 
 
 def fingerprint_sets(d: SetDict) -> Optional[str]:
     """Content digest of a SetDict: set names, item order, keys, and data.
     Returns None (caller must execute for real) if any item holds data we
-    cannot canonically encode — arbitrary python objects, device arrays.
-    Every field is length-framed before hashing so payload bytes can never
-    masquerade as field boundaries (no collisions by concatenation)."""
+    cannot canonically encode — arbitrary python objects without a
+    ``fingerprint()`` hook, device arrays. Set names are length-framed and
+    per-item digests are fixed-width, so payload bytes can never masquerade
+    as field boundaries (no collisions by concatenation)."""
     h = hashlib.blake2b(digest_size=16)
-
-    def field(tag: bytes, payload: bytes):
-        h.update(tag)
-        h.update(len(payload).to_bytes(8, "little"))
-        h.update(payload)
-
     for name in sorted(d):
-        field(b"\x00", name.encode())
+        nb = name.encode()
+        h.update(b"\x00")
+        h.update(len(nb).to_bytes(8, "little"))
+        h.update(nb)
         for it in d[name]:
-            enc = _data_bytes(it.data)
-            if enc is None:
+            fp = it.content_fp
+            if fp is None:
                 return None
-            field(b"\x01", it.key.encode())
-            field(b"\x02", enc)
+            h.update(b"\x01")
+            h.update(fp)
     return h.hexdigest()

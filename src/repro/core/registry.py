@@ -58,18 +58,40 @@ class PayloadMemo:
     on both store and hit so callers can never mutate the cached entry.
     DAG dataflow stays byte-identical with the cache on or off (pinned by
     tests/test_sim_fastpath.py).
+
+    Adaptive fingerprint bypass: hashing inputs is pure overhead for a
+    function whose inputs never repeat (e.g. unique prompts in a serving
+    trace), so after ``bypass_after`` consecutive misses with zero hits
+    ever, the memo stops fingerprinting that function and executes its
+    payload directly (counted in ``skips``). The rule is a deterministic
+    function of the invocation history, and because payloads are pure
+    and durations are modeled, skipping the cache never changes dataflow
+    values or virtual timing — only the counters. One hit disables the
+    bypass for that function permanently.
     """
 
-    def __init__(self, capacity_entries: int = 65536):
+    def __init__(self, capacity_entries: int = 65536, *,
+                 bypass_after: int = 64):
         self.capacity_entries = capacity_entries
+        self.bypass_after = bypass_after
         self._cache: "OrderedDict[Tuple[str, str], SetDict]" = OrderedDict()
+        # per-function [hits, consecutive misses] for the adaptive bypass
+        self._fn_stats: Dict[str, list] = {}
         self.hits = 0
         self.misses = 0
-        self.skips = 0   # unfingerprintable inputs or memoize=False fns
+        self.skips = 0   # unfingerprintable inputs, memoize=False fns,
+                         # or adaptive bypass
 
     def run(self, cf: ComputeFunction, inputs: SetDict) -> SetDict:
         """Execute ``cf`` over ``inputs`` through the cache."""
         if not cf.memoize:
+            self.skips += 1
+            return cf.fn(inputs)
+        st = self._fn_stats.get(cf.name)
+        if st is None:
+            st = [0, 0]
+            self._fn_stats[cf.name] = st
+        elif st[0] == 0 and st[1] >= self.bypass_after:
             self.skips += 1
             return cf.fn(inputs)
         fp = fingerprint_sets(inputs)
@@ -80,9 +102,11 @@ class PayloadMemo:
         cached = self._cache.get(key)
         if cached is not None:
             self.hits += 1
+            st[0] += 1
             self._cache.move_to_end(key)
             return {name: list(items) for name, items in cached.items()}
         self.misses += 1
+        st[1] += 1
         out = cf.fn(inputs)
         self._cache[key] = {name: list(items) for name, items in out.items()}
         while len(self._cache) > self.capacity_entries:

@@ -1,8 +1,11 @@
 """Latency / memory instrumentation shared by benchmarks and tests."""
 from __future__ import annotations
 
+import json
+import os
+import sys
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, IO, List, Optional, Tuple
 
 import numpy as np
 
@@ -51,6 +54,143 @@ class LatencyStats:
             "p99_ms": self.p99 * 1e3,
             "rel_var_pct": self.relative_variance,
         }
+
+
+class StreamingPercentile:
+    """O(1)-memory single-quantile estimator (the P² algorithm of Jain &
+    Chlamtac): five markers track the running quantile without retaining
+    samples, so trace-scale runs can publish live percentiles without the
+    O(n) sample lists ``LatencyStats`` keeps.
+
+    Deterministic: the estimate is a pure function of the sample
+    sequence. Exact while ``n <= 5``; afterwards a parabolic
+    interpolation whose error tests/test_perf_identity.py bounds against
+    ``np.percentile`` on the distributions the benchmarks draw."""
+
+    __slots__ = ("p", "n", "_q", "_pos", "_want")
+
+    def __init__(self, p: float):
+        if not 0.0 < p < 100.0:
+            raise ValueError("percentile must be in (0, 100)")
+        self.p = p
+        self.n = 0
+        self._q: List[float] = []            # marker heights
+        self._pos: List[float] = []          # marker positions (1-based)
+        self._want: List[float] = []         # desired positions
+
+    def add(self, x: float) -> None:
+        q, n = self._q, self.n
+        self.n = n + 1
+        if n < 5:
+            q.append(x)
+            q.sort()
+            if self.n == 5:
+                p = self.p / 100.0
+                self._pos = [1.0, 2.0, 3.0, 4.0, 5.0]
+                self._want = [1.0, 1 + 2 * p, 1 + 4 * p, 3 + 2 * p, 5.0]
+            return
+        pos, want = self._pos, self._want
+        # which cell the new sample lands in; extremes clamp markers
+        if x < q[0]:
+            q[0] = x
+            k = 0
+        elif x >= q[4]:
+            q[4] = x
+            k = 3
+        else:
+            k = next(i for i in range(4) if q[i] <= x < q[i + 1])
+        for i in range(k + 1, 5):
+            pos[i] += 1.0
+        p = self.p / 100.0
+        inc = (0.0, p / 2, p, (1 + p) / 2, 1.0)
+        for i in range(5):
+            want[i] += inc[i]
+        # nudge interior markers toward their desired positions
+        for i in range(1, 4):
+            d = want[i] - pos[i]
+            if (d >= 1.0 and pos[i + 1] - pos[i] > 1.0) or \
+               (d <= -1.0 and pos[i - 1] - pos[i] < -1.0):
+                d = 1.0 if d > 0 else -1.0
+                qi = self._parabolic(i, d)
+                if q[i - 1] < qi < q[i + 1]:
+                    q[i] = qi
+                else:               # parabolic fit left the bracket
+                    q[i] = q[i] + d * (q[i + int(d)] - q[i]) / (
+                        pos[i + int(d)] - pos[i]
+                    )
+                pos[i] += d
+
+    def _parabolic(self, i: int, d: float) -> float:
+        q, n = self._q, self._pos
+        return q[i] + d / (n[i + 1] - n[i - 1]) * (
+            (n[i] - n[i - 1] + d) * (q[i + 1] - q[i]) / (n[i + 1] - n[i])
+            + (n[i + 1] - n[i] - d) * (q[i] - q[i - 1]) / (n[i] - n[i - 1])
+        )
+
+    @property
+    def value(self) -> float:
+        if self.n == 0:
+            return 0.0
+        if self.n <= 5:
+            return float(np.percentile(np.asarray(self._q), self.p))
+        return self._q[2]
+
+
+class LiveTelemetry:
+    """Incremental metrics publisher in server-sent-events framing.
+
+    Benchmarks run their measurement window in chunks (``platform.run
+    (until=t_k)`` checkpoints driven from *outside* the loop — never as
+    in-loop daemon events, which would consume sequence numbers and
+    break the byte-identity contract) and publish one snapshot per
+    checkpoint:
+
+        event: <stream>
+        data: {"t": ..., "p50_ttft_ms": ..., "committed_mb": ...}
+
+    The wire format is the standard ``text/event-stream`` one, so the
+    emitted file replays through any SSE consumer (or plain ``grep
+    '^data:' | jq``). Payload keys are sorted and floats rounded to six
+    significant digits, so a telemetry stream from a deterministic run
+    is itself deterministic."""
+
+    def __init__(self, sink: IO[str], stream: str = "telemetry"):
+        self.sink = sink
+        self.stream = stream
+        self.events = 0
+
+    @classmethod
+    def from_env(cls, var: str, stream: str = "telemetry"
+                 ) -> "Optional[LiveTelemetry]":
+        """A publisher per the env knob ``var``: unset/empty -> None
+        (telemetry off, the default); ``-`` -> stderr; anything else is
+        a path to (over)write."""
+        dest = os.environ.get(var, "")
+        if not dest:
+            return None
+        if dest == "-":
+            return cls(sys.stderr, stream=stream)
+        d = os.path.dirname(dest)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        return cls(open(dest, "w"), stream=stream)
+
+    @staticmethod
+    def _round(v):
+        if isinstance(v, float):
+            return float(f"{v:.6g}")
+        return v
+
+    def emit(self, payload: Dict[str, object]) -> None:
+        body = json.dumps({k: self._round(v) for k, v in payload.items()},
+                          sort_keys=True)
+        self.sink.write(f"event: {self.stream}\ndata: {body}\n\n")
+        self.sink.flush()
+        self.events += 1
+
+    def close(self) -> None:
+        if self.sink not in (sys.stdout, sys.stderr):
+            self.sink.close()
 
 
 # ===========================================================================

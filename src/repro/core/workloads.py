@@ -44,6 +44,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, Optional
 
+import numpy as np
+
 from repro.core.context import MemoryTracker
 from repro.core.sim import EventLoop
 
@@ -77,6 +79,18 @@ class BatchStepModel:
         if batch <= 0:
             return 0.0
         return max(self.compute_s(batch), self.memory_s(batch)) + self.overhead_s
+
+    def step_s_batch(self, batches) -> np.ndarray:
+        """Vectorized ``step_s`` over an array of batch sizes: one numpy
+        pass prices N coalesced steps (decode-chain replay, calibration
+        sweeps, live telemetry) instead of N Python-level calls. Matches
+        ``step_s`` element-for-element (pinned by tests)."""
+        n = np.asarray(batches, dtype=np.float64)
+        roof = np.maximum(
+            n * self.flops_per_seq / self.peak_flops,
+            (self.fixed_bytes + n * self.bytes_per_seq) / self.hbm_bw,
+        )
+        return np.where(n > 0, roof + self.overhead_s, 0.0)
 
     def amortization(self, batch: int) -> float:
         """Throughput multiplier of batching: ``batch * step_s(1) /

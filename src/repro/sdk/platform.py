@@ -29,6 +29,7 @@ committed CSV rows byte-for-byte (gated by tools/check_bench_identity.py).
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -40,7 +41,7 @@ from repro.core.http import ServiceRegistry
 from repro.core.items import SetDict
 from repro.core.node import WorkerNode
 from repro.core.registry import FunctionRegistry
-from repro.core.sim import EventLoop
+from repro.core.sim import EventLoop, ShardedEventLoop
 from repro.sdk.builder import App
 from repro.sdk.errors import DeploymentError, InvocationFailed
 from repro.sdk.functions import FunctionSpec
@@ -91,6 +92,30 @@ def _same_payload(a, b) -> bool:
     return True
 
 
+def _default_loop() -> EventLoop:
+    """The loop a Platform builds when none is passed in.
+
+    ``DANDELION_SHARDS=1`` opts into the node-sharded loop
+    (``core.sim.ShardedEventLoop``): every node built by this platform
+    schedules on its own shard heap. The default mode is *exact* —
+    byte-identical event order to the single merged heap — unless
+    ``DANDELION_SHARD_LOOKAHEAD_S`` sets a conservative-window lookahead
+    (sound only for topologies whose cross-node ``TRANSFER`` latencies
+    are at least the lookahead; see the ShardedEventLoop docstring).
+    Unset, the plain ``EventLoop`` remains the zero-risk default."""
+    if os.environ.get("DANDELION_SHARDS") == "1":
+        la = float(os.environ.get("DANDELION_SHARD_LOOKAHEAD_S", "0.0"))
+        return ShardedEventLoop(lookahead_s=la)
+    return EventLoop()
+
+
+def _node_loop(loop, name: str):
+    """The loop view a node named ``name`` should schedule on: its shard
+    of a ``ShardedEventLoop``, or the shared loop itself otherwise."""
+    shard = getattr(loop, "shard", None)
+    return loop if shard is None else shard(name)
+
+
 @dataclass
 class NodeSpec:
     """Declarative ``WorkerNode`` shape: everything the constructor
@@ -124,10 +149,11 @@ class NodeSpec:
               name: Optional[str] = None) -> WorkerNode:
         ws = self.weight_store() if callable(self.weight_store) \
             else self.weight_store
+        name = name or self.name or "node0"
         return WorkerNode(
             platform.registry,
             platform.services,
-            loop=platform.loop,
+            loop=_node_loop(platform.loop, name),
             num_slots=self.num_slots,
             comm_slots=self.comm_slots,
             backend=self.backend,
@@ -145,7 +171,7 @@ class NodeSpec:
             max_batch=self.max_batch,
             weight_store=ws,
             seed=self.seed,
-            name=name or self.name or "node0",
+            name=name,
         )
 
 
@@ -293,7 +319,7 @@ class Platform:
         self._elastic = elastic
         self.registry = registry or FunctionRegistry(memoize=memoize)
         self.services = services or ServiceRegistry()
-        self.loop = loop or EventLoop()
+        self.loop = loop or _default_loop()
         # shared per-function dispatcher profiles: deploy() merges each
         # spec's calibrated profile in-place, so nodes built later (and
         # the elastic factory's nodes) all read the same dict

@@ -122,3 +122,23 @@ def calibrated_batch_model(
         hbm_bw=reference_bw,
         overhead_s=0.0,
     )
+
+
+def calibration_residuals(
+    timings: Sequence[StepTiming],
+    model: BatchStepModel,
+) -> List[Tuple[int, float]]:
+    """Per-batch relative error of ``model`` against measured decode
+    times: ``(batch, (predicted - measured) / measured)``. Prices every
+    batch size in one vectorized ``step_s_batch`` call — the same path
+    the batch engine uses — so a calibration report also exercises the
+    code it certifies. Large residuals mean the affine form no longer
+    fits (e.g. the real steps went compute-bound): recapture with more
+    batch sizes before trusting what-if runs."""
+    if not timings:
+        raise ValueError("no timings to score")
+    predicted = model.step_s_batch([t.batch for t in timings])
+    return [
+        (t.batch, float((p - t.decode_s) / t.decode_s))
+        for t, p in zip(timings, predicted)
+    ]

@@ -6,7 +6,7 @@ provides a seeded mini driver covering the subset this repo uses:
 
   * ``strategies.integers(lo, hi)`` / ``sampled_from(seq)`` /
     ``lists(elem, min_size=, max_size=)`` / ``booleans()`` /
-    ``floats(lo, hi)``
+    ``floats(lo, hi)`` / ``tuples(*elems)``
   * ``@given(*strategies, **strategies)`` - runs the test body
     ``max_examples`` times with values drawn from a fixed-seed RNG
     (reproducible across runs and machines by construction);
@@ -57,6 +57,12 @@ except ImportError:
                 return [elements.draw(rng) for _ in range(n)]
 
             return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*elements):
+            return _Strategy(
+                lambda rng: tuple(e.draw(rng) for e in elements)
+            )
 
         @staticmethod
         def booleans():

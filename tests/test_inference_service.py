@@ -25,6 +25,7 @@ from repro.apps.inference_service import (
     build_request_composition,
     expected_tokens,
     register_inference_service,
+    request_app,
 )
 from repro.core import (
     BatchStepModel,
@@ -302,3 +303,72 @@ def test_weight_cold_rate_prices_hlo_terms():
         wc.total_s)
     # cold start dominates a warm request end-to-end
     assert wc.total_s > 100 * svc.prefill_step_s
+
+
+# ----------------------------------------------- fast builder / memoization
+def test_fast_builder_matches_sdk_compile():
+    """``build_request_composition`` (the direct-IR fast builder fig13
+    hot-loops over) is field-for-field structurally identical to the SDK
+    reference path ``request_app(...).compile()``: same vertex
+    declaration order, same edge append order, same bindings and
+    adjacency — the contract its docstring states."""
+    reg = FunctionRegistry()
+    register_inference_service(reg, SPEC)
+    for p, d in ((32, 8), (77, 1), (128, 32), (40, 0)):
+        fast = build_request_composition(SPEC, prompt_len=p, n_decode=d)
+        ref = request_app(SPEC, prompt_len=p, n_decode=d).compile(reg)
+        assert fast.name == ref.name
+        assert list(fast.vertices) == list(ref.vertices)
+        for name in fast.vertices:
+            assert fast.vertices[name] == ref.vertices[name], name
+        assert fast.edges == ref.edges
+        assert fast.input_bindings == ref.input_bindings
+        assert fast.output_bindings == ref.output_bindings
+        for v in fast.vertices:
+            assert fast.in_edges(v) == ref.in_edges(v)
+            assert fast.out_edges(v) == ref.out_edges(v)
+        fast.validate()
+
+
+def test_kv_fingerprint_drives_decode_memo_hits():
+    """The memoized-decode contract: ``KVCache.fingerprint()`` gives
+    decode inputs a stable content identity, so replaying the same
+    requests turns every tokenize/prefill/decode/detok call into a
+    payload-memo hit — no new misses, identical token streams."""
+    reqs = _requests(n=3, seed=5)
+    _, _, loop, node, _ = _platform()
+    first = _run(node, loop, reqs, node.invoke)
+    memo = node.registry.memo
+    assert memo is not None
+    hits0, misses0 = memo.hits, memo.misses
+    assert misses0 > 0                    # first pass populated the memo
+
+    second = _run(node, loop, reqs, node.invoke)
+    assert memo.misses == misses0         # full replay: no new misses
+    assert memo.hits > hits0
+    assert {p: _tokens_of(i) for p, i in first.items()} == \
+           {p: _tokens_of(i) for p, i in second.items()}
+
+
+def test_real_exec_matches_modeled_token_streams():
+    """The FIG13_REAL_EXEC contract: dropping the calibrated profiles
+    (so engines take the real measured cold-start path and actually run
+    the registered payloads) may change durations, never dataflow —
+    token streams and output text match the modeled default exactly."""
+    reqs = _requests()
+    _, _, loop, node, _ = _platform()                    # modeled default
+    modeled = _run(node, loop, reqs, node.invoke)
+
+    reg = FunctionRegistry()
+    svc = register_inference_service(reg, SPEC)
+    loop2 = EventLoop()
+    real = WorkerNode(
+        reg, loop=loop2, num_slots=6, profiles=None,
+        batch_slots=1, batch_model=svc.batch_model, max_batch=16,
+        weight_store=svc.make_weight_store(), seed=1,
+    )
+    real_res = _run(real, loop2, reqs, real.invoke)
+    assert {p: _tokens_of(i) for p, i in modeled.items()} == \
+           {p: _tokens_of(i) for p, i in real_res.items()}
+    for t, prompt, p, d in reqs:
+        assert _tokens_of(real_res[prompt]) == expected_tokens(prompt, SPEC, d)

@@ -1,0 +1,163 @@
+"""Observational-identity proofs behind the simulator fast paths.
+
+Several hot-path rewrites claim byte-identity with the code they
+replaced, each citing this module:
+
+  * vectorized jitter draws (``engines._serve_batch``): one
+    ``Generator.lognormal(size=2n)`` call is draw-for-draw identical to
+    ``2n`` sequential scalar draws AND leaves the generator in the same
+    state;
+  * vectorized batch pricing: ``BatchStepModel.step_s_batch`` matches
+    ``step_s`` element-for-element;
+  * collapsed cold-start commits (``MemoryContext.bulk_load`` /
+    ``write_sets_bulk``): one tracker record for same-instant all-
+    positive commits is observation-identical to the per-write path —
+    same page totals, same ``average()``/``peak()``/``merged_peak``;
+  * the payload memo's adaptive fingerprint bypass is a deterministic
+    function of invocation history and never changes dataflow;
+  * ``StreamingPercentile`` (P^2) tracks ``np.percentile`` on the
+    latency distributions the benchmarks draw.
+"""
+import numpy as np
+
+from repro.core import BatchStepModel, EventLoop, FunctionRegistry, Item
+from repro.core.context import PAGE, MemoryContext, MemoryTracker
+from repro.core.registry import PayloadMemo
+from repro.core.sim import merged_peak
+from repro.core.tracing import StreamingPercentile
+
+
+# ------------------------------------------------------ vectorized draws
+def test_vectorized_lognormal_bit_identical_to_scalar_draws():
+    for sigma in (0.05, 0.3, 1.2):
+        a = np.random.default_rng(1234)
+        b = np.random.default_rng(1234)
+        vec = a.lognormal(0.0, sigma, size=24)
+        seq = [b.lognormal(0.0, sigma) for _ in range(24)]
+        assert vec.tolist() == seq                    # bit-identical draws
+        # ...and identical generator state afterwards: any draw that
+        # follows the vectorized block matches the scalar timeline too
+        assert a.bit_generator.state == b.bit_generator.state
+        assert a.lognormal(0.0, sigma) == b.lognormal(0.0, sigma)
+
+
+# ---------------------------------------------------- vectorized pricing
+def test_step_s_batch_matches_elementwise():
+    m = BatchStepModel(
+        flops_per_seq=2.6e9, fixed_bytes=2.6e9, bytes_per_seq=30e6,
+        peak_flops=197e12, hbm_bw=819e9, overhead_s=100e-6,
+    )
+    ns = list(range(0, 65))
+    vec = m.step_s_batch(ns)
+    assert vec.tolist() == [m.step_s(n) for n in ns]
+
+
+# ------------------------------------------------- collapsed commit records
+def _commit_timeline(bulk: bool) -> MemoryTracker:
+    """Two modeled cold starts and their frees on one virtual timeline,
+    committed either through the collapsed bulk calls or the per-write
+    reference path."""
+    loop = EventLoop()
+    tracker = MemoryTracker(loop)
+    ins1 = {"a": [Item(b"x" * 5000)], "b": [Item(b"y" * 123), Item(b"q" * 7)]}
+    out1 = {"out": [Item(b"r" * 9001)]}
+    ins2 = {"c": [Item(b"z" * (3 * PAGE))]}
+    ctxs = []
+
+    def start(code_n, ins, outs):
+        ctx = MemoryContext(capacity=1 << 20, tracker=tracker)
+        if bulk:
+            ctx.bulk_load(code_n, ins)
+            ctx.write_sets_bulk(outs, into="outputs")
+        else:
+            ctx.load_code_size(code_n)
+            for name, items in ins.items():
+                ctx.write_set(name, items)
+            for name, items in outs.items():
+                ctx.write_set(name, items, into="outputs")
+        ctxs.append(ctx)
+
+    loop.at(0.5, lambda: start(3000, ins1, out1))
+    loop.at(1.25, lambda: start(777, ins2, {}))
+    loop.at(2.0, lambda: ctxs[0].free())
+    loop.at(3.5, lambda: ctxs[1].free())
+    loop.run()
+    return tracker
+
+
+def test_bulk_commits_observationally_identical():
+    bulk, ref = _commit_timeline(True), _commit_timeline(False)
+    assert bulk.committed == ref.committed == 0       # freed exactly once
+    assert bulk.timeline.peak() == ref.timeline.peak()
+    assert merged_peak([bulk.timeline]) == merged_peak([ref.timeline])
+    for t_end in (0.6, 1.3, 2.5, 3.5, 5.0):
+        assert bulk.timeline.average(t_end) == ref.timeline.average(t_end)
+    # page accounting still rounds per write, then sums: the bulk path
+    # must not merge byte counts before rounding
+    ctx_b = MemoryContext(capacity=1 << 20)
+    ctx_b.bulk_load(1, {"a": [Item(b"x")], "b": [Item(b"y")]})
+    ctx_r = MemoryContext(capacity=1 << 20)
+    ctx_r.load_code_size(1)
+    ctx_r.write_set("a", [Item(b"x")])
+    ctx_r.write_set("b", [Item(b"y")])
+    assert ctx_b.committed_pages == ctx_r.committed_pages == 3
+
+
+# ------------------------------------------------- adaptive memo bypass
+def test_payload_memo_adaptive_bypass_deterministic():
+    def _counters():
+        reg = FunctionRegistry()
+        calls = []
+        reg.register_function(
+            "uniq", lambda ins: {"out": [Item(ins["x"][0].data * 2)]},
+            context_bytes=1 << 20,
+        )
+        cf = reg.get("uniq")
+        memo = PayloadMemo(bypass_after=4)
+        outs = []
+        for i in range(10):                  # inputs never repeat
+            out = memo.run(cf, {"x": [Item(bytes([i]))]})
+            outs.append(out["out"][0].data)
+        return memo.hits, memo.misses, memo.skips, outs
+
+    a, b = _counters(), _counters()
+    assert a == b                            # pure function of history
+    hits, misses, skips, outs = a
+    assert hits == 0
+    assert misses == 4                       # fingerprinted until the bound
+    assert skips == 6                        # then bypassed permanently
+    assert outs == [bytes([i]) * 2 for i in range(10)]   # dataflow unchanged
+
+    # one hit before the bound disarms the bypass for good
+    reg = FunctionRegistry()
+    reg.register_function(
+        "rep", lambda ins: {"out": [Item(b"v")]}, context_bytes=1 << 20)
+    cf = reg.get("rep")
+    memo = PayloadMemo(bypass_after=4)
+    memo.run(cf, {"x": [Item(b"same")]})
+    memo.run(cf, {"x": [Item(b"same")]})     # hit
+    for i in range(20):
+        memo.run(cf, {"x": [Item(b"n%d" % i)]})
+    assert memo.skips == 0
+    assert memo.hits == 1 and memo.misses == 21
+
+
+# ------------------------------------------------- streaming percentiles
+def test_streaming_percentile_tracks_numpy():
+    rng = np.random.default_rng(7)
+    samples = rng.lognormal(-3.0, 0.6, size=4000)
+    p50 = StreamingPercentile(50)
+    p99 = StreamingPercentile(99)
+    for x in samples:
+        p50.add(float(x))
+        p99.add(float(x))
+    ref50 = float(np.percentile(samples, 50))
+    ref99 = float(np.percentile(samples, 99))
+    assert abs(p50.value - ref50) / ref50 < 0.05
+    assert abs(p99.value - ref99) / ref99 < 0.15
+    # exact while the marker window is still filling
+    small = StreamingPercentile(50)
+    for x in (5.0, 1.0, 3.0):
+        small.add(x)
+    assert small.value == 3.0
+    assert StreamingPercentile(99).value == 0.0

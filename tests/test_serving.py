@@ -11,6 +11,7 @@ from repro.serving.batching import ContinuousBatcher, Request
 from repro.serving.engine import generate
 from repro.serving.trace_capture import (
     calibrated_batch_model,
+    calibration_residuals,
     capture_step_timings,
     fit_affine,
 )
@@ -89,6 +90,13 @@ def test_trace_capture_calibrates_batch_model():
     assert model.step_s(2) == pytest.approx(fixed + 2 * per_seq)
     # batching a calibrated model never beats per-sequence linearity
     assert model.step_s(4) <= 4 * model.step_s(1) + 1e-12
+    # the residual report scores the fit through the vectorized pricing
+    # path; a 2-point affine fit of 2 points is (near) exact unless the
+    # lstsq clamp to nonnegative coefficients kicked in
+    res = calibration_residuals(timings, model)
+    assert [b for b, _ in res] == [1, 2]
+    if fixed > 0 and per_seq > 0:
+        assert all(abs(r) < 1e-6 for _, r in res)
 
 
 def test_batcher_frees_slots_and_admits_waiting():

@@ -1,0 +1,199 @@
+"""``ShardedEventLoop`` exact-mode byte identity vs. ``EventLoop``.
+
+The sharded loop's contract (see ``core/sim.py``): with ``lookahead_s
+== 0`` it pops the globally minimal ``(time, seq)`` head across shard
+heaps and shares one sequence counter, so its pop order — and therefore
+every downstream observable: callback order, clock reads, RNG
+consumption, latency samples, memory timelines — is *identical* to a
+single merged heap. These tests pin that claim three ways:
+
+  1. a property test over adversarial schedules (ties, daemons,
+     recursive reschedules that hop shards);
+  2. a full SDK pool platform with cold starts, jittered service times
+     and streamed arrivals, run to float equality on every observable
+     (honors the ``CROSSNODE`` env knob like the CI matrix does);
+  3. the fig10/fig11 benchmark row contract itself, in-process, with
+     ``DANDELION_SHARDS`` off vs. on.
+
+The lookahead>0 window mode trades the identity guarantee for shard
+batching and is exercised only for soundness (same completions), not
+byte identity.
+"""
+import os
+
+from tests._hypothesis_compat import given, settings, strategies as st
+
+from repro import sdk
+from repro.core import EventLoop, Item, ShardedEventLoop, merged_peak
+
+
+# ===========================================================================
+# 1. Event-order identity on adversarial schedules
+# ===========================================================================
+def _run_schedule(loop, shards, events):
+    """Replay a drawn schedule and trace every callback invocation.
+
+    ``shards`` maps a drawn shard id to a scheduling surface (the loop
+    itself, or one of its shard views); callbacks reschedule themselves
+    ``after`` a drawn delay on the *next* shard id, two levels deep, so
+    cross-shard time reads and tie-breaking both get exercised.
+    """
+    trace = []
+
+    def fire(i, sid, delay, depth):
+        def cb():
+            trace.append((round(loop.now, 9), i, depth))
+            if depth < 2:
+                nxt = shards[(sid + depth + 1) % len(shards)]
+                nxt.after(delay, fire(i, sid + 1, delay, depth + 1))
+        return cb
+
+    for i, (sid, t, delay, daemon) in enumerate(events):
+        shards[sid % len(shards)].at(t, fire(i, sid, delay, 0),
+                                     daemon=daemon)
+    loop.run()
+    return trace, loop.now
+
+
+@settings(max_examples=15)
+@given(st.lists(
+    st.tuples(
+        st.integers(0, 2),                       # shard id
+        st.sampled_from([0.0, 0.5, 0.5, 1.0, 1.25, 2.0]),  # time (ties!)
+        st.sampled_from([0.0, 0.25, 0.5]),       # reschedule delay
+        st.booleans(),                           # daemon
+    ),
+    min_size=1, max_size=12,
+))
+def test_exact_mode_event_order_identical(events):
+    # daemon-only schedules stop immediately on both loops; keep one
+    # non-daemon event so the run is non-trivial
+    events = list(events)
+    sid, t, d, _ = events[0]
+    events[0] = (sid, t, d, False)
+
+    ref_loop = EventLoop()
+    ref = _run_schedule(ref_loop, [ref_loop] * 3, events)
+
+    sh_loop = ShardedEventLoop()
+    shards = [sh_loop.shard(f"n{i}") for i in range(3)]
+    got = _run_schedule(sh_loop, shards, events)
+    assert got == ref
+
+
+# ===========================================================================
+# 2. Full platform identity (pool shape, cold starts, jitter, stream)
+# ===========================================================================
+def _apps():
+    return [
+        sdk.single_function_app(sdk.declare(
+            f"f{k}",
+            lambda ins: {"out": [Item(ins["x"][0].data)]},
+            inputs=("x",), outputs=("out",),
+            context_bytes=(1 + k) << 18,
+            profile=sdk.ColdStartProfile(3e-4, 0.02, jitter_sigma=0.2),
+        ))
+        for k in range(4)
+    ]
+
+
+def _run_mini(loop, n_events, seed):
+    platform = sdk.Platform(
+        pool=[sdk.NodeSpec(num_slots=2, seed=30 + i, name=f"pn{i}")
+              for i in range(3)],
+        loop=loop,
+    )
+    apps = _apps()
+    for app in apps:
+        platform.deploy(app)
+    rng = __import__("random").Random(seed)
+    arrivals = sorted(
+        (rng.uniform(0.0, 2.0), apps[rng.randrange(4)],
+         {"x": [Item(bytes([j % 251]))]})
+        for j in range(n_events)
+    )
+    platform.submit_stream(iter(arrivals))
+    platform.run(until=2.5)
+    platform.run()           # drain stragglers past the window
+    return (
+        sorted(platform.latency.samples),
+        [n.tracker.timeline.points for n in platform.nodes],
+        merged_peak([n.tracker.timeline for n in platform.nodes]),
+        next(loop._seq),     # total events consumed — pop-count identity
+    )
+
+
+@settings(max_examples=5)
+@given(st.integers(5, 40), st.integers(0, 10_000))
+def test_pool_platform_identical_under_sharding(n_events, seed):
+    ref = _run_mini(EventLoop(), n_events, seed)
+    got = _run_mini(ShardedEventLoop(), n_events, seed)
+    assert got == ref
+
+
+def test_pool_platform_identical_with_crossnode_forced():
+    for crossnode in (False, True):
+        os.environ["CROSSNODE"] = "1" if crossnode else "0"
+        try:
+            ref = _run_mini(EventLoop(), 30, 77)
+            got = _run_mini(ShardedEventLoop(), 30, 77)
+        finally:
+            os.environ.pop("CROSSNODE", None)
+        assert got == ref, f"crossnode={crossnode}"
+
+
+# ===========================================================================
+# 3. The benchmark row contract itself (fig10 / fig11, in-process)
+# ===========================================================================
+def _bench_rows(module_name, knob, value, monkeypatch, shards):
+    import importlib
+
+    monkeypatch.setenv(knob, value)
+    if shards:
+        monkeypatch.setenv("DANDELION_SHARDS", "1")
+    else:
+        monkeypatch.delenv("DANDELION_SHARDS", raising=False)
+    mod = importlib.import_module(f"benchmarks.{module_name}")
+    return mod.run()
+
+
+def test_fig10_rows_identical_under_sharding(monkeypatch):
+    ref = _bench_rows("fig10_azure_trace", "FIG10_DURATION_S", "30",
+                      monkeypatch, shards=False)
+    got = _bench_rows("fig10_azure_trace", "FIG10_DURATION_S", "30",
+                      monkeypatch, shards=True)
+    assert got == ref
+
+
+def test_fig11_rows_identical_under_sharding(monkeypatch):
+    ref = _bench_rows("fig11_elastic_scaleout", "FIG11_QUICK", "1",
+                      monkeypatch, shards=False)
+    got = _bench_rows("fig11_elastic_scaleout", "FIG11_QUICK", "1",
+                      monkeypatch, shards=True)
+    assert got == ref
+
+
+# ===========================================================================
+# 4. Lookahead window mode: sound, not byte-identical
+# ===========================================================================
+def test_lookahead_mode_completes_all_work():
+    """With a conservative window the shard batching must never lose or
+    reorder *dataflow* (every invocation completes with the right
+    outputs), even though wall-ordering details may differ."""
+    loop = ShardedEventLoop(lookahead_s=1e-3)
+    platform = sdk.Platform(
+        pool=[sdk.NodeSpec(num_slots=2, seed=40 + i, name=f"ln{i}")
+              for i in range(2)],
+        loop=loop,
+    )
+    apps = _apps()
+    for app in apps:
+        platform.deploy(app)
+    done = []
+    platform.submit_stream([
+        (0.01 * j, apps[j % 4], {"x": [Item(bytes([j]))]},
+         lambda inv, j=j: done.append((j, inv.outputs["out"][0].data)))
+        for j in range(24)
+    ])
+    platform.run()
+    assert sorted(done) == [(j, bytes([j])) for j in range(24)]

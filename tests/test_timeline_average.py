@@ -1,0 +1,92 @@
+"""``Timeline.average`` historical-window contract.
+
+``record`` maintains a per-point cumulative integral (``_cum``) so a
+historical query (``t_end`` before the last recorded point — e.g. a
+measurement window read after draining stragglers) is an O(log n)
+bisect. These tests pin the identity the sim.py docstring states:
+``_integral_until`` is *bit-identical* to the retained O(n) reference
+walk ``_scan_integral``, and both match an independent brute-force
+rebuild of the step function — under property-drawn step functions and
+query points, including ties at recorded times and queries beyond the
+last point.
+"""
+from tests._hypothesis_compat import given, settings, strategies as st
+
+from repro.core.sim import Timeline
+
+
+def _brute_force(points, t_end):
+    """Independent re-derivation: integral of the step function defined
+    by ``points`` over [points[0].t, t_end]."""
+    total = 0.0
+    for (t0, v), nxt in zip(points, points[1:] + [None]):
+        if t0 >= t_end:
+            break
+        t1 = t_end if nxt is None else min(nxt[0], t_end)
+        total += v * (t1 - t0)
+    return total
+
+
+def _build(deltas, values):
+    tl = Timeline()
+    t = 0.0
+    for dt, v in zip(deltas, values):
+        t += dt
+        tl.record(t, v)
+    return tl, t
+
+
+@settings(max_examples=30)
+@given(
+    st.lists(st.floats(0.0, 3.0), min_size=1, max_size=40),
+    st.lists(st.floats(0.0, 100.0), min_size=40, max_size=40),
+    st.floats(0.0, 1.0),
+)
+def test_streaming_cum_matches_scan_and_bruteforce(deltas, values, frac):
+    tl, t_last = _build(deltas, values)
+    # historical, boundary, and past-the-end query points — plus every
+    # recorded time exactly (the bisect tie-break path)
+    queries = [frac * t_last, t_last, t_last + 1.0]
+    queries += [t for t, _ in tl.points]
+    for t_end in queries:
+        if t_end < t_last:
+            fast = tl._integral_until(t_end)
+            assert fast == tl._scan_integral(t_end)          # bit-identical
+            assert abs(fast - _brute_force(tl.points, t_end)) <= 1e-9 * (
+                1.0 + abs(fast)
+            )
+        # average() must agree with a from-scratch reference either way
+        span = t_end - tl.points[0][0]
+        if span > 0:
+            want = _brute_force(
+                tl.points, min(t_end, t_last)
+            ) + (tl.last_value * (t_end - t_last) if t_end > t_last else 0.0)
+            got = tl.average(t_end)
+            assert abs(got - want / span) <= 1e-9 * (1.0 + abs(got))
+
+
+def test_average_excludes_points_past_the_window():
+    """The fig10/fig13 pattern: drain stragglers past the measurement
+    window, then read the window average — later points must not leak
+    into it, and the streaming answer equals the reference walk's."""
+    tl = Timeline()
+    for t, v in ((0.0, 0.0), (1.0, 100.0), (4.0, 50.0), (10.0, 0.0),
+                 (12.0, 400.0), (13.0, 0.0)):
+        tl.record(t, v)
+    window = 10.0
+    assert tl._integral_until(window) == tl._scan_integral(window)
+    # 1..4 at 100 plus 4..10 at 50, over a 10 s window
+    assert tl.average(window) == (3 * 100.0 + 6 * 50.0) / 10.0
+
+
+def test_historical_average_requires_points():
+    tl = Timeline(keep_points=False)
+    for t, v in ((0.0, 1.0), (5.0, 2.0)):
+        tl.record(t, v)
+    assert tl.average(5.0) == (5.0 * 1.0) / 5.0   # streaming path still fine
+    try:
+        tl.average(2.5)                            # historical needs points
+    except ValueError as e:
+        assert "keep_points" in str(e)
+    else:
+        raise AssertionError("expected ValueError for historical window")

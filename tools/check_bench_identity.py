@@ -2,12 +2,14 @@
 """CI gate: deterministic benchmark CSVs must match their committed seeds.
 
 Regenerates the named benchmarks (default: the fully modeled, seeded
-ones — fig10, fig11, fig12) into a scratch directory and compares their
-*data rows* against the committed files under ``results/bench/``.
-Comment lines (``# ...``, including the machine-dependent ``# perf``
-throughput lines) are excluded; everything else must be byte-identical —
-the cross-PR determinism contract docs/BENCHMARKS.md states, promoted
-here from a manual check into an automated job.
+ones — fig10, fig11, fig12, fig13) into a scratch directory and
+compares their *data rows* against the committed files under
+``results/bench/``. Comment lines (``# ...``, including the
+machine-dependent ``# perf`` throughput lines) are excluded; everything
+else must be byte-identical — the cross-PR determinism contract
+docs/BENCHMARKS.md states, promoted here from a manual check into an
+automated job. When fig13 is in the set, its JSON sidecar
+(``BENCH_serving.json``) is held to the same standard.
 
 Usage:
     python tools/check_bench_identity.py [--names fig10,fig11,fig12]
@@ -28,7 +30,7 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
 SEED_DIR = ROOT / "results" / "bench"
-DEFAULT_NAMES = "fig10,fig11,fig12"
+DEFAULT_NAMES = "fig10,fig11,fig12,fig13"
 
 
 def data_rows(path: Path):
@@ -43,9 +45,13 @@ def regenerate(names: str, outdir: str) -> int:
     )
     # identity runs use every benchmark's committed default window: the
     # quick/smoke knobs produce different (still deterministic) rows
+    # (DANDELION_SHARDS stays: exact-mode sharding is byte-identical by
+    # contract, so an identity run under it checks that contract too)
     for knob in ("FIG10_DURATION_S", "FIG10_RATE_HZ", "FIG11_QUICK",
                  "FIG12_DURATION_S", "FIG12_RATE_HZ", "FIG13_QUICK",
-                 "FIG13_DURATION_S", "CROSSNODE"):
+                 "FIG13_DURATION_S", "FIG13_TELEMETRY",
+                 "FIG13_TELEMETRY_INTERVAL_S", "FIG13_REAL_EXEC",
+                 "DANDELION_SHARD_LOOKAHEAD_S", "CROSSNODE"):
         env.pop(knob, None)
     cmd = [sys.executable, "-m", "benchmarks.run",
            "--only", names, "--outdir", outdir]
@@ -73,6 +79,17 @@ def compare(names, outdir: Path) -> list:
                 f"{diff + 1}:\n    fresh: "
                 f"{got[diff] if diff < len(got) else '<missing>'}\n    seed:  "
                 f"{want[diff] if diff < len(want) else '<missing>'}"
+            )
+    if "fig13" in names:
+        fresh = outdir / "BENCH_serving.json"
+        seed = SEED_DIR / "BENCH_serving.json"
+        if not seed.is_file():
+            errors.append(f"fig13: committed seed {seed} missing")
+        elif not fresh.is_file():
+            errors.append(f"fig13: regenerated sidecar {fresh} missing")
+        elif fresh.read_bytes() != seed.read_bytes():
+            errors.append(
+                "fig13: BENCH_serving.json differs from committed seed"
             )
     return errors
 
