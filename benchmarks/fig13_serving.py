@@ -2,15 +2,17 @@
 
 Each serving request is a composition DAG (tokenize -> prefill -> N
 decode steps -> detokenize, ``repro.apps.inference_service``) scheduled
-by the ordinary dispatcher over identical 2-node hardware; the KV cache
-rides between vertices as real-sized items; model-weight cold starts are
-priced from the HLO cost models (param bytes / disk bandwidth + compile
-time, ``launch.hlo_analysis.weight_coldstart_estimate``). Azure-trace-
-shaped ON/OFF bursty arrivals, three weight-residency policies:
+by the ordinary dispatcher over an identical FIG13_NODES-node fleet; the
+KV cache rides between vertices as real-sized items; model-weight cold
+starts are priced from the HLO cost models (param bytes / disk bandwidth
++ compile time, ``launch.hlo_analysis.weight_coldstart_estimate``).
+Azure-trace-shaped ON/OFF bursty arrivals, three residency policies:
 
   * **keepwarm** — weights pinned on every node for the whole run (the
-    dedicated inference server): no cold starts, peak-provisioned
-    memory; continuous batching on.
+    dedicated inference server): no cold starts, and a peak-provisioned
+    fleet — ``REPLICAS_PER_NODE`` batch replicas per node, each holding
+    its KV/activation arena (``replica_bytes``) for the whole run;
+    continuous batching on.
   * **percold**  — per-request cold start with NO keep-alive: weights
     leave the node the instant no request holds them, so every arrival
     into an idle gap repays load+compile; batching off (``max_batch=1``
@@ -18,15 +20,28 @@ shaped ON/OFF bursty arrivals, three weight-residency policies:
     baseline.
   * **elastic**  — the Dandelion story: per-request sandboxes, weights
     kept by a short keep-alive while traffic flows and dropped in the
-    OFF valleys, decode steps coalesced by the platform's batching
-    engine (``core.workloads.BatchStepModel`` roofline).
+    OFF valleys; batch replicas scaled 0..``REPLICAS_PER_NODE`` per node
+    by a ``ReplicaAutoscaler`` (queue pressure up, drain-before-retire
+    down), requests routed by the ``batch_aware`` marginal-latency
+    estimator (``core.control_plane.BatchRouter``) instead of shortest
+    queue; decode steps coalesced by the platform's batching engine
+    (``core.workloads.BatchStepModel`` roofline).
+
+A fourth **multiplex** segment (JSON-only, no CSV row) serves TWO models
+(the default LMSpec plus ``hymba-1.5b`` priced straight from its
+``repro.configs`` geometry via ``lm_spec_from_config``) on one smaller
+pool whose per-node ``WeightStore`` capacity cannot hold both models at
+once — weight residency is evicted LRU-idle under contention while both
+models' decode steps coalesce (same-function steps only) on the shared
+replicas.
 
 Reported per policy: p50/p99 time-to-first-token (arrival -> prefill
 complete), p50/p99 end-to-end latency, generated tokens per virtual
 second, average/peak committed memory, and the weight cold-touch rate;
 plus an elastic/keepwarm ratio row (the acceptance gate: p99 TTFT within
-2x of keepwarm at >= 40% less average committed memory). A JSON summary
-lands in ``results/bench/BENCH_serving.json``.
+1.1x of keepwarm at <= 0.6x keepwarm average committed memory). A JSON
+summary — including replica-autoscaler scale events/latencies and the
+multiplex eviction stats — lands in ``results/bench/BENCH_serving.json``.
 
 All in virtual time, seeded end to end: data rows and the JSON are
 byte-identical across runs (`# perf` lines excepted).
@@ -35,11 +50,27 @@ Knobs (environment variables):
 
   FIG13_QUICK       1 shrinks the window to 60 s for CI smoke
   FIG13_DURATION_S  arrival window, default 240 (virtual seconds)
+  FIG13_NODES       fleet width, default 16 (integer >= 2)
+  FIG13_RATE_HZ     request rate during ON windows, default 200 (> 0)
+  FIG13_PREFILL_CHUNK
+                    tokens per prefill chunk (integer >= 1): declares
+                    prefill batchable so it rides the BATCH engine in
+                    ceil(prompt_len/chunk)-unit slices of the coalesced
+                    step. Default off (whole-prompt CPU prefill).
   FIG13_MIN_TPS     CI gate: exit non-zero unless the elastic policy
                     sustains this many generated tokens per virtual sec
   FIG13_MIN_EPS     CI gate: exit non-zero unless the elastic segment
                     sustains this many vertex-task events per wall-clock
                     second (simulator throughput, same unit as fig10)
+  FIG13_MAX_TTFT_RATIO
+                    CI gate: elastic p99 TTFT must stay within this
+                    factor of keepwarm (acceptance: 1.1)
+  FIG13_MAX_MEM_RATIO
+                    CI gate: elastic average committed memory must stay
+                    under this fraction of keepwarm (acceptance: 0.6)
+  FIG13_MAX_SCALEUP_S
+                    CI gate: worst replica scale-up latency (decision ->
+                    slot serving) must stay under this many virtual secs
   FIG13_REAL_EXEC   1 drops the calibrated profiles so every vertex runs
                     its real registered payload under measured wall-clock
                     durations instead of priced models. Dataflow (token
@@ -58,10 +89,11 @@ Knobs (environment variables):
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import sys
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -69,39 +101,111 @@ from repro import sdk
 from repro.apps.inference_service import (
     LMSpec,
     build_request_composition,
+    lm_spec_from_config,
     register_inference_service,
 )
-from repro.core import FunctionRegistry, Item, LatencyStats
+from repro.configs import get_config
+from repro.core import (
+    BatchRouter,
+    FunctionRegistry,
+    Item,
+    LatencyStats,
+    ReplicaAutoscaler,
+    ReplicaConfig,
+    WeightStore,
+)
 from repro.core.sim import merged_peak
 from repro.core.tracing import LiveTelemetry
 from benchmarks.common import PERF, SIMPERF_EXTRA, emit, track
 
-N_NODES = 2
+
+def _env_int(name: str, default: int, minimum: int) -> int:
+    raw = os.environ.get(name)
+    if raw is None:
+        return default
+    try:
+        v = int(raw)
+    except ValueError:
+        raise SystemExit(f"{name} must be an integer, got {raw!r}")
+    if v < minimum:
+        raise SystemExit(f"{name} must be >= {minimum}, got {v}")
+    return v
+
+
+def _env_float(name: str, default: float, minimum: float) -> float:
+    raw = os.environ.get(name)
+    if raw is None:
+        return default
+    try:
+        v = float(raw)
+    except ValueError:
+        raise SystemExit(f"{name} must be a number, got {raw!r}")
+    if v <= minimum:
+        raise SystemExit(f"{name} must be > {minimum}, got {v}")
+    return v
+
+
+N_NODES = _env_int("FIG13_NODES", 16, 2)
+RATE_HZ = _env_float("FIG13_RATE_HZ", 200.0, 0.0)
+_chunk_raw = os.environ.get("FIG13_PREFILL_CHUNK")
+PREFILL_CHUNK: Optional[int] = (
+    _env_int("FIG13_PREFILL_CHUNK", 0, 1) if _chunk_raw is not None else None
+)
+
 NODE_SLOTS = 8                   # CPU slots (frontend + prefill lanes)
 MAX_BATCH = 16                   # batching engine coalescing width
 KEEPALIVE_S = 6.0                # elastic weight keep-alive
+REPLICAS_PER_NODE = 2            # batch replicas per node (cap/pin count)
+REPLICA_KEEPALIVE_S = 3.0        # replica idle retirement clock
+REPLICA_BOOT_S = 0.05            # replica activation latency
 BURST_PERIOD_S = 60.0
 BURST_DUTY = 0.35                # ON fraction of each period
-RATE_HZ = 20.0                   # request rate during ON windows
 PROMPT_LEN_RANGE = (32, 128)
 DECODE_RANGE = (8, 32)
 SPEC = LMSpec()
+MULTIPLEX_ARCH = "hymba-1.5b"    # second model on the shared pool
 
 POLICIES = ("keepwarm", "percold", "elastic")
 
-# request-shape composition cache, shared across the three policies (and
+
+def _replica_bytes(spec: LMSpec) -> int:
+    """KV/activation arena one batch replica commits while it exists:
+    a full coalescing width of representative-length sequences."""
+    return MAX_BATCH * spec.seq_len_hint * spec.kv_bytes_per_token
+
+
+def _replica_config() -> ReplicaConfig:
+    return ReplicaConfig(
+        min_replicas=0,
+        max_per_node=REPLICAS_PER_NODE,
+        keepalive_s=REPLICA_KEEPALIVE_S,
+        boot_s=REPLICA_BOOT_S,
+    )
+
+
+# request-shape composition cache, shared across the policies (and
 # repeated runs): a Composition is pure structure — the dispatcher never
 # mutates it, and every policy prices the same request DAGs — so the
-# ~1.2k distinct (prompt_len, n_decode) shapes build once per process
+# distinct (model, prompt_len, n_decode) shapes build once per process
 # instead of once per policy.
-_COMPS: Dict[Tuple[int, int], object] = {}
+_COMPS: Dict[Tuple[str, int, int, Optional[int]], object] = {}
+
+
+def _comp_for(spec: LMSpec, p: int, d: int):
+    key = (spec.name, p, d, PREFILL_CHUNK)
+    comp = _COMPS.get(key)
+    if comp is None:
+        comp = _COMPS[key] = build_request_composition(
+            spec, prompt_len=p, n_decode=d, prefill_chunk=PREFILL_CHUNK)
+    return comp
+
 
 # Elastic-segment simulator throughput at the seed of this PR, in
 # vertex-task events (the fig10 unit: one event = one completed
 # function invocation; a request is tokenize + prefill + n_decode
 # decodes + detokenize = n_decode + 3 tasks). Measured on this
-# container at the default 240 s window: 37485 tasks / ~5.9 s.
-BASELINE_ELASTIC_EPS = 6300.0
+# container at the default 16-node 200 Hz 240 s window.
+BASELINE_ELASTIC_EPS = 9932.0
 
 
 def _n_tasks(requests) -> int:
@@ -111,7 +215,7 @@ def _n_tasks(requests) -> int:
     whole ~23-vertex serving requests here would understate this
     benchmark by that factor and make BENCH_simperf.json rows
     incomparable across segments, so fig13 reports the same unit."""
-    return sum(d + 3 for _, _, _, d in requests)
+    return sum(r[3] + 3 for r in requests)
 
 
 def _duration() -> float:
@@ -120,12 +224,14 @@ def _duration() -> float:
     return float(os.environ.get("FIG13_DURATION_S", 240.0))
 
 
-def _requests(duration_s: float, seed: int = 0):
+def _requests(duration_s: float, seed: int = 0,
+              rate_hz: Optional[float] = None):
     """ON/OFF-modulated Poisson arrivals of LM requests, by thinning (the
     repro.core.trace recipe): (t, prompt_bytes, prompt_len, n_decode)."""
+    rate = RATE_HZ if rate_hz is None else rate_hz
     rng = np.random.default_rng(seed)
-    n = int(RATE_HZ * duration_s * 1.5 + 50)
-    ts = np.cumsum(rng.exponential(1.0 / RATE_HZ, size=n))
+    n = int(rate * duration_s * 1.5 + 50)
+    ts = np.cumsum(rng.exponential(1.0 / rate, size=n))
     keep = ((ts % BURST_PERIOD_S) / BURST_PERIOD_S < BURST_DUTY) & (ts < duration_s)
     lo, hi = PROMPT_LEN_RANGE
     plens = rng.integers(lo, hi + 1, size=n)
@@ -141,27 +247,48 @@ def _requests(duration_s: float, seed: int = 0):
 def _run_policy(policy: str, requests, duration_s: float,
                 tele: "LiveTelemetry" = None) -> Dict[str, float]:
     reg = FunctionRegistry()
-    svc = register_inference_service(reg, SPEC)
+    svc = register_inference_service(reg, SPEC, prefill_chunk=PREFILL_CHUNK)
     # real-execution mode: no calibrated profiles -> the engines take the
     # measured path (repro.core.coldstart, perf_counter durations) and the
     # registered payloads actually run. Token streams are seeded from the
     # prompt digest alone, so outputs must match the modeled default
     # byte for byte.
     real_exec = os.environ.get("FIG13_REAL_EXEC") == "1"
+    elastic = policy == "elastic"
+    arena = _replica_bytes(SPEC)
     platform = sdk.Platform(
         registry=reg, profiles=None if real_exec else svc.profiles,
         pool=[sdk.NodeSpec(
             num_slots=NODE_SLOTS,
-            batch_slots=1, batch_model=svc.batch_model,
+            # keepwarm: the full replica fleet pinned up for the run.
+            # percold: one non-coalescing replica (max_batch=1).
+            # elastic: zero replicas; batch_models marks the capability
+            # so decode queues on the BATCH engine where the autoscaler
+            # sees backlog and boots replicas.
+            batch_slots=(0 if elastic
+                         else REPLICAS_PER_NODE if policy == "keepwarm"
+                         else 1),
+            batch_model=svc.batch_model,
+            batch_models=svc.batch_models if policy != "percold" else None,
             max_batch=1 if policy == "percold" else MAX_BATCH,
+            replica_bytes=0 if policy == "percold" else arena,
             # per-node weight residency: a fresh store per node built
             weight_store=lambda: svc.make_weight_store(
-                keepalive_s=KEEPALIVE_S if policy == "elastic" else 0.0,
+                keepalive_s=KEEPALIVE_S if elastic else 0.0,
                 pinned=policy == "keepwarm",
             ),
             seed=40 + i, name=f"sv{i}",
         ) for i in range(N_NODES)],
+        route_policy="batch_aware" if elastic else "outstanding",
+        batch_router=BatchRouter(
+            spinup_s=REPLICA_BOOT_S, cold_s=svc.weight_cold.total_s,
+        ) if elastic else None,
     )
+    autoscaler = None
+    if elastic:
+        autoscaler = ReplicaAutoscaler(
+            platform.loop, platform.nodes, config=_replica_config())
+        autoscaler.start()
 
     ttft = LatencyStats()
     tokens = 0
@@ -176,13 +303,9 @@ def _run_policy(policy: str, requests, duration_s: float,
         return done
 
     def arrivals():
-        comps = _COMPS
         for t, prompt, p, d in requests:
-            comp = comps.get((p, d))
-            if comp is None:
-                comp = comps[(p, d)] = build_request_composition(
-                    SPEC, prompt_len=p, n_decode=d)
-            yield t, comp, {"prompt": [Item(prompt)]}, make_done(d)
+            yield t, _comp_for(SPEC, p, d), {"prompt": [Item(prompt)]}, \
+                make_done(d)
 
     if tele is not None:
         tele.stream = f"fig13/{policy}"
@@ -225,6 +348,8 @@ def _run_policy(policy: str, requests, duration_s: float,
     ws_summ = [n.weight_store.summary() for n in nodes]
     touches = sum(s["touches"] for s in ws_summ)
     colds = sum(s["cold_touches"] for s in ws_summ)
+    if autoscaler is not None:
+        _LAST["autoscaler"] = autoscaler.summary()
     return {
         "policy": policy,
         "requests": len(requests),
@@ -241,6 +366,107 @@ def _run_policy(policy: str, requests, duration_s: float,
     }
 
 
+def _run_multiplex(duration_s: float) -> Dict[str, object]:
+    """Two models, one elastic pool: per-node weight capacity holds only
+    one model's weights at a time (1.25x the larger), so residency churns
+    through deterministic LRU-idle eviction while both models' decode
+    steps share the replica fleet (coalesced per function, routed by the
+    batch-aware estimator)."""
+    reg = FunctionRegistry()
+    svc_a = register_inference_service(reg, SPEC, prefill_chunk=PREFILL_CHUNK)
+    spec_b = lm_spec_from_config(get_config(MULTIPLEX_ARCH))
+    svc_b = register_inference_service(reg, spec_b,
+                                       prefill_chunk=PREFILL_CHUNK)
+    capacity = int(1.25 * max(SPEC.param_bytes, spec_b.param_bytes))
+    n_nodes = max(4, N_NODES // 4)
+    rate_hz = RATE_HZ / 4.0
+    batch_models = {**svc_a.batch_models, **svc_b.batch_models}
+    arena = max(_replica_bytes(SPEC), _replica_bytes(spec_b))
+    cold_s = max(svc_a.weight_cold.total_s, svc_b.weight_cold.total_s)
+    real_exec = os.environ.get("FIG13_REAL_EXEC") == "1"
+
+    def make_ws():
+        ws = WeightStore(keepalive_s=KEEPALIVE_S, capacity_bytes=capacity)
+        svc_a.register_weights(ws)
+        svc_b.register_weights(ws)
+        return ws
+
+    platform = sdk.Platform(
+        registry=reg,
+        profiles=None if real_exec
+        else {**svc_a.profiles, **svc_b.profiles},
+        pool=[sdk.NodeSpec(
+            num_slots=NODE_SLOTS,
+            batch_slots=0,
+            batch_models=batch_models,
+            max_batch=MAX_BATCH,
+            replica_bytes=arena,
+            weight_store=make_ws,
+            seed=70 + i, name=f"mx{i}",
+        ) for i in range(n_nodes)],
+        route_policy="batch_aware",
+        batch_router=BatchRouter(spinup_s=REPLICA_BOOT_S, cold_s=cold_s),
+    )
+    autoscaler = ReplicaAutoscaler(
+        platform.loop, platform.nodes, config=_replica_config())
+    autoscaler.start()
+
+    reqs = _requests(duration_s, seed=7, rate_hz=rate_hz)
+    which = np.random.default_rng(11).integers(0, 2, size=len(reqs))
+    specs = (SPEC, spec_b)
+    ttft = {s.name: LatencyStats() for s in specs}
+    tokens = 0
+    completed = 0
+    digest = hashlib.blake2b(digest_size=16)
+
+    def make_done(rid: int, spec: LMSpec, n_decode: int):
+        def done(inv):
+            nonlocal tokens, completed
+            if inv.failed:
+                return
+            completed += 1
+            tokens += n_decode + 1
+            tf = inv.vertex_runs["prefill"].done_t - inv.t_start
+            ttft[spec.name].add(tf)
+            digest.update(f"{rid}:{spec.name}:{tf:.9f}".encode())
+        return done
+
+    def arrivals():
+        for rid, ((t, prompt, p, d), w) in enumerate(zip(reqs, which)):
+            spec = specs[int(w)]
+            yield t, _comp_for(spec, p, d), {"prompt": [Item(prompt)]}, \
+                make_done(rid, spec, d)
+
+    with track("fig13/multiplex", _n_tasks(reqs)):
+        platform.submit_stream(arrivals())
+        platform.run(until=duration_s)
+        nodes = platform.nodes
+        avg_committed = sum(
+            n.tracker.timeline.average(duration_s) for n in nodes)
+        platform.run()
+
+    ws_summ = [n.weight_store.summary() for n in nodes]
+    out = {
+        "models": [s.name for s in specs],
+        "nodes": n_nodes,
+        "rate_hz": rate_hz,
+        "weight_capacity_bytes": capacity,
+        "requests": len(reqs),
+        "completed": completed,
+        "tokens_per_s": tokens / duration_s,
+        "avg_committed_mb": avg_committed / 1024**2,
+        "weight_evictions": sum(s["evictions"] for s in ws_summ),
+        "weight_over_capacity": sum(s["over_capacity"] for s in ws_summ),
+        "weight_cold_touches": sum(s["cold_touches"] for s in ws_summ),
+        "result_digest": digest.hexdigest(),
+    }
+    for s in specs:
+        tf = ttft[s.name].summary()
+        out[f"p99_ttft_ms_{s.name}"] = tf["p99_ms"]
+    out.update(autoscaler.summary())
+    return out
+
+
 def run() -> List[dict]:
     duration_s = _duration()
     requests = _requests(duration_s)
@@ -251,6 +477,7 @@ def run() -> List[dict]:
     finally:
         if tele is not None:
             tele.close()
+    _LAST["multiplex"] = _run_multiplex(duration_s)
     el = PERF["fig13/elastic"]
     SIMPERF_EXTRA["fig13/elastic"] = {
         "event_unit": "vertex_tasks",
@@ -299,6 +526,11 @@ def write_json(outdir: str = "results/bench") -> str:
             "nodes": N_NODES,
             "max_batch": MAX_BATCH,
             "keepalive_s": KEEPALIVE_S,
+            "replicas_per_node": REPLICAS_PER_NODE,
+            "replica_keepalive_s": REPLICA_KEEPALIVE_S,
+            "replica_boot_s": REPLICA_BOOT_S,
+            "replica_bytes": _replica_bytes(SPEC),
+            "prefill_chunk": PREFILL_CHUNK,
             "burst_period_s": BURST_PERIOD_S,
             "burst_duty": BURST_DUTY,
             "rate_hz": RATE_HZ,
@@ -309,6 +541,8 @@ def write_json(outdir: str = "results/bench") -> str:
             "avg_committed_ratio": ratio["avg_committed_mb"],
             "tokens_per_s_ratio": ratio["tokens_per_s"],
         },
+        "elastic_autoscaler": _LAST.get("autoscaler", {}),
+        "multiplex": _LAST.get("multiplex", {}),
     }
     os.makedirs(outdir, exist_ok=True)
     path = os.path.join(outdir, "BENCH_serving.json")
@@ -319,20 +553,50 @@ def write_json(outdir: str = "results/bench") -> str:
 
 
 def gate() -> None:
-    """CI floors: FIG13_MIN_TPS generated tokens per *virtual* second
-    (deterministic, so a conservative floor is robust on any runner) and
-    FIG13_MIN_EPS vertex-task events per *wall-clock* second on the
-    elastic segment (simulator throughput — machine-dependent, so CI
-    floors sit well below the container's steady-state rate)."""
+    """CI floors/ceilings. FIG13_MIN_TPS (generated tokens per *virtual*
+    second), FIG13_MAX_TTFT_RATIO / FIG13_MAX_MEM_RATIO (elastic vs
+    keepwarm), and FIG13_MAX_SCALEUP_S (worst replica scale-up latency)
+    are deterministic, so conservative bounds are robust on any runner.
+    FIG13_MIN_EPS (vertex-task events per *wall-clock* second on the
+    elastic segment) is machine-dependent, so CI floors sit well below
+    the container's steady-state rate."""
+    rows = _LAST.get("rows") or []
+    by = {r["policy"]: r for r in rows}
     min_tps = float(os.environ.get("FIG13_MIN_TPS", 0.0))
     if min_tps > 0:
-        rows = _LAST.get("rows") or []
-        el = next((r for r in rows if r["policy"] == "elastic"), None)
+        el = by.get("elastic")
         if el is None or el["tokens_per_s"] < min_tps:
             got = el["tokens_per_s"] if el else 0.0
             raise SystemExit(
                 f"fig13 tokens/sec gate: elastic sustains {got:.1f} tok/s "
                 f"< required {min_tps:.1f}"
+            )
+    max_ttft = float(os.environ.get("FIG13_MAX_TTFT_RATIO", 0.0))
+    if max_ttft > 0:
+        r = by.get("elastic_vs_keepwarm")
+        if r is None or r["p99_ttft_ms"] > max_ttft:
+            got = r["p99_ttft_ms"] if r else float("inf")
+            raise SystemExit(
+                f"fig13 TTFT gate: elastic p99 TTFT is {got:.3f}x keepwarm "
+                f"> allowed {max_ttft:.3f}x"
+            )
+    max_mem = float(os.environ.get("FIG13_MAX_MEM_RATIO", 0.0))
+    if max_mem > 0:
+        r = by.get("elastic_vs_keepwarm")
+        if r is None or r["avg_committed_mb"] > max_mem:
+            got = r["avg_committed_mb"] if r else float("inf")
+            raise SystemExit(
+                f"fig13 memory gate: elastic commits {got:.3f}x keepwarm "
+                f"average > allowed {max_mem:.3f}x"
+            )
+    max_scaleup = float(os.environ.get("FIG13_MAX_SCALEUP_S", 0.0))
+    if max_scaleup > 0:
+        a = _LAST.get("autoscaler") or {}
+        worst = a.get("scaleup_latency_max_s", float("inf"))
+        if worst > max_scaleup:
+            raise SystemExit(
+                f"fig13 scale-up gate: worst replica scale-up took "
+                f"{worst:.3f}s > allowed {max_scaleup:.3f}s"
             )
     min_eps = float(os.environ.get("FIG13_MIN_EPS", 0.0))
     if min_eps > 0:

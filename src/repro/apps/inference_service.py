@@ -31,6 +31,7 @@ tests/test_inference_service.py).
 from __future__ import annotations
 
 import hashlib
+import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -85,6 +86,27 @@ class LMSpec:
     @property
     def hlo_ops_estimate(self) -> int:
         return self.n_layers * self.ops_per_layer + 40  # + embed/head/sample
+
+
+def lm_spec_from_config(cfg, **overrides) -> LMSpec:
+    """An ``LMSpec`` priced from a ``repro.configs`` ``ModelConfig``.
+
+    The cost models only read four things off the geometry: parameter
+    count, and the KV width ``2 * n_layers * d_model * dtype_bytes``.
+    Real architectures use GQA, so the *true* per-token KV width is
+    ``2 * n_layers * (num_kv_heads * head_dim) * dtype_bytes`` — we fold
+    that in by setting the spec's ``d_model`` to the KV projection width
+    rather than the residual width. ``overrides`` (e.g. ``name=``,
+    ``seq_len_hint=``) pass through to the ``LMSpec`` constructor."""
+    fields = dict(
+        name=cfg.name,
+        n_params=float(cfg.num_params()),
+        n_layers=cfg.num_layers,
+        d_model=cfg.num_kv_heads * cfg.resolved_head_dim,
+        vocab_size=cfg.vocab_size,
+    )
+    fields.update(overrides)
+    return LMSpec(**fields)
 
 
 @dataclass(frozen=True)
@@ -142,13 +164,29 @@ class InferenceService:
     # the four stage declarations, keyed "tokenize"/"prefill"/"decode"/
     # "detok" — already registered; carry their calibrated profiles
     specs: Dict[str, sdk.FunctionSpec] = field(default_factory=dict)
+    # per-function batch pricing: decode always; prefill too when chunked.
+    # Multiplexed platforms merge several services' dicts onto one node —
+    # the engine prices each coalesced step by the step's fn_name.
+    batch_models: Dict[str, BatchStepModel] = field(default_factory=dict)
+    prefill_chunk: Optional[int] = None
 
     def make_weight_store(self, *, keepalive_s: float = 0.0,
-                          pinned: bool = False) -> WeightStore:
+                          pinned: bool = False,
+                          capacity_bytes: Optional[int] = None) -> WeightStore:
         """A fresh per-node store holding this service's weights. The
         tokenize/detokenize frontends don't touch the model, so only
-        prefill/decode are registered against it."""
-        ws = WeightStore(keepalive_s=keepalive_s, pinned=pinned)
+        prefill/decode are registered against it. ``capacity_bytes``
+        bounds node weight RAM (``WeightStore`` evicts LRU-idle residents
+        to fit — the multiplexing path)."""
+        ws = WeightStore(keepalive_s=keepalive_s, pinned=pinned,
+                         capacity_bytes=capacity_bytes)
+        self.register_weights(ws)
+        return ws
+
+    def register_weights(self, ws: WeightStore) -> WeightStore:
+        """Register this service's weights into an existing store — the
+        multiplexing path, where several models' services share one
+        per-node store and compete for its capacity."""
         ws.register(self.spec.name, self.spec.param_bytes,
                     (self._fn("prefill"), self._fn("decode")))
         return ws
@@ -166,11 +204,21 @@ def register_inference_service(
     compile_s_per_op: float = 1e-3,
     step_overhead_s: float = 150e-6,
     hlo_text: Optional[str] = None,
+    prefill_chunk: Optional[int] = None,
 ) -> InferenceService:
     """Register the four serving functions and price their profiles from
     the HLO cost models. ``hlo_text`` (a real optimized-HLO dump, e.g.
     from ``launch.dryrun``) refines the compile-time term; without it the
-    layer-count estimate is used."""
+    layer-count estimate is used.
+
+    ``prefill_chunk`` (tokens) makes prefill *chunked*: the prefill
+    function is declared batchable so it rides the BATCH engine alongside
+    decode, each request occupying ``ceil(prompt_len / chunk)`` units of
+    the coalesced step (``Vertex.batch_units``); a per-function
+    ``BatchStepModel`` prices one chunk. Default ``None`` keeps the
+    historical whole-prompt CPU prefill byte-identically."""
+    if prefill_chunk is not None and prefill_chunk < 1:
+        raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
     kv_bpt = spec.kv_bytes_per_token
     vocab = spec.vocab_size
     name = spec.name
@@ -211,6 +259,7 @@ def register_inference_service(
         "prefill": sdk.declare(
             f"{name}_prefill", prefill,
             inputs=("tokens",), outputs=("kv", "tok"),
+            batchable=prefill_chunk is not None,
             context_bytes=spec.prompt_len_hint * kv_bpt + (4 << 20),
         ),
         "decode": sdk.declare(
@@ -258,11 +307,27 @@ def register_inference_service(
     )
     prefill_s = prefill_terms.step_time_s + step_overhead_s
     decode_s = batch_model.step_s(1)
+    batch_models = {f"{name}_decode": batch_model}
+    if prefill_chunk is not None:
+        # one *chunk* is the unit of a coalesced prefill step; a request
+        # occupies ceil(prompt_len / chunk) units of that step
+        batch_models[f"{name}_prefill"] = BatchStepModel(
+            flops_per_seq=spec.flops_per_token * prefill_chunk,
+            fixed_bytes=float(spec.param_bytes),
+            bytes_per_seq=float(prefill_chunk * kv_bpt),
+            peak_flops=hw.peak_flops,
+            hbm_bw=hw.hbm_bandwidth,
+            overhead_s=step_overhead_s,
+        )
 
     profiles = {
         f"{name}_tokenize": ColdStartProfile(SANDBOX_SETUP_S, 0.2e-3, 0.05),
         f"{name}_prefill": ColdStartProfile(
-            SANDBOX_SETUP_S, prefill_s, 0.05, cold_setup_s=weight_cold.total_s,
+            # chunked prefill rides the batching engine, which must be
+            # able to substitute step_s(units) without RNG skew: no jitter
+            SANDBOX_SETUP_S, prefill_s,
+            0.0 if prefill_chunk is not None else 0.05,
+            cold_setup_s=weight_cold.total_s,
         ),
         f"{name}_decode": ColdStartProfile(
             # jitter-free: the batching engine must be able to substitute
@@ -282,6 +347,8 @@ def register_inference_service(
         decode_step_s=decode_s,
         fn_names=tuple(profiles),
         specs=specs,
+        batch_models=batch_models,
+        prefill_chunk=prefill_chunk,
     )
 
 
@@ -291,15 +358,20 @@ def request_app(
     prompt_len: int,
     n_decode: int,
     specs: Optional[Dict[str, sdk.FunctionSpec]] = None,
+    prefill_chunk: Optional[int] = None,
 ) -> sdk.App:
     """One serving request as a declarative SDK application: the decode
     chain is unrolled to this request's token budget, each link passing
     the (growing) KV cache item and the previous token forward, every
     token also feeding detokenize. Without ``specs`` (an
     ``InferenceService.specs`` mapping), typed references to the
-    registered function names are used."""
+    registered function names are used. ``prefill_chunk`` (matching the
+    service's) sizes the prefill vertex at ``ceil(prompt_len / chunk)``
+    units of a coalesced BATCH step."""
     kv_bpt = spec.kv_bytes_per_token
     name = spec.name
+    prefill_units = (None if prefill_chunk is None
+                     else max(1, math.ceil(prompt_len / prefill_chunk)))
     if specs is None:
         specs = {
             "tokenize": sdk.ref(f"{name}_tokenize",
@@ -317,6 +389,7 @@ def request_app(
         pre = specs["prefill"](
             _name="prefill",
             _context_bytes=prompt_len * kv_bpt + (4 << 20),
+            _batch_units=prefill_units,
             tokens=tok.tokens,
         )
         det = specs["detok"](_name="detokenize", _context_bytes=1 << 20)
@@ -340,6 +413,7 @@ def build_request_composition(
     *,
     prompt_len: int,
     n_decode: int,
+    prefill_chunk: Optional[int] = None,
 ) -> Composition:
     """The request DAG as an IR ``Composition`` (see ``request_app``).
     The functions must already be registered
@@ -363,6 +437,8 @@ def build_request_composition(
     vertices["prefill"] = Vertex(
         "prefill", COMPUTE, f"{name}_prefill", ("tokens",), ("kv", "tok"),
         context_bytes=prompt_len * kv_bpt + (4 << 20),
+        batch_units=(1 if prefill_chunk is None
+                     else max(1, math.ceil(prompt_len / prefill_chunk))),
     )
     vertices["detokenize"] = Vertex(
         "detokenize", COMPUTE, f"{name}_detok", ("toks",), ("text",),

@@ -18,8 +18,12 @@ from repro.core.coldstart import (
     profile_from_measurement,
 )
 from repro.core.control_plane import (
+    BatchRouter,
     ControlPlaneConfig,
     ElasticControlPlane,
+    ReplicaAutoscaler,
+    ReplicaConfig,
+    composition_batch_units,
     composition_functions,
 )
 from repro.core.context import MemoryContext, MemoryTracker
@@ -49,6 +53,7 @@ from repro.core.workloads import BatchStepModel, WeightStore
 
 __all__ = [
     "BACKENDS",
+    "BatchRouter",
     "BatchStepModel",
     "ClusterManager",
     "CodeCache",
@@ -71,6 +76,8 @@ __all__ = [
     "ItemSet",
     "KeepWarmPlatform",
     "LatencyStats",
+    "ReplicaAutoscaler",
+    "ReplicaConfig",
     "LinkCounters",
     "MemoryContext",
     "MemoryTracker",
@@ -90,6 +97,7 @@ __all__ = [
     "WeightStore",
     "WorkerNode",
     "cold_start",
+    "composition_batch_units",
     "composition_functions",
     "fingerprint_sets",
     "make_set",

@@ -100,10 +100,12 @@ class CrossNodePlacer:
         *,
         links: Optional[Dict[Tuple[str, str], TransferProfile]] = None,
         default_link: Optional[TransferProfile] = None,
+        spread_instances: bool = False,
     ):
         self.cluster = cluster
         self.links = dict(links or {})
         self.default_link = default_link or TransferProfile()
+        self.spread_instances = spread_instances
         self.stats = TransferStats()
         self._home: Dict[int, WorkerNode] = {}   # dispatcher id -> node
         self._vload: Dict[int, int] = {}         # node id -> placed vertices
@@ -174,7 +176,15 @@ class CrossNodePlacer:
         v = vr.vertex
         home = self._home[id(disp)]
         if v.kind == COMPUTE:
-            target = self._pick(v.function, home)
+            if (self.spread_instances and vr.tmpl is not None
+                    and vr.tmpl.fan_edge is not None):
+                # each/key fan-outs spread per *instance* (see spread()):
+                # the vertex anchors home so downstream edge accounting
+                # sees its merged outputs at the home node — remote
+                # instances gather their outputs back explicitly
+                target = home
+            else:
+                target = self._pick(v.function, home)
         else:
             # comm vertices run on the home comm engines and subgraphs
             # unfold on the home dispatcher (their inner vertices get
@@ -248,6 +258,142 @@ class CrossNodePlacer:
             on_complete=arrived,
         ))
 
+    # ------------------------------------------------ instance spreading
+    def spread(self, disp: Dispatcher, inv: InvocationRun, vr: VertexRun):
+        """Scatter a fan-out vertex's instances across alive nodes so an
+        ``each``/``key`` expansion can saturate the cluster instead of
+        landing on one node (scatter-gather semantics: each remote
+        instance's inputs are charged as a transfer home->target, its
+        outputs as a transfer target->home before the instance counts as
+        done, so ``vr.exec_node`` stays home and downstream edges are
+        accounted exactly as if the vertex ran locally).
+
+        Picks are deterministic — least placed-load with per-call
+        assignment counts, ties prefer home then stable node order — no
+        RNG. Retries and hedges of a spread instance resubmit on the
+        home node (fallback-to-home). A target's death fails the whole
+        invocation through the normal ``_depend`` path."""
+        home = self._home[id(disp)]
+        cp = self.cluster.control_plane
+        if cp is not None:
+            alive = cp.active_nodes
+        else:
+            alive = [n for n in self.cluster._nodes if n.alive]
+        if len(alive) <= 1:
+            for inst in vr.instances:
+                disp._submit_instance(inv, vr, inst)
+            return
+        assigned: Dict[int, int] = {}
+        pending: Dict[int, WorkerNode] = {}    # inst idx -> remote node
+
+        def release_one(idx: int):
+            n = pending.pop(idx, None)
+            if n is None:
+                return
+            self._vload[id(n)] -= 1
+            if cp is not None and self._vload[id(n)] == 0:
+                cp.on_vertex_complete(n)
+
+        def release_all():
+            for idx in list(pending):
+                release_one(idx)
+
+        vr.placed_release = release_all
+
+        for inst in vr.instances:
+            target = min(
+                enumerate(alive),
+                key=lambda i_n: (
+                    self.vertex_load(i_n[1]) + assigned.get(id(i_n[1]), 0),
+                    i_n[1] is not home,
+                    i_n[0],
+                ),
+            )[1]
+            assigned[id(target)] = assigned.get(id(target), 0) + 1
+            if target is home:
+                self.stats.local_placements += 1
+                disp._submit_instance(inv, vr, inst)
+                continue
+            self.stats.remote_placements += 1
+            self._vload[id(target)] = self._vload.get(id(target), 0) + 1
+            pending[inst.idx] = target
+            self._depend(target, disp, inv)
+            self._scatter(disp, inv, vr, inst, home, target, release_one)
+
+    def _scatter(self, disp: Dispatcher, inv: InvocationRun, vr: VertexRun,
+                 inst, home: WorkerNode, target: WorkerNode,
+                 release_one: Callable[[int], None]):
+        """Move one instance's inputs home->target, then run it there;
+        arm the gather-back on completion."""
+        items = [it for iset in inst.inputs.values() for it in iset]
+        nbytes = set_bytes(items)
+        cpu_s, io_s = self.link(home.name, target.name).charge(nbytes)
+        self.stats.record_transfer(home.name, target.name, nbytes, cpu_s, io_s)
+        stage = MemoryContext(capacity=max(nbytes, 1), tracker=home.tracker)
+        if items:
+            stage.write_set("payload", items)
+        vr.staged.append(stage)
+
+        def arrived(_task: Task, _outputs, _ctx):
+            stage.transfer_ownership(target.tracker)
+            if inv.failed:
+                release_one(inst.idx)
+                return
+            task = disp._submit_instance(inv, vr, inst, remote=target)
+            self._arm_gather(disp, inv, vr, inst, task, home, target,
+                             release_one)
+
+        home.engines.submit(Task(
+            kind=TRANSFER, fn_name="transfer", inputs={}, context_bytes=0,
+            transfer_bytes=nbytes, transfer_cpu_s=cpu_s, transfer_io_s=io_s,
+            on_complete=arrived,
+        ))
+
+    def _arm_gather(self, disp: Dispatcher, inv: InvocationRun, vr: VertexRun,
+                    inst, task: Task, home: WorkerNode, target: WorkerNode,
+                    release_one: Callable[[int], None]):
+        """Wrap the remote task's callbacks: its outputs travel back to
+        the home node (one charged transfer) before the instance counts
+        as complete; failures release the placement and take the normal
+        retry path (which resubmits at home)."""
+
+        def done(t: Task, outputs, ctx):
+            if inv.failed or inst.done:
+                # dead invocation / hedge loser: no gather to charge —
+                # the normal completion path just frees the context
+                release_one(inst.idx)
+                disp._on_task_complete(t, outputs, ctx)
+                return
+            items = [it for iset in outputs.values() for it in iset]
+            gbytes = set_bytes(items)
+            cpu_s, io_s = self.link(target.name, home.name).charge(gbytes)
+            self.stats.record_transfer(target.name, home.name, gbytes,
+                                       cpu_s, io_s)
+            stage = MemoryContext(capacity=max(gbytes, 1),
+                                  tracker=target.tracker)
+            if items:
+                stage.write_set("payload", items)
+            vr.staged.append(stage)
+
+            def landed(_t: Task, _o, _c):
+                stage.transfer_ownership(home.tracker)
+                release_one(inst.idx)
+                disp._on_task_complete(t, outputs, ctx)
+
+            target.engines.submit(Task(
+                kind=TRANSFER, fn_name="transfer", inputs={},
+                context_bytes=0, transfer_bytes=gbytes,
+                transfer_cpu_s=cpu_s, transfer_io_s=io_s,
+                on_complete=landed,
+            ))
+
+        def failed(t: Task, reason: str):
+            release_one(inst.idx)
+            disp._on_task_failed(t, reason)
+
+        task.on_complete = done
+        task.on_failed = failed
+
 
 class ClusterManager:
     """Cluster frontend. Routing/scaling either static (least-outstanding
@@ -264,9 +410,12 @@ class ClusterManager:
         *,
         control_plane=None,   # repro.core.control_plane.ElasticControlPlane
         crossnode: Optional[bool] = None,   # None -> CROSSNODE env knob
+        crossnode_spread: Optional[bool] = None,  # None -> CROSSNODE_SPREAD
         transfer_links: Optional[Dict[Tuple[str, str], TransferProfile]] = None,
         transfer_profile: Optional[TransferProfile] = None,
         restart_attempts: int = 3,   # node-death re-executions per request
+        route_policy: str = "outstanding",  # "outstanding" | "batch_aware"
+        batch_router=None,   # control_plane.BatchRouter override
     ):
         if restart_attempts < 0:
             raise ValueError(
@@ -294,12 +443,21 @@ class ClusterManager:
         self.failed = 0
         self.cancelled = 0
         self._outstanding: Dict[int, int] = {id(n): 0 for n in self._nodes}
+        if route_policy not in ("outstanding", "batch_aware"):
+            raise ValueError(f"unknown route_policy {route_policy!r}")
+        self.batch_router = batch_router
+        if route_policy == "batch_aware" and self.batch_router is None:
+            from repro.core.control_plane import BatchRouter
+            self.batch_router = BatchRouter()
         if crossnode is None:
             crossnode = os.environ.get("CROSSNODE") == "1"
+        if crossnode_spread is None:
+            crossnode_spread = os.environ.get("CROSSNODE_SPREAD") == "1"
         self.placer: Optional[CrossNodePlacer] = None
         if crossnode:
             self.placer = CrossNodePlacer(
                 self, links=transfer_links, default_link=transfer_profile,
+                spread_instances=crossnode_spread,
             )
             if self.control_plane is not None:
                 self.control_plane.placer = self.placer
@@ -322,6 +480,15 @@ class ClusterManager:
         alive = [n for n in self._nodes if n.alive]
         if not alive:
             raise RuntimeError("no alive nodes")
+        if self.batch_router is not None:
+            # marginal-latency routing over batch replicas; compositions
+            # with no batchable work fall through to least-outstanding
+            picked = self.batch_router.pick(
+                alive, comp, alive[0].registry,
+                load=lambda n: self._outstanding[id(n)],
+            )
+            if picked is not None:
+                return picked
         return min(alive, key=lambda n: self._outstanding[id(n)])
 
     def invoke(

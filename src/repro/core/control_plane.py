@@ -80,6 +80,304 @@ def composition_functions(comp: Composition) -> Tuple[str, ...]:
     return out
 
 
+def composition_batch_units(comp: Composition, registry) -> int:
+    """Units of BATCH-engine work one invocation of ``comp`` submits:
+    the sum of ``vertex.batch_units`` over batchable compute vertices
+    (nested subgraphs included). Zero means the composition never
+    touches a batching engine and batch-aware routing defers to the
+    default policy. Cached on the composition — batchable flags and
+    units are structural, identical across the registries a benchmark
+    replays one composition against."""
+    cached = comp.__dict__.get("_batch_units")
+    if cached is not None:
+        return cached
+    total = 0
+
+    def walk(c: Composition):
+        nonlocal total
+        for v in c.vertices.values():
+            if v.kind == SUBGRAPH and v.subgraph is not None:
+                walk(v.subgraph)
+            elif v.kind == COMPUTE:
+                cf = registry.functions.get(v.function)
+                if cf is not None and getattr(cf, "batchable", False):
+                    total += max(1, getattr(v, "batch_units", 1))
+
+    walk(comp)
+    comp.__dict__["_batch_units"] = total
+    return total
+
+
+@dataclass
+class ReplicaConfig:
+    """Knobs for BATCH-replica autoscaling (``ReplicaAutoscaler``):
+    model-instance elasticity *within* nodes, one layer below the
+    control plane's node autoscaling."""
+
+    min_replicas: int = 0            # pool-wide floor of active replicas
+    max_per_node: int = 2            # accelerator slots one node can host
+    # scale-up triggers (either): queued units per active replica, or the
+    # next coalesced steps already near-full (headroom exhausted)
+    target_queue_per_replica: float = 8.0
+    headroom_fraction: float = 0.9
+    keepalive_s: float = 3.0         # idle window before a replica drains
+    tick_interval_s: float = 0.25
+    boot_s: float = 0.05             # replica spin-up (runtime attach; the
+                                     # *weight* cold term stays on the
+                                     # existing cold_setup_s task path)
+
+
+class ReplicaAutoscaler:
+    """Scales BATCH-engine replicas (model instances) inside a node pool.
+
+    Each tick (a daemon event on the shared loop) it reads every node's
+    batch backlog in *units* plus in-flight step occupancy and:
+
+      * **scales up** when a node has queued work and either no active
+        replica, a backlog above ``target_queue_per_replica``, or its
+        next coalesced steps past ``headroom_fraction`` of capacity —
+        paying ``boot_s`` before the new slot serves (weight residency
+        stays task-driven: the first task on a cold node still charges
+        ``cold_setup_s`` through the ``WeightStore`` miss path);
+      * **scales down** a node whose batch engine sat fully idle past
+        ``keepalive_s``, via ``EngineSet.retire_batch_slot`` — drain
+        before retire, never below ``min_replicas`` pool-wide.
+
+    Decisions are pure functions of observed queue state — no RNG — so
+    scaling timelines are byte-stable run to run. Scale-up latencies
+    (decision to slot-active) are recorded for the fig13 CI gate.
+    """
+
+    def __init__(
+        self,
+        loop: EventLoop,
+        nodes,                       # list or callable -> live WorkerNodes
+        *,
+        config: Optional[ReplicaConfig] = None,
+        journal: bool = False,
+    ):
+        self.loop = loop
+        self._nodes = nodes if callable(nodes) else (lambda: list(nodes))
+        self.cfg = config or ReplicaConfig()
+        self.journal: Optional[List[str]] = [] if journal else None
+        self.scale_ups = 0
+        self.scale_downs = 0
+        self.scaleup_latencies: List[float] = []
+        self._pending: Dict[int, int] = {}     # node id -> booting replicas
+        self._idle_since: Dict[int, float] = {}
+        self._ticking = False
+
+    def _log(self, msg: str):
+        if self.journal is not None:
+            self.journal.append(f"{self.loop.now:.9f} {msg}")
+
+    @staticmethod
+    def _is_batch(node: WorkerNode) -> bool:
+        eng = node.engines
+        return eng.batch_model is not None or bool(eng.batch_models)
+
+    def start(self):
+        if self._ticking:
+            return
+        self._ticking = True
+        if self.cfg.min_replicas > 0:
+            self._ensure_floor()
+        self._attach_starvation_hooks()
+        self.loop.after(self.cfg.tick_interval_s, self._tick, daemon=True)
+
+    def _attach_starvation_hooks(self):
+        """Wire every batch node's ``on_batch_starved`` liveness hook to
+        an immediate scale-up. The tick is a *daemon* event: a decode
+        task queued on a zero-replica node with nothing else scheduled
+        would otherwise strand when the loop drains — the hook's boot
+        event is non-daemon, so it keeps the loop alive."""
+        for n in self._nodes():
+            if self._is_batch(n) and n.engines.on_batch_starved is None:
+                n.engines.on_batch_starved = (lambda n=n: self._starved(n))
+
+    def _starved(self, node: WorkerNode):
+        """Synchronous kick from the engine: batchable work just queued
+        (or the last replica just retired) with zero active replicas.
+        Boot one now — the decision the next tick would take anyway
+        (``eff == 0`` is unconditionally pressured), so timing moves
+        from tick-aligned to enqueue-aligned and stays deterministic."""
+        cfg = self.cfg
+        nid = id(node)
+        pending = self._pending.get(nid, 0)
+        if (not node.alive
+                or node.engines.active_batch_slots() + pending > 0
+                or pending >= cfg.max_per_node):
+            return
+        self.scale_ups += 1
+        self._pending[nid] = pending + 1
+        t0 = self.loop.now
+        self._log(f"replica_up {node.name} starved")
+
+        def activate(n=node, nid=nid, t0=t0):
+            self._pending[nid] -= 1
+            if not n.alive:
+                return
+            n.engines.add_batch_slot()
+            self.scaleup_latencies.append(self.loop.now - t0)
+            self._log(f"replica_ready {n.name} "
+                      f"lat={self.loop.now - t0:.6f}")
+
+        self.loop.after(cfg.boot_s, activate)
+
+    def _ensure_floor(self):
+        """Provision the ``min_replicas`` floor round-robin (instant,
+        like the control plane's min_nodes: the floor exists before
+        traffic does)."""
+        nodes = [n for n in self._nodes() if self._is_batch(n)]
+        if not nodes:
+            return
+        total = sum(n.engines.active_batch_slots() for n in nodes)
+        attempts = 0
+        i = 0
+        while total < self.cfg.min_replicas and attempts <= len(nodes):
+            n = nodes[i % len(nodes)]
+            if n.engines.active_batch_slots() < self.cfg.max_per_node:
+                n.engines.add_batch_slot()
+                total += 1
+                attempts = 0
+            else:
+                attempts += 1
+            i += 1
+
+    def _tick(self):
+        cfg = self.cfg
+        now = self.loop.now
+        nodes = [n for n in self._nodes() if n.alive and self._is_batch(n)]
+        for n in nodes:                    # nodes booted since last tick
+            if n.engines.on_batch_starved is None:
+                n.engines.on_batch_starved = (lambda n=n: self._starved(n))
+        total_active = sum(
+            n.engines.active_batch_slots() + self._pending.get(id(n), 0)
+            for n in nodes
+        )
+        for n in nodes:
+            eng = n.engines
+            nid = id(n)
+            pending = self._pending.get(nid, 0)
+            eff = eng.active_batch_slots() + pending
+            backlog = eng.batch_queued_units()
+            inflight = eng.batch_inflight_units
+            # ---- scale up on queue pressure / coalesced-step headroom
+            if backlog > 0 and eff < cfg.max_per_node:
+                cap = eff * eng.max_batch
+                pressured = (
+                    eff == 0
+                    or backlog > cfg.target_queue_per_replica * eff
+                    or backlog + inflight >= cfg.headroom_fraction * cap
+                )
+                if pressured:
+                    self.scale_ups += 1
+                    self._pending[nid] = pending + 1
+                    self._log(f"replica_up {n.name} backlog={backlog} "
+                              f"active={eff}")
+
+                    def activate(n=n, nid=nid, t0=now):
+                        self._pending[nid] -= 1
+                        if not n.alive:
+                            return
+                        n.engines.add_batch_slot()
+                        self.scaleup_latencies.append(self.loop.now - t0)
+                        self._log(f"replica_ready {n.name} "
+                                  f"lat={self.loop.now - t0:.6f}")
+
+                    self.loop.after(cfg.boot_s, activate)
+                    total_active += 1
+                    eff += 1
+            # ---- idle clock / scale down (one replica per node per tick)
+            if backlog > 0 or inflight > 0 or eng.active_batch_slots() == 0:
+                self._idle_since.pop(nid, None)
+            else:
+                since = self._idle_since.setdefault(nid, now)
+                if (now - since >= cfg.keepalive_s
+                        and total_active - 1 >= cfg.min_replicas
+                        and eng.retire_batch_slot()):
+                    self.scale_downs += 1
+                    total_active -= 1
+                    self._log(f"replica_down {n.name}")
+                    if eng.active_batch_slots() == 0:
+                        self._idle_since.pop(nid, None)
+        self.loop.after(cfg.tick_interval_s, self._tick, daemon=True)
+
+    def summary(self) -> Dict[str, float]:
+        lats = self.scaleup_latencies
+        return {
+            "replica_scale_ups": self.scale_ups,
+            "replica_scale_downs": self.scale_downs,
+            "scaleup_latency_max_s": max(lats) if lats else 0.0,
+            "scaleup_latency_avg_s": sum(lats) / len(lats) if lats else 0.0,
+        }
+
+
+class BatchRouter:
+    """Marginal-latency estimator behind the ``batch_aware`` routing
+    policy: score each candidate node by when its *next coalesced step*
+    could absorb this composition's batchable units, instead of by
+    shortest invocation queue.
+
+    ``estimate`` prices a node as (queued + in-flight units) divided by
+    active-replica step capacity, times the replica's full-batch
+    ``BatchStepModel.step_s`` — plus a ``spinup_s`` penalty when no
+    replica is active and a ``cold_s`` penalty when the node's
+    ``WeightStore`` holds none of the composition's models resident.
+    Ties break on invocation load then stable node order, so with one
+    replica/one model (every estimate equal) the decision sequence is
+    exactly the least-outstanding policy's — the degeneration contract
+    pinned by tests/test_fleet_serving.py. No RNG is consumed."""
+
+    def __init__(self, *, spinup_s: float = 0.3, cold_s: float = 0.0):
+        self.spinup_s = spinup_s
+        self.cold_s = cold_s
+        self.decisions = 0
+
+    def estimate(self, node: WorkerNode, units: int, fns=()) -> float:
+        eng = node.engines
+        model = eng.batch_model
+        if model is None and eng.batch_models:
+            model = next(iter(eng.batch_models.values()))
+        if model is None:
+            return float("inf")
+        mb = max(eng.max_batch, 1)
+        units = min(max(units, 1), mb)
+        active = eng.active_batch_slots()
+        if active == 0:
+            est = self.spinup_s + model.step_s(units)
+        else:
+            backlog = eng.batch_queued_units() + eng.batch_inflight_units
+            est = (backlog / (active * mb)) * model.step_s(mb) \
+                + model.step_s(units)
+        if self.cold_s > 0.0:
+            ws = node.weight_store
+            if ws is not None and not ws.pinned:
+                for fn in fns:
+                    if not ws.fn_resident(fn):
+                        est += self.cold_s
+                        break
+        return est
+
+    def pick(self, nodes: List[WorkerNode], comp: Composition, registry,
+             load: Callable[[WorkerNode], float]):
+        """Best node for ``comp`` by marginal estimate, or None when the
+        composition has no batchable work (caller falls back to its
+        default policy)."""
+        units = composition_batch_units(comp, registry)
+        if units == 0 or not nodes:
+            return None
+        fns = composition_functions(comp)
+        best = None
+        best_key = None
+        for i, n in enumerate(nodes):
+            key = (self.estimate(n, units, fns), load(n), i)
+            if best_key is None or key < best_key:
+                best, best_key = n, key
+        self.decisions += 1
+        return best
+
+
 @dataclass
 class ControlPlaneConfig:
     min_nodes: int = 1
@@ -104,6 +402,12 @@ class ControlPlaneConfig:
     # runtime/OS footprint committed while a node is up (used when the
     # factory does not set WorkerNode.base_bytes)
     node_base_bytes: int = 256 << 20
+    # ---- serving-tier elasticity: BATCH-replica autoscaling inside the
+    # pool, and marginal-latency routing over those replicas
+    replicas: Optional[ReplicaConfig] = None
+    route_policy: str = "affinity"   # "affinity" | "batch_aware"
+    batch_router: Optional[BatchRouter] = None  # default-built when
+                                                # route_policy=batch_aware
 
 
 @dataclass
@@ -153,8 +457,26 @@ class ElasticControlPlane:
         # boots or adopts is attached so its dispatcher exports ready
         # vertices back to the cluster layer
         self.placer = None
+        if self.cfg.route_policy not in ("affinity", "batch_aware"):
+            raise ValueError(
+                f"unknown route_policy {self.cfg.route_policy!r}")
+        self.batch_router: Optional[BatchRouter] = (
+            self.cfg.batch_router
+            or (BatchRouter() if self.cfg.route_policy == "batch_aware"
+                else None)
+        )
         for _ in range(self.cfg.min_nodes):
             self._boot_node(instant=True)
+        self.replica_autoscaler: Optional[ReplicaAutoscaler] = None
+        if self.cfg.replicas is not None:
+            self.replica_autoscaler = ReplicaAutoscaler(
+                loop,
+                lambda: [m.node for m in self.members
+                         if m.state == ACTIVE and m.node.alive],
+                config=self.cfg.replicas,
+                journal=journal,
+            )
+            self.replica_autoscaler.start()
 
     # ------------------------------------------------------------- pool
     @property
@@ -165,6 +487,13 @@ class ElasticControlPlane:
     @property
     def active_count(self) -> int:
         return sum(1 for m in self.members if m.state == ACTIVE)
+
+    @property
+    def active_nodes(self) -> List[WorkerNode]:
+        """Alive ACTIVE nodes — the set new work may land on (draining
+        nodes finish what they have but take nothing new)."""
+        return [m.node for m in self.members
+                if m.state == ACTIVE and m.node.alive]
 
     def _log(self, msg: str):
         if self.journal is not None:
@@ -263,6 +592,17 @@ class ElasticControlPlane:
         active = [m for m in self.members if m.state == ACTIVE and m.node.alive]
         if not active:
             raise RuntimeError("no active nodes")
+        if self.batch_router is not None:
+            by_node = {id(m.node): m for m in active}
+            picked = self.batch_router.pick(
+                [m.node for m in active], comp, active[0].node.registry,
+                load=lambda n: by_node[id(n)].outstanding,
+            )
+            if picked is not None:
+                m = by_node[id(picked)]
+                self.stats.record_route(m.node.name, affinity=False)
+                self._log(f"route {m.node.name} batch out={m.outstanding}")
+                return m.node
         fns = composition_functions(comp)
         pick, kind = self._pick_two_level(active, fns, lambda m: m.outstanding)
         self.stats.record_route(pick.node.name, affinity=(kind == "affinity"))

@@ -87,6 +87,9 @@ class Vertex:
     context_bytes: int = 1 << 20   # user-declared memory requirement
     timeout_s: float = 60.0
     retry: Optional[RetryPolicy] = None   # None -> dispatcher default
+    # units of a coalesced BATCH step this vertex occupies when its
+    # function is batchable (chunked prefill spans several; default 1)
+    batch_units: int = 1
 
     def __getitem__(self, set_name: str) -> PortRef:
         if set_name not in self.inputs and set_name not in self.outputs:

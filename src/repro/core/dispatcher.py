@@ -379,8 +379,21 @@ class Dispatcher:
         if not vr.instances:
             self._vertex_done(inv, vr)
             return
-        for inst in vr.instances:
-            self._submit_instance(inv, vr, inst)
+        placer = self.placer
+        if (
+            placer is not None
+            and getattr(placer, "spread_instances", False)
+            and len(vr.instances) > 1
+            and vr.vertex.kind == COMPUTE
+            and vr.exec_engines is None
+        ):
+            # fan-out spreading: the placer scatters instances across the
+            # cluster (vr stays home-anchored; outputs gather back before
+            # downstream vertices consume them)
+            placer.spread(self, inv, vr)
+        else:
+            for inst in vr.instances:
+                self._submit_instance(inv, vr, inst)
         if (
             self.hedge_after_s > 0
             and len(vr.instances) >= self.hedge_min_instances
@@ -408,16 +421,27 @@ class Dispatcher:
     # ------------------------------------------------------------------
     def _submit_instance(
         self, inv: InvocationRun, vr: VertexRun, inst: InstanceState,
-        attempts: int = 0,
-    ):
+        attempts: int = 0, remote: Optional[Any] = None,
+    ) -> Task:
+        """Build and submit one instance's engine task. ``remote`` (a
+        WorkerNode, set only by the placer's instance spreading) overrides
+        the executing engines/caches/weights per *instance* — retries of
+        a spread instance fall back to the home node."""
         v = vr.vertex
         kind = COMM if v.kind == COMM else COMPUTE
-        engines = vr.exec_engines or self.engines
+        if remote is not None:
+            engines = remote.engines
+        else:
+            engines = vr.exec_engines or self.engines
         # batchable compute vertices go to the executing node's batching
         # engine when it models one; platforms without batch slots run
         # them as ordinary compute tasks (identical dataflow, unshared
-        # step durations — the batching-off baseline)
-        if kind == COMPUTE and engines.batch_slots:
+        # step durations — the batching-off baseline). The probe is
+        # "models a batching engine", not "has live replicas": an elastic
+        # node (per-fn batch_models) scaled to zero must queue batch work
+        # where the replica autoscaler can see it, not leak it onto CPU
+        # slots
+        if kind == COMPUTE and engines._models_batching():
             cf = self.registry.functions.get(v.function)
             if cf is None:
                 cf = self.registry.get(v.function)  # contractual KeyError
@@ -428,6 +452,8 @@ class Dispatcher:
         code_cache = (
             self.code_cache if vr.exec_engines is None else vr.exec_code_cache
         )
+        if remote is not None:
+            code_cache = remote.code_cache
         cached = True
         if kind != COMM and code_cache is not None:
             cached = code_cache.touch(v.function)
@@ -444,6 +470,9 @@ class Dispatcher:
         # code miss must never bill a weight load that is resident
         cold_setup = not cached
         weights = self.weights if vr.exec_engines is None else vr.exec_weights
+        if remote is not None:
+            weights = remote.weight_store
+            meta["engines"] = engines   # failure flush needs the real queue
         if kind != COMM and weights is not None and weights.handles(v.function):
             cold_setup = not weights.touch(v.function)
             meta["wstore"] = weights
@@ -455,6 +484,7 @@ class Dispatcher:
             profile=self.profiles.get(v.function),
             cached=cached,
             cold_setup=cold_setup,
+            batch_units=v.batch_units if kind == BATCH else 1,
             timeout_s=v.timeout_s,
             attempts=attempts,
             meta=meta,
@@ -465,6 +495,7 @@ class Dispatcher:
             inst.attempts = attempts
         inv.live_tasks[id(task)] = task
         engines.submit(task)
+        return task
 
     def _hedge(self, inv: InvocationRun, vr: VertexRun):
         if inv.failed or vr.n_done == len(vr.instances):
@@ -651,7 +682,8 @@ class Dispatcher:
         # keep their already-charged busy time; their callbacks observe
         # inv.failed and release through the normal path)
         for task in list(inv.live_tasks.values()):
-            engines = task.meta["vr"].exec_engines or self.engines
+            engines = (task.meta.get("engines")          # spread instance
+                       or task.meta["vr"].exec_engines or self.engines)
             if id(task) not in engines.inflight_tasks:
                 task.cancelled = True
                 release_task_weights(task)

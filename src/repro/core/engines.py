@@ -45,7 +45,18 @@ amortizes over co-resident sequences, so ``step_s(8) << 8 * step_s(1)``.
 Each coalesced task still executes its own payload (real token streams
 flow through the DAG, identical with batching on or off); only the
 virtual duration is shared. Batch slots exist only when
-``batch_slots > 0`` and never retype.
+``batch_slots > 0`` and never retype — but unlike CPU slots they can be
+*added* (``add_batch_slot``, autoscaler scale-up, optionally committing
+a per-replica activation arena) and *retired* with drain-before-retire
+(``retire_batch_slot``: a draining replica finishes its in-flight step
+and never pulls new work — pinned by tests/test_fleet_serving.py). A
+step coalesces tasks of ONE function only (multiplexed models never
+share a step) and admits up to ``max_batch`` *units* — a chunked
+prefill counts ``task.batch_units`` slots of the step — priced by the
+per-function ``batch_models`` entry when present, else the node-level
+``batch_model``. All of this collapses to the original single-model
+behavior when every task has ``batch_units == 1`` and no per-function
+model is registered (the byte-identity contract).
 """
 from __future__ import annotations
 
@@ -67,6 +78,7 @@ from repro.core.sim import EventLoop
 COMPUTE, COMM = "compute", "comm"
 TRANSFER = "transfer"   # modeled inter-node byte movement (comm slots)
 BATCH = "batch"         # coalesced serving steps (model-replica slots)
+RETIRED = "retired"     # a drained batch replica's slot id (never serves)
 
 
 @dataclass(slots=True)
@@ -83,6 +95,9 @@ class Task:
     # residency miss). Kept separate from ``cached`` so a code-cache
     # miss can never bill a weight load the WeightStore says is resident
     cold_setup: bool = False
+    # BATCH tasks: units of the coalesced step this task occupies (a
+    # chunked prefill spans several; plain decode steps span one)
+    batch_units: int = 1
     timeout_s: float = 60.0
     attempts: int = 0
     cancelled: bool = False
@@ -119,6 +134,7 @@ class EngineSlot:
         self.inflight = 0           # comm green tasks in flight
         self.max_inflight = 128
         self.in_idle = False        # present (live) in node's idle list
+        self.draining = False       # batch replica: retire after this step
 
     # ------------------------------------------------------------------
     def _serve_compute(self, task: Task):
@@ -337,12 +353,18 @@ class EngineSlot:
             if setup_s > setup_span:
                 setup_span = setup_s
 
-        step_s = node.batch_model.step_s(len(served))
+        units = 0
+        for task in tasks:
+            units += task.batch_units
+        model = node.batch_models.get(tasks[0].fn_name) or node.batch_model
+        step_s = model.step_s(units)
+        node.batch_inflight_units += units
         total = setup_span + step_s
         node.stats_busy(BATCH, total)
 
         def finish():
             self.busy = False
+            node.batch_inflight_units -= units
             for task, ctx, outputs, setup_s in served:
                 node.inflight_tasks.discard(id(task))
                 # same timeout contract as the compute path (a task whose
@@ -388,7 +410,11 @@ class EngineSet:
         batch_slots: int = 0,
         batch_model=None,            # workloads.BatchStepModel (required
                                      # when batch_slots > 0)
+        batch_models=None,           # per-fn {fn_name: BatchStepModel}
+                                     # overrides for multiplexed models
         max_batch: int = 32,
+        replica_bytes: int = 0,      # per-replica activation arena,
+                                     # committed while the replica is up
     ):
         self.loop = loop
         self.registry = registry
@@ -399,11 +425,23 @@ class EngineSet:
         self.compute_q: deque = deque()
         self.comm_q: deque = deque()
         self.batch_q: deque = deque()
-        if batch_slots > 0 and batch_model is None:
+        if batch_slots > 0 and batch_model is None and not batch_models:
             raise ValueError("batch slots need a BatchStepModel")
         self.batch_slots = batch_slots
         self.batch_model = batch_model
+        self.batch_models: Dict[str, Any] = dict(batch_models or {})
         self.max_batch = max_batch
+        self.replica_bytes = replica_bytes
+        self.batch_inflight_units = 0   # units inside in-flight steps
+        self._batch_draining = 0        # replicas marked, not yet retired
+        # liveness hook (set by ReplicaAutoscaler.start): called
+        # synchronously when batchable work queues with ZERO active
+        # replicas, so the scale-up boot — a non-daemon event — keeps
+        # the loop alive instead of stranding the task behind a tick
+        # that only fires while something else is scheduled
+        self.on_batch_starved: Optional[Callable[[], None]] = None
+        self.replicas_added = 0
+        self.replicas_retired = 0
         self.slots: List[EngineSlot] = []
         # per-kind idle free-lists: min-heaps of slot ids, so dispatch
         # always picks the lowest-numbered idle slot (the same assignment
@@ -426,6 +464,8 @@ class EngineSet:
             self._counts[BATCH] += 1
             s.in_idle = True
             self._idle[BATCH].append(i)
+        if replica_bytes and batch_slots:
+            self.tracker.commit(replica_bytes * batch_slots)
         self.busy_s = {COMPUTE: 0.0, COMM: 0.0, BATCH: 0.0}
         self._arrivals = {COMPUTE: 0, COMM: 0, BATCH: 0}
         self.inflight_tasks: set = set()
@@ -485,6 +525,9 @@ class EngineSet:
                 continue
             slot = self._pop_idle(kind)
             if slot is None:
+                if (kind == BATCH and self.on_batch_starved is not None
+                        and self.active_batch_slots() == 0):
+                    self.on_batch_starved()
                 return
             if kind == BATCH:
                 self._serve_batch_slot(slot)
@@ -492,16 +535,30 @@ class EngineSet:
                 self._serve(slot, kind, q.popleft())
 
     def _serve_batch_slot(self, slot: EngineSlot):
-        """Coalesce every queued batchable task (up to ``max_batch``, in
-        FIFO order) into one modeled step on ``slot``."""
+        """Coalesce the FIFO prefix of same-function queued tasks (up to
+        ``max_batch`` units) into one modeled step on ``slot``. Tasks of
+        a different function stay queued for the next step — multiplexed
+        models never share one accelerator step. With one model and
+        unit tasks this selects exactly the original FIFO prefix."""
         q = self.batch_q
         tasks: List[Task] = []
-        while q and len(tasks) < self.max_batch:
-            task = q.popleft()
+        units = 0
+        key = None
+        while q and units < self.max_batch:
+            task = q[0]
             if task.cancelled:
+                q.popleft()
                 continue
+            if key is None:
+                key = task.fn_name
+            elif task.fn_name != key:
+                break
+            if tasks and units + task.batch_units > self.max_batch:
+                break       # next task would overflow the step
+            q.popleft()
             self.note_queue_delay(BATCH, self.loop.now - task.enqueue_t)
             tasks.append(task)
+            units += task.batch_units
         if not tasks:       # everything queued had been cancelled
             slot.in_idle = True
             heapq.heappush(self._idle[BATCH], slot.slot_id)
@@ -512,6 +569,11 @@ class EngineSet:
         """A slot finished (or freed its CPU phase): apply any pending
         retype, then pull the next queued task directly, else go idle."""
         if slot.busy:
+            return
+        if slot.draining:
+            # drain-before-retire: the replica's last step just finished
+            # (or it was idle); it leaves the pool without pulling work
+            self._finish_retire(slot)
             return
         if slot.retype_to and slot.inflight == 0:
             # the slot may sit in its old kind's free-list (idle comm slot
@@ -534,6 +596,16 @@ class EngineSet:
         elif not slot.in_idle:
             slot.in_idle = True
             heapq.heappush(self._idle[kind], slot.slot_id)
+
+    def _models_batching(self) -> bool:
+        """Whether this node models a batching engine at all. Per-fn
+        ``batch_models`` declares elastic capability — it stays True while
+        the replica pool is scaled to zero (slot count is load state, not
+        capability), so batchable work queues where the autoscaler sees
+        it. The legacy single ``batch_model`` only batches while slots
+        exist (byte-identity: such nodes historically fell back to the
+        COMPUTE engine at ``batch_slots=0``)."""
+        return self.batch_slots > 0 or bool(self.batch_models)
 
     def poke(self):
         """Re-sync queues with idle slots (O(1) when queues are empty)."""
@@ -558,13 +630,13 @@ class EngineSet:
         appears only on nodes that model a batching engine, so platforms
         without one keep their pre-serving dict shape."""
         c = {COMPUTE: self._counts[COMPUTE], COMM: self._counts[COMM]}
-        if self.batch_slots:
+        if self._models_batching():
             c[BATCH] = self._counts[BATCH]
         return c
 
     def queue_lengths(self) -> Dict[str, int]:
         q = {COMPUTE: len(self.compute_q), COMM: len(self.comm_q)}
-        if self.batch_slots:
+        if self._models_batching():
             q[BATCH] = len(self.batch_q)
         return q
 
@@ -586,6 +658,81 @@ class EngineSet:
                     self.slot_available(s)
                 return True
         return False
+
+    # ----------------------------------------------- replica lifecycle
+    def add_batch_slot(self) -> int:
+        """Bring one more BATCH replica online (autoscaler scale-up).
+        The new slot takes the next slot id, so CPU slot numbering —
+        and every static benchmark's slot pairing — is untouched. Any
+        ``replica_bytes`` activation arena commits while the replica is
+        up. Queued batch work dispatches to it immediately."""
+        if self.batch_model is None and not self.batch_models:
+            raise ValueError("batch replicas need a BatchStepModel")
+        i = len(self.slots)
+        s = EngineSlot(self, i, BATCH)
+        self.slots.append(s)
+        self._counts[BATCH] += 1
+        self.batch_slots += 1
+        self.replicas_added += 1
+        if self.replica_bytes:
+            self.tracker.commit(self.replica_bytes)
+        s.in_idle = True
+        heapq.heappush(self._idle[BATCH], i)
+        self._dispatch(BATCH)
+        return i
+
+    def retire_batch_slot(self) -> bool:
+        """Drain-before-retire one BATCH replica. An idle replica leaves
+        immediately; a busy one finishes its in-flight coalesced step
+        and then leaves — a draining replica never pulls new work.
+        Prefers an idle replica, highest slot id first (LIFO, mirroring
+        scale-up order). Returns False when no replica is retirable."""
+        idle_pick = busy_pick = None
+        for s in reversed(self.slots):
+            if s.kind != BATCH or s.draining:
+                continue
+            if not s.busy:
+                if idle_pick is None:
+                    idle_pick = s
+            elif busy_pick is None:
+                busy_pick = s
+        s = idle_pick or busy_pick
+        if s is None:
+            return False
+        s.draining = True
+        self._batch_draining += 1
+        if not s.busy:
+            self._finish_retire(s)
+        return True
+
+    def _finish_retire(self, s: EngineSlot):
+        # the slot id stays allocated (stable numbering; stale free-list
+        # entries are skipped by the _pop_idle kind check) but the slot
+        # can never serve again
+        s.draining = False
+        s.in_idle = False
+        s.kind = RETIRED
+        self._batch_draining -= 1
+        self._counts[BATCH] -= 1
+        self.batch_slots -= 1
+        self.replicas_retired += 1
+        if self.replica_bytes:
+            self.tracker.release(self.replica_bytes)
+        # the pool may have drained to zero with work still queued (the
+        # retired replica was the last): same liveness kick as _dispatch
+        if (self.on_batch_starved is not None
+                and self.active_batch_slots() == 0
+                and any(not t.cancelled for t in self.batch_q)):
+            self.on_batch_starved()
+
+    def active_batch_slots(self) -> int:
+        """BATCH replicas that will still pull new work (not draining)."""
+        return self._counts[BATCH] - self._batch_draining
+
+    def batch_queued_units(self) -> int:
+        """Live units waiting in the batch queue (the autoscaler's and
+        router's backlog signal; O(queue), called per tick not per event)."""
+        return sum(t.batch_units for t in self.batch_q if not t.cancelled)
 
     def execute_payload(self, task: Task, ctx: MemoryContext):
         """Warm-start execution (no cold-start phases)."""

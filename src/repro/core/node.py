@@ -66,7 +66,10 @@ class WorkerNode:
         base_bytes: int = 0,           # node runtime/OS footprint while up
         batch_slots: int = 0,          # >0 -> model a batching engine
         batch_model=None,              # workloads.BatchStepModel
+        batch_models=None,             # per-fn {fn_name: BatchStepModel};
+                                       # declares elastic batch capability
         max_batch: int = 32,
+        replica_bytes: int = 0,        # RAM arena committed per replica
         weight_store=None,             # workloads.WeightStore (unbound)
         seed: int = 0,
         name: str = "node0",
@@ -87,7 +90,9 @@ class WorkerNode:
             seed=seed,
             batch_slots=batch_slots,
             batch_model=batch_model,
+            batch_models=batch_models,
             max_batch=max_batch,
+            replica_bytes=replica_bytes,
         )
         self.controller = PIController(
             self.engines,

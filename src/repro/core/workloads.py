@@ -27,6 +27,15 @@ compositions do not:
     request never loses its weights between two back-to-back decode
     steps even at ``keepalive_s=0`` (the per-request-cold policy).
 
+    With ``capacity_bytes`` set, the store also models node-RAM
+    contention between multiplexed models: a commit that would exceed
+    capacity first evicts resident *idle* models (``inflight == 0``,
+    never pinned) in least-recently-touched order, registration order
+    breaking exact-time ties — the documented deterministic policy the
+    multiplexing tests pin. A task that has touched its model holds an
+    inflight reference until ``task_done``, so eviction can never take
+    weights out from under a queued or running step.
+
 Contract / determinism invariants:
 
   * ``WeightStore`` commits/releases through the node's
@@ -109,6 +118,8 @@ class _ModelState:
     idle_since: float = 0.0
     touches: int = 0
     cold_touches: int = 0
+    last_touch_t: float = 0.0  # LRU clock for capacity eviction
+    evictions: int = 0
 
 
 class WeightStore:
@@ -123,18 +134,31 @@ class WeightStore:
     completes, fails, or is cancelled.
     """
 
-    def __init__(self, *, keepalive_s: float = 0.0, pinned: bool = False):
+    def __init__(
+        self,
+        *,
+        keepalive_s: float = 0.0,
+        pinned: bool = False,
+        capacity_bytes: Optional[int] = None,
+    ):
         self.keepalive_s = keepalive_s
         self.pinned = pinned
+        self.capacity_bytes = capacity_bytes
         self.loop: Optional[EventLoop] = None
         self.tracker: Optional[MemoryTracker] = None
         self._models: Dict[str, _ModelState] = {}
         self._by_fn: Dict[str, str] = {}     # fn_name -> model name
+        self._reg_order: Dict[str, int] = {}  # model -> registration index
+        self.evictions = 0
+        self.evicted_bytes = 0
+        self.over_capacity = 0   # commits forced past capacity (no victim)
+        self.eviction_log: list = []         # (virtual t, model) journal
 
     # ------------------------------------------------------------------
     def register(self, model: str, param_bytes: int, fn_names) -> None:
         st = self._models.setdefault(model, _ModelState(param_bytes=param_bytes))
         st.param_bytes = param_bytes
+        self._reg_order.setdefault(model, len(self._reg_order))
         for fn in fn_names:
             self._by_fn[fn] = model
 
@@ -155,6 +179,12 @@ class WeightStore:
 
     def resident(self, model: str) -> bool:
         return self._models[model].resident
+
+    def fn_resident(self, fn_name: str) -> bool:
+        """True when ``fn_name``'s model is resident (or the store does
+        not handle it) — the router's cold-penalty probe."""
+        model = self._by_fn.get(fn_name)
+        return True if model is None else self._models[model].resident
 
     @property
     def resident_bytes(self) -> int:
@@ -179,13 +209,46 @@ class WeightStore:
         st = self._models[model]
         st.inflight += 1
         st.touches += 1
+        st.last_touch_t = self.loop.now if self.loop is not None else 0.0
         if st.resident:
             return True
         st.cold_touches += 1
+        if self.capacity_bytes is not None:
+            self._evict_for(st)
         st.resident = True
         if self.tracker is not None:
             self.tracker.commit(st.param_bytes)
         return self.pinned  # a pinned store never pays the cold term
+
+    def _evict_for(self, incoming: _ModelState) -> None:
+        """Make room for ``incoming`` under ``capacity_bytes`` by evicting
+        resident idle models, least-recently-touched first (registration
+        order breaks exact-time ties). Models with inflight tasks are
+        never victims — their refcount holds the weights; if no victim
+        set suffices, the commit proceeds over capacity (counted)."""
+        need = incoming.param_bytes
+        resident = self.resident_bytes
+        if resident + need <= self.capacity_bytes:
+            return
+        victims = sorted(
+            (name for name, st in self._models.items()
+             if st is not incoming and st.resident and st.inflight == 0),
+            key=lambda name: (self._models[name].last_touch_t,
+                              self._reg_order[name]),
+        )
+        now = self.loop.now if self.loop is not None else 0.0
+        for name in victims:
+            if resident + need <= self.capacity_bytes:
+                break
+            st = self._models[name]
+            self._release(st)
+            resident -= st.param_bytes
+            st.evictions += 1
+            self.evictions += 1
+            self.evicted_bytes += st.param_bytes
+            self.eviction_log.append((now, name))
+        if resident + need > self.capacity_bytes:
+            self.over_capacity += 1
 
     def task_done(self, fn_name: str) -> None:
         """Balance a prior ``touch``: the task completed, failed, or was
@@ -229,4 +292,7 @@ class WeightStore:
             "touches": touches,
             "cold_touches": colds,
             "cold_rate": colds / touches if touches else 0.0,
+            "evictions": self.evictions,
+            "evicted_bytes": self.evicted_bytes,
+            "over_capacity": self.over_capacity,
         }

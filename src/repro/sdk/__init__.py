@@ -39,7 +39,11 @@ Minimal application:
 Error taxonomy in ``repro.sdk.errors``; full reference in docs/API.md.
 """
 from repro.core.coldstart import ColdStartProfile, TransferProfile
-from repro.core.control_plane import ControlPlaneConfig
+from repro.core.control_plane import (
+    BatchRouter,
+    ControlPlaneConfig,
+    ReplicaConfig,
+)
 from repro.core.dag import RetryPolicy
 from repro.core.http import HttpRequest, HttpResponse
 from repro.core.items import Item
@@ -97,9 +101,11 @@ __all__ = [
     "ValidationError",
     "WiringError",
     # convenience re-exports (core types SDK apps touch constantly)
+    "BatchRouter",
     "BatchStepModel",
     "ColdStartProfile",
     "ControlPlaneConfig",
+    "ReplicaConfig",
     "HttpRequest",
     "HttpResponse",
     "Item",

@@ -241,7 +241,8 @@ class App:
     def _add_compute(self, spec: FunctionSpec, *, name: Optional[str],
                      context_bytes: Optional[int], timeout_s: Optional[float],
                      ports: dict,
-                     retry: Optional[RetryPolicy] = None) -> VertexHandle:
+                     retry: Optional[RetryPolicy] = None,
+                     batch_units: Optional[int] = None) -> VertexHandle:
         vname = self._new_vertex_name(name or spec.name)
         self._adopt_spec(spec)
         self.comp.compute(
@@ -251,6 +252,11 @@ class App:
             timeout_s=spec.timeout_s if timeout_s is None else timeout_s,
             retry=spec.retry if retry is None else retry,
         )
+        if batch_units is not None:
+            if batch_units < 1:
+                raise WiringError(
+                    f"{vname}: _batch_units must be >= 1, got {batch_units}")
+            self.comp.vertices[vname].batch_units = batch_units
         handle = VertexHandle(self, vname, spec.inputs, spec.outputs)
         self._wire(handle, ports)
         self._validated = False

@@ -157,13 +157,16 @@ class FunctionSpec:
     def __call__(self, *args, _name: Optional[str] = None,
                  _context_bytes: Optional[int] = None,
                  _timeout_s: Optional[float] = None,
-                 _retry: Optional[RetryPolicy] = None, **ports):
+                 _retry: Optional[RetryPolicy] = None,
+                 _batch_units: Optional[int] = None, **ports):
         """Inside ``with sdk.composition(...)``: add a compute vertex fed
         by ``ports`` (output ports / ``app.input`` refs / ``each``/``key``
         wrappers) and return its handle. ``_name`` overrides the vertex
         name (default: the function name); ``_context_bytes``,
         ``_timeout_s``, and ``_retry`` override the declared per-vertex
-        resources / failure policy.
+        resources / failure policy; ``_batch_units`` declares how many
+        units of a coalesced BATCH step this vertex occupies when the
+        function is batchable (chunked prefill spans several).
 
         Called with a single ``SetDict`` positional argument instead, the
         payload executes directly (no platform involved).
@@ -186,6 +189,7 @@ class FunctionSpec:
         return app._add_compute(
             self, name=_name, context_bytes=_context_bytes,
             timeout_s=_timeout_s, retry=_retry, ports=ports,
+            batch_units=_batch_units,
         )
 
 

@@ -138,7 +138,13 @@ class NodeSpec:
     base_bytes: int = 0
     batch_slots: int = 0
     batch_model: Any = None
+    # per-fn {fn_name: BatchStepModel}: multiplexed models on one node,
+    # and the marker for *elastic* batch capability (work queues on the
+    # BATCH engine even while the replica pool is scaled to zero)
+    batch_models: Any = None
     max_batch: int = 32
+    # RAM arena committed per batch replica (KV/activation working set)
+    replica_bytes: int = 0
     weight_store: Any = None
     seed: int = 0
     # None -> auto-named: "node0" single, "node<i>" in a pool, control-
@@ -168,7 +174,9 @@ class NodeSpec:
             base_bytes=self.base_bytes,
             batch_slots=self.batch_slots,
             batch_model=self.batch_model,
+            batch_models=self.batch_models,
             max_batch=self.max_batch,
+            replica_bytes=self.replica_bytes,
             weight_store=ws,
             seed=self.seed,
             name=name,
@@ -298,6 +306,9 @@ class Platform:
         transfer_profile: Optional[TransferProfile] = None,
         memoize: bool = True,
         restart_attempts: int = 3,
+        route_policy: str = "outstanding",
+        batch_router: Any = None,
+        crossnode_spread: Optional[bool] = None,
     ):
         shapes = [s for s in (node, pool, elastic) if s is not None]
         if len(shapes) > 1:
@@ -325,7 +336,15 @@ class Platform:
         # the elastic factory's nodes) all read the same dict
         self.profiles: Dict[str, ColdStartProfile] = \
             profiles if profiles is not None else {}
+        if route_policy != "outstanding" and pool is None:
+            raise DeploymentError(
+                "route_policy= configures static-pool routing; elastic "
+                "shapes set ControlPlaneConfig.route_policy instead"
+            )
         self._crossnode = crossnode
+        self._crossnode_spread = crossnode_spread
+        self._route_policy = route_policy
+        self._batch_router = batch_router
         self._transfer_links = transfer_links
         self._transfer_profile = transfer_profile
         # node-death re-execution budget for cluster shapes
@@ -418,6 +437,7 @@ class Platform:
             self._cluster = ClusterManager(
                 control_plane=self._cp,
                 crossnode=self._crossnode,
+                crossnode_spread=self._crossnode_spread,
                 transfer_links=self._transfer_links,
                 transfer_profile=self._transfer_profile,
                 restart_attempts=self._restart_attempts,
@@ -438,9 +458,12 @@ class Platform:
             self._cluster = ClusterManager(
                 nodes, self.loop,
                 crossnode=self._crossnode,
+                crossnode_spread=self._crossnode_spread,
                 transfer_links=self._transfer_links,
                 transfer_profile=self._transfer_profile,
                 restart_attempts=self._restart_attempts,
+                route_policy=self._route_policy,
+                batch_router=self._batch_router,
             )
         else:
             self._worker = self._node_spec.build(self)
@@ -474,6 +497,14 @@ class Platform:
         """The ``CrossNodePlacer`` when cross-node scheduling is on."""
         self._build()
         return None if self._cluster is None else self._cluster.placer
+
+    @property
+    def replica_autoscaler(self):
+        """The elastic shape's ``ReplicaAutoscaler`` (batch-replica
+        scaling), or None when not configured
+        (``ControlPlaneConfig.replicas``)."""
+        self._build()
+        return None if self._cp is None else self._cp.replica_autoscaler
 
     @property
     def latency(self):

@@ -1,0 +1,372 @@
+"""Fleet-serving invariants: replica autoscaling, batch-aware routing,
+multi-model multiplexing.
+
+Property tests (via tests/_hypothesis_compat) over small random fleets
+pin the contracts the fig13 serving benchmark builds on:
+
+  * **weights inflight-zero / freed-exactly-once** — after a fleet fully
+    drains, every node's ``WeightStore`` refcount is zero and committed
+    bytes equal exactly the still-resident weights plus the arenas of
+    the still-active batch replicas, across autoscaler scale-up/down
+    churn AND capacity eviction (no double-free, no leak);
+  * **no step on a draining replica** — ``EngineSlot._serve_batch``
+    never fires on a slot marked draining: retire-while-busy finishes
+    the in-flight step first (drain-before-retire);
+  * **every decode step runs on resident weights** — a task's model is
+    resident at serve time (the inflight refcount shields it from
+    eviction and keep-alive reaps), and each residency period pays
+    exactly one cold touch (cold touches == releases + still-resident);
+  * **multiplex eviction determinism** — two models on one
+    capacity-limited pool churn residency through LRU-idle eviction
+    deterministically (identical eviction journals and completion
+    timelines across runs, under both CROSSNODE settings and the
+    sharded loop) with token streams byte-identical to single-model
+    runs.
+
+The ``batch_aware``-degenerates-to-``outstanding`` identity proof lives
+with the other observational-identity tests in test_perf_identity.py.
+"""
+import pytest
+
+import numpy as np
+
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro import sdk
+from repro.apps.inference_service import (
+    LMSpec,
+    build_request_composition,
+    expected_tokens,
+    register_inference_service,
+)
+from repro.core import (
+    BatchRouter,
+    EventLoop,
+    FunctionRegistry,
+    Item,
+    ReplicaAutoscaler,
+    ReplicaConfig,
+    ShardedEventLoop,
+    WeightStore,
+    WorkerNode,
+)
+from repro.core.engines import EngineSlot
+
+SPEC_A = LMSpec()
+SPEC_B = LMSpec(name="lm-b", n_params=1.45e9, n_layers=20, d_model=1536)
+
+
+# ------------------------------------------------------------- fixtures
+def _replica_cfg(**kw):
+    base = dict(min_replicas=0, max_per_node=2, keepalive_s=0.4,
+                tick_interval_s=0.05, boot_s=0.02,
+                target_queue_per_replica=4.0)
+    base.update(kw)
+    return ReplicaConfig(**base)
+
+
+def _fleet(n_nodes, specs, *, capacity=None, ws_keepalive=100.0, loop=None,
+           crossnode=None, arena=1 << 20, seed0=40, cfg=None):
+    """An elastic pool: zero replicas up front (``batch_slots=0`` with
+    per-fn ``batch_models`` marking the capability), batch-aware
+    routing, a ``ReplicaAutoscaler``, and per-node weight stores shared
+    by every registered model (capacity-limited when ``capacity``)."""
+    reg = FunctionRegistry()
+    svcs = [register_inference_service(reg, s) for s in specs]
+    batch_models, profiles = {}, {}
+    for svc in svcs:
+        batch_models.update(svc.batch_models)
+        profiles.update(svc.profiles)
+
+    def make_ws():
+        ws = WeightStore(keepalive_s=ws_keepalive, capacity_bytes=capacity)
+        for svc in svcs:
+            svc.register_weights(ws)
+        return ws
+
+    platform = sdk.Platform(
+        registry=reg, profiles=profiles, loop=loop, crossnode=crossnode,
+        pool=[sdk.NodeSpec(
+            num_slots=4, batch_slots=0, batch_models=batch_models,
+            max_batch=8, replica_bytes=arena, weight_store=make_ws,
+            seed=seed0 + i, name=f"fl{i}",
+        ) for i in range(n_nodes)],
+        route_policy="batch_aware",
+        batch_router=BatchRouter(
+            spinup_s=0.02,
+            cold_s=max(svc.weight_cold.total_s for svc in svcs),
+        ),
+    )
+    scaler = ReplicaAutoscaler(platform.loop, platform.nodes,
+                               config=cfg or _replica_cfg())
+    scaler.start()
+    return platform, scaler
+
+
+def _mixed_requests(n, n_models, seed, spread_s=1.5):
+    rng = np.random.default_rng(seed)
+    out = []
+    for rid in range(n):
+        t = float(rng.uniform(0.0, spread_s))
+        w = int(rng.integers(0, n_models))
+        p = int(rng.integers(6, 20))
+        d = int(rng.integers(2, 7))
+        prompt = (f"fleet{rid}:".encode() * p)[: 4 * p]
+        out.append((t, w, prompt, p, d))
+    out.sort(key=lambda r: r[0])
+    return out
+
+
+def _drive(platform, specs, reqs):
+    """Submit ``(t, model_idx, prompt, p, d)`` requests, run to drain,
+    return {rid: finished invocation}."""
+    done = {}
+
+    def arrivals():
+        for rid, (t, w, prompt, p, d) in enumerate(reqs):
+            comp = build_request_composition(
+                specs[w], prompt_len=p, n_decode=d)
+
+            def cb(inv, rid=rid):
+                done[rid] = inv
+            yield t, comp, {"prompt": [Item(prompt)]}, cb
+
+    platform.submit_stream(arrivals())
+    platform.run()
+    return done
+
+
+def _tokens_of(inv):
+    text = inv.outputs["text"][0].data.decode()
+    return [int(t) for t in text[len("tok:"):].split(",")]
+
+
+def _check_drained(platform, base_committed):
+    """The freed-exactly-once contract: after full drain, committed
+    bytes on every node are the build-time base plus still-resident
+    weights plus the KV arenas of still-active replicas — nothing else
+    (contexts freed, retired arenas released, no double-free)."""
+    for node, b0 in zip(platform.nodes, base_committed):
+        ws, eng = node.weight_store, node.engines
+        assert ws.inflight == 0
+        expect = b0 + ws.resident_bytes + eng.batch_slots * eng.replica_bytes
+        assert node.tracker.committed == expect, (
+            f"{node.name}: committed {node.tracker.committed} != {expect}")
+
+
+# ------------------------------------------- weights freed exactly once
+@settings(max_examples=6, deadline=None)
+@given(n_nodes=st.integers(2, 4), n_reqs=st.integers(4, 14),
+       seed=st.integers(0, 2 ** 20))
+def test_fleet_drain_frees_weights_and_arenas_exactly_once(
+        n_nodes, n_reqs, seed):
+    """Across autoscaler churn AND capacity eviction (two models, room
+    for ~one), inflight refcounts drain to zero and committed memory
+    closes the books exactly; every token stream matches the pure
+    reference."""
+    specs = (SPEC_A, SPEC_B)
+    capacity = int(1.25 * max(s.param_bytes for s in specs))
+    platform, scaler = _fleet(n_nodes, specs, capacity=capacity,
+                              ws_keepalive=0.3)
+    base = [n.tracker.committed for n in platform.nodes]
+    reqs = _mixed_requests(n_reqs, 2, seed)
+    done = _drive(platform, specs, reqs)
+    assert len(done) == n_reqs
+    for rid, (t, w, prompt, p, d) in enumerate(reqs):
+        assert not done[rid].failed, done[rid].failed
+        assert _tokens_of(done[rid]) == expected_tokens(prompt, specs[w], d)
+    assert scaler.scale_ups >= 1          # traffic actually booted replicas
+    _check_drained(platform, base)
+
+
+# ------------------------------- serve-time residency / draining guards
+def test_steps_never_serve_draining_or_cold_replicas(monkeypatch):
+    """Wrap the batch step server: it must never fire on a draining
+    slot, and every coalesced task's weights must be resident at serve
+    time. Each residency period pays exactly one cold touch."""
+    orig_serve = EngineSlot._serve_batch
+    served = [0]
+
+    def guarded(self, tasks):
+        assert not self.draining, "batch step served on a draining replica"
+        for t in tasks:
+            ws = t.meta.get("wstore")
+            if ws is not None:
+                assert ws.fn_resident(t.fn_name), (
+                    f"step for {t.fn_name} on non-resident weights")
+        served[0] += 1
+        return orig_serve(self, tasks)
+
+    monkeypatch.setattr(EngineSlot, "_serve_batch", guarded)
+
+    releases = []
+    orig_release = WeightStore._release
+
+    def counting(self, state):
+        releases.append(state)
+        return orig_release(self, state)
+
+    monkeypatch.setattr(WeightStore, "_release", counting)
+
+    specs = (SPEC_A, SPEC_B)
+    capacity = int(1.25 * max(s.param_bytes for s in specs))
+    platform, _ = _fleet(3, specs, capacity=capacity, ws_keepalive=0.25)
+    base = [n.tracker.committed for n in platform.nodes]
+    reqs = _mixed_requests(24, 2, seed=5, spread_s=3.0)
+    done = _drive(platform, specs, reqs)
+    assert served[0] > 0                 # the batch engine actually ran
+    assert len(done) == len(reqs)
+    # exactly-one-cold per residency period: every cold touch opened a
+    # period, every release (reap or eviction) closed one
+    for node in platform.nodes:
+        for state in node.weight_store._models.values():
+            ends = sum(1 for s in releases if s is state)
+            assert state.cold_touches == ends + (1 if state.resident else 0)
+    _check_drained(platform, base)
+
+
+def test_retire_busy_replica_drains_before_retiring(monkeypatch):
+    """Retiring the only replica mid-step marks it draining; the
+    in-flight coalesced step completes, THEN the slot retires and its
+    arena is released. The request's tokens are unaffected."""
+    orig_serve = EngineSlot._serve_batch
+    state = {}
+
+    def trigger(self, tasks):
+        r = orig_serve(self, tasks)
+        if "retired" not in state:
+            # slot is busy with the step we just started: retire it now,
+            # and boot a replacement shortly after (the autoscaler's
+            # move) so the rest of the decode chain has a replica
+            state["retired"] = self.node.retire_batch_slot()
+            state["draining_seen"] = self.draining
+            self.node.loop.after(0.01, self.node.add_batch_slot)
+        else:
+            assert not self.draining     # later steps: the fresh slot only
+        return r
+
+    monkeypatch.setattr(EngineSlot, "_serve_batch", trigger)
+
+    reg = FunctionRegistry()
+    svc = register_inference_service(reg, SPEC_A)
+    loop = EventLoop()
+    arena = 1 << 20
+    node = WorkerNode(
+        reg, loop=loop, num_slots=4, profiles=svc.profiles,
+        batch_slots=0, batch_models=svc.batch_models, max_batch=8,
+        replica_bytes=arena,
+        weight_store=svc.make_weight_store(keepalive_s=0.0), seed=3,
+    )
+    node.engines.add_batch_slot()
+    assert node.tracker.committed >= arena       # arena committed up front
+    out = {}
+    prompt = b"drain-me" * 4
+    comp = build_request_composition(SPEC_A, prompt_len=8, n_decode=5)
+    node.invoke(comp, {"prompt": [Item(prompt)]},
+                lambda inv: out.setdefault("inv", inv))
+    loop.run()
+    assert state["retired"] is True
+    assert state["draining_seen"] is True        # busy -> drained, not yanked
+    inv = out["inv"]
+    assert not inv.failed
+    assert _tokens_of(inv) == expected_tokens(prompt, SPEC_A, 5)
+    eng = node.engines
+    assert eng.replicas_retired == 1             # the drained replica left
+    assert eng.replicas_added == 2               # original + replacement
+    assert eng.batch_slots == 1
+    assert node.weight_store.inflight == 0
+    # books balance: one live arena + resident weights, retired arena freed
+    assert node.tracker.committed == \
+        node.weight_store.resident_bytes + eng.replica_bytes
+
+
+# -------------------------------------------- multiplexing determinism
+def _phased_requests():
+    """Three sequential per-model phases: A warms up, B's arrival must
+    evict A's idle weights (capacity holds ~one model), A's return
+    evicts B — deterministic LRU-idle churn."""
+    reqs = []
+    # phase gaps must exceed the ~2.8 s weight cold-start: the previous
+    # model's first request holds an inflight ref until it finishes
+    # loading + decoding, and inflight weights are never victims
+    for rid in range(3):
+        reqs.append((0.03 * rid, 0, f"mxa{rid}:".encode() * 8, 8, 4))
+    for rid in range(3):
+        reqs.append((6.0 + 0.03 * rid, 1, f"mxb{rid}:".encode() * 8, 8, 4))
+    for rid in range(2):
+        reqs.append((12.0 + 0.03 * rid, 0, f"mxc{rid}:".encode() * 8, 8, 4))
+    return reqs
+
+
+def _multiplex_run(crossnode, sharded):
+    specs = (SPEC_A, SPEC_B)
+    capacity = int(1.25 * max(s.param_bytes for s in specs))
+    loop = ShardedEventLoop() if sharded else EventLoop()
+    platform, scaler = _fleet(2, specs, capacity=capacity, loop=loop,
+                              crossnode=crossnode)
+    base = [n.tracker.committed for n in platform.nodes]
+    reqs = _phased_requests()
+    done = _drive(platform, specs, reqs)
+    texts = {rid: _tokens_of(done[rid]) for rid in done}
+    evictions = sum(n.weight_store.evictions for n in platform.nodes)
+    journal = [tuple(n.weight_store.eviction_log) for n in platform.nodes]
+    timeline = sorted((rid, done[rid].t_end, done[rid].latency)
+                      for rid in done)
+    _check_drained(platform, base)
+    return {"reqs": reqs, "texts": texts, "evictions": evictions,
+            "journal": journal, "timeline": timeline,
+            "scale": scaler.summary()}
+
+
+@pytest.mark.parametrize("crossnode", [False, True])
+@pytest.mark.parametrize("sharded", [False, True])
+def test_multiplex_eviction_deterministic(crossnode, sharded):
+    """Two-model contention on a capacity-limited pool: residency churns
+    through at least one LRU-idle eviction, byte-identically across
+    runs (eviction journal, completion timeline, scale events) under
+    both CROSSNODE settings and the sharded loop."""
+    a = _multiplex_run(crossnode, sharded)
+    b = _multiplex_run(crossnode, sharded)
+    assert a["evictions"] >= 1
+    assert a["journal"] == b["journal"]
+    assert a["timeline"] == b["timeline"]
+    assert a["scale"] == b["scale"]
+    for rid, (t, w, prompt, p, d) in enumerate(a["reqs"]):
+        assert a["texts"][rid] == expected_tokens(
+            prompt, (SPEC_A, SPEC_B)[w], d)
+
+
+@pytest.mark.parametrize("crossnode", [False, True])
+def test_multiplex_token_streams_match_single_model_runs(crossnode):
+    """Contention may reshape durations and residency, never dataflow:
+    each model's token streams under two-model multiplexing equal the
+    same requests replayed on a single-model fleet."""
+    mx = _multiplex_run(crossnode, sharded=False)
+    for model_idx, spec in ((0, SPEC_A), (1, SPEC_B)):
+        solo_reqs = [(t, 0, prompt, p, d)
+                     for (t, w, prompt, p, d) in mx["reqs"]
+                     if w == model_idx]
+        platform, _ = _fleet(2, (spec,))
+        done = _drive(platform, (spec,), solo_reqs)
+        solo = [_tokens_of(done[i]) for i in range(len(solo_reqs))]
+        multi = [mx["texts"][rid]
+                 for rid, (t, w, prompt, p, d) in enumerate(mx["reqs"])
+                 if w == model_idx]
+        assert solo == multi
+
+
+# ----------------------------------------------- fig13 knob validation
+def test_fig13_env_knob_validation(monkeypatch):
+    """FIG13_NODES / FIG13_RATE_HZ are validated at import: bad values
+    exit with a message instead of producing a silently-wrong fleet."""
+    import importlib
+
+    import benchmarks.fig13_serving as f13
+    for name, bad in (("FIG13_NODES", "sixteen"), ("FIG13_NODES", "1"),
+                      ("FIG13_RATE_HZ", "fast"), ("FIG13_RATE_HZ", "0")):
+        monkeypatch.setenv(name, bad)
+        with pytest.raises(SystemExit):
+            importlib.reload(f13)
+        monkeypatch.delenv(name)
+    f13 = importlib.reload(f13)
+    assert f13.N_NODES == 16 and f13.RATE_HZ == 200.0

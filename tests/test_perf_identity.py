@@ -161,3 +161,87 @@ def test_streaming_percentile_tracks_numpy():
         small.add(x)
     assert small.value == 3.0
     assert StreamingPercentile(99).value == 0.0
+
+
+# ------------------------------------------- batch-aware routing identity
+def _serving_pool_run(route_policy):
+    """One-node serving pool driven through the SDK platform under the
+    given routing policy; returns completion timeline + memory points."""
+    from repro import sdk
+    from repro.apps.inference_service import (
+        LMSpec, build_request_composition, register_inference_service)
+    from repro.core import BatchRouter, FunctionRegistry, Item
+
+    spec = LMSpec()
+    reg = FunctionRegistry()
+    svc = register_inference_service(reg, spec)
+    platform = sdk.Platform(
+        registry=reg, profiles=svc.profiles,
+        pool=[sdk.NodeSpec(
+            num_slots=4, batch_slots=1, batch_model=svc.batch_model,
+            max_batch=8, weight_store=svc.make_weight_store(keepalive_s=0.5),
+            seed=21, name="solo",
+        )],
+        route_policy=route_policy,
+        batch_router=BatchRouter(spinup_s=0.02, cold_s=svc.weight_cold.total_s)
+        if route_policy == "batch_aware" else None,
+    )
+    done = {}
+    rng = np.random.default_rng(3)
+    reqs = []
+    for rid in range(10):
+        p, d = int(rng.integers(6, 20)), int(rng.integers(2, 7))
+        reqs.append((0.05 * rid, f"ident{rid}:".encode() * 4, p, d))
+
+    def arrivals():
+        for rid, (t, prompt, p, d) in enumerate(reqs):
+            comp = build_request_composition(spec, prompt_len=p, n_decode=d)
+
+            def cb(inv, rid=rid):
+                done[rid] = inv
+            yield t, comp, {"prompt": [Item(prompt)]}, cb
+
+    platform.submit_stream(arrivals())
+    platform.run()
+    node = platform.nodes[0]
+    timeline = [(rid, done[rid].t_end, done[rid].latency)
+                for rid in sorted(done)]
+    return timeline, list(node.tracker.timeline.points)
+
+
+def test_batch_aware_degenerates_to_outstanding_at_one_replica():
+    """With one replica and one model every marginal estimate is equal,
+    so the batch-aware policy's decision sequence — and therefore the
+    whole run: completion timeline and memory commits — is byte-
+    identical to the default least-outstanding policy (the degeneration
+    contract in control_plane.BatchRouter)."""
+    base_tl, base_pts = _serving_pool_run("outstanding")
+    aware_tl, aware_pts = _serving_pool_run("batch_aware")
+    assert base_tl == aware_tl
+    assert base_pts == aware_pts
+
+
+def test_batch_router_ties_break_to_least_outstanding():
+    """Equal estimates (fresh identical nodes) defer to invocation load,
+    then stable node order — no RNG is consumed."""
+    from repro.apps.inference_service import (
+        LMSpec, build_request_composition, register_inference_service)
+    from repro.core import BatchRouter, FunctionRegistry, WorkerNode
+
+    spec = LMSpec()
+    reg = FunctionRegistry()
+    svc = register_inference_service(reg, spec)
+    loop = EventLoop()
+    nodes = [WorkerNode(reg, loop=loop, num_slots=2, profiles=svc.profiles,
+                        batch_slots=1, batch_model=svc.batch_model,
+                        weight_store=svc.make_weight_store(), seed=5 + i,
+                        name=f"tie{i}")
+             for i in range(3)]
+    comp = build_request_composition(spec, prompt_len=8, n_decode=3)
+    router = BatchRouter(spinup_s=0.02, cold_s=0.0)
+    loads = {id(n): w for n, w in zip(nodes, (2.0, 0.0, 1.0))}
+    picked = router.pick(nodes, comp, reg, load=lambda n: loads[id(n)])
+    assert picked is nodes[1]            # least outstanding wins the tie
+    loads[id(nodes[1])] = 1.0            # exact tie on load now: 2, 1, 1
+    assert router.pick(nodes, comp, reg,
+                       load=lambda n: loads[id(n)]) is nodes[1]  # stable order

@@ -51,7 +51,11 @@ def regenerate(names: str, outdir: str) -> int:
                  "FIG12_DURATION_S", "FIG12_RATE_HZ", "FIG13_QUICK",
                  "FIG13_DURATION_S", "FIG13_TELEMETRY",
                  "FIG13_TELEMETRY_INTERVAL_S", "FIG13_REAL_EXEC",
-                 "DANDELION_SHARD_LOOKAHEAD_S", "CROSSNODE"):
+                 "FIG13_NODES", "FIG13_RATE_HZ", "FIG13_PREFILL_CHUNK",
+                 "FIG13_MAX_TTFT_RATIO", "FIG13_MAX_MEM_RATIO",
+                 "FIG13_MAX_SCALEUP_S",
+                 "DANDELION_SHARD_LOOKAHEAD_S", "CROSSNODE",
+                 "CROSSNODE_SPREAD"):
         env.pop(knob, None)
     cmd = [sys.executable, "-m", "benchmarks.run",
            "--only", names, "--outdir", outdir]
