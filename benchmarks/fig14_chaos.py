@@ -29,9 +29,10 @@ Gates (CI): ``chaos_on`` completes >= FIG14_MIN_COMPLETION of the
 non-cancelled requests; ``chaos_off`` records > 0 whole-run failures;
 ``chaos_on`` p99 stays within FIG14_MAX_P99_X of ``baseline`` p99; the
 invariants above hold. Summary JSON lands in
-``results/bench/BENCH_chaos.json``. fig14 is NOT in the byte-identity
-set (tools/check_bench_identity.py): it exists to exercise the failure
-paths the gated figures never touch.
+``results/bench/BENCH_chaos.json``. fig14 IS in the byte-identity set
+(tools/check_bench_identity.py): churn and cancellation are fully
+modeled in virtual time, so its CSV data rows and JSON sidecar must
+match the committed seeds byte-for-byte.
 
 Knobs (environment variables):
 

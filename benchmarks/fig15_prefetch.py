@@ -1,0 +1,435 @@
+"""Figure 15 (extension): P2P artifact distribution + predictive scaling.
+
+Two experiments proving the two halves of the FaaSNet/Boxer thread
+(ROADMAP item 2), both pure virtual time:
+
+**Segment A — cold join.** An elastic cluster with two warm seed nodes
+(10 functions, two 48 MB weight models, warmed by 10 s of real traffic)
+adopts six fresh nodes at once. With ``peer=True`` the ``P2PDistributor``
+streams the hot artifact set over the tree of warm holders (every
+completed receiver becomes a serving peer, ``fanout`` streams each);
+with ``peer=False`` every artifact comes from the origin registry, whose
+single uplink serializes the six downloads. Reported: average/max
+join-to-warm seconds per mode and the P2P/origin ratio — the FaaSNet
+claim is ratio << 1.
+
+**Segment B — predicted burst.** One periodic ON/OFF function (period
+12 s, duty 0.25, ~80 req/s during ON, 200 ms exec, 500 ms weight cold
+start) against three platforms on identical traces:
+
+  * ``keepwarm``   — min_nodes = max_nodes = 4: the peak-provisioned
+                     reference (best p99, worst memory);
+  * ``reactive``   — autoscaling from 1 node on queue pressure: every
+                     burst eats node boot (0.75 s) plus weight cold
+                     starts on the fresh nodes;
+  * ``predictive`` — same autoscaler plus ``BurstPredictor`` (EWMA +
+                     ON/OFF period detection over arrivals) booting
+                     ``nodes_ahead`` nodes ``lead_s`` before each
+                     predicted ON edge, and ``P2PDistributor`` prefetch
+                     seeding the fresh nodes' code cache + weight store
+                     so first touches are warm hits.
+
+Latencies are measured for arrivals past a warm-up window that covers
+the predictor's learning cycles; committed memory is averaged over the
+whole run (learning included — the price of prediction is in the
+number). Gates (CI, enforced here and via benchmarks/run.py):
+
+  * join ratio: P2P avg join < FIG15_MAX_JOIN_RATIO (default 0.5) of
+    origin-only;
+  * predicted-burst tail: predictive p99 <= FIG15_MAX_P99_X (default
+    1.1) x keepwarm p99;
+  * elasticity: predictive average committed memory strictly below
+    keepwarm's;
+  * contrast: predictive p99 < reactive p99 (prediction visibly beats
+    reaction; disable with FIG15_REQUIRE_CONTRAST=0).
+
+Summary JSON lands in ``results/bench/BENCH_prefetch.json``. fig15 is
+NOT in the byte-identity set; instead tests/test_prefetch.py pins the
+transfer journal byte-identical across runs, loop modes, and CROSSNODE
+values.
+
+Knobs (environment variables):
+
+  FIG15_QUICK             1 -> short window for CI smoke (also --quick)
+  FIG15_JOINERS           joining nodes in segment A, default 6
+  FIG15_MAX_JOIN_RATIO    cold-join gate, default 0.5
+  FIG15_MAX_P99_X         predictive-vs-keepwarm p99 gate, default 1.1
+  FIG15_REQUIRE_CONTRAST  0 -> skip the predictive<reactive p99 gate
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List
+
+import numpy as np
+
+from repro import sdk
+from repro.core import (
+    ColdStartProfile,
+    ControlPlaneConfig,
+    Item,
+    PredictorConfig,
+    PrefetchConfig,
+)
+from repro.core.trace import TraceFunction, generate_events
+from benchmarks.common import emit, track
+
+QUICK = os.environ.get("FIG15_QUICK") == "1" or "--quick" in sys.argv
+N_JOINERS = int(os.environ.get("FIG15_JOINERS", 6))
+
+# ---------------------------------------------------------------- segment A
+SEED_NODES = 2
+JOIN_FUNCTIONS = 10
+JOIN_WARM_S = 10.0          # warm-traffic window before the join wave
+JOIN_RATE_HZ = 40.0
+JOIN_MODEL_BYTES = 48 << 20
+NODE_SLOTS = 8
+NODE_CACHE_ENTRIES = 16
+NODE_BASE_BYTES = 256 << 20
+SETUP_S = 0.3e-3
+
+# ---------------------------------------------------------------- segment B
+BURST_PERIOD_S = 12.0
+BURST_DUTY = 0.25
+BURST_RATE_HZ = 20.0        # average; ON-phase rate = 20/0.25 = 80/s
+BURST_EXEC_S = 0.2
+BURST_EXEC_SIGMA = 0.3
+BURST_MODEL_BYTES = 32 << 20
+WEIGHT_COLD_S = 0.5         # weight cold start a prefetched node skips
+MAX_NODES = 4
+NODE_BOOT = ColdStartProfile(setup_s=0.75, execute_s=0.0, jitter_sigma=0.1)
+# learning window: first prediction lands around cycle 5, so measure
+# from cycle 5 onward
+BURST_WARMUP_S = 5 * BURST_PERIOD_S
+BURST_DURATION_S = 96.0 if QUICK else 132.0
+
+PREDICTOR = PredictorConfig(
+    bin_s=0.5, alpha=0.2, on_factor=1.5, min_cycles=2,
+    lead_s=1.5, nodes_ahead=MAX_NODES - 1,
+)
+
+
+def _prefetch(peer: bool) -> PrefetchConfig:
+    return PrefetchConfig(hot_k=JOIN_FUNCTIONS + 2, fanout=2, peer=peer)
+
+
+# ===========================================================================
+# Segment A: cold join — P2P tree vs origin-only fetch
+# ===========================================================================
+def _join_weight_store():
+    ws = sdk.WeightStore(keepalive_s=60.0)
+    half = JOIN_FUNCTIONS // 2
+    ws.register("join_model_a", JOIN_MODEL_BYTES,
+                tuple(f"joinfn{i}" for i in range(half)))
+    ws.register("join_model_b", JOIN_MODEL_BYTES,
+                tuple(f"joinfn{i}" for i in range(half, JOIN_FUNCTIONS)))
+    return ws
+
+
+def _join_node_spec(seed: int) -> sdk.NodeSpec:
+    return sdk.NodeSpec(
+        num_slots=NODE_SLOTS, code_cache_entries=NODE_CACHE_ENTRIES,
+        base_bytes=NODE_BASE_BYTES, seed=seed,
+        weight_store=_join_weight_store,
+    )
+
+
+def _join_segment(peer: bool) -> Dict[str, object]:
+    cfg = ControlPlaneConfig(
+        min_nodes=SEED_NODES, max_nodes=SEED_NODES,
+        keepalive_s=120.0, node_base_bytes=NODE_BASE_BYTES,
+    )
+    platform = sdk.Platform(
+        elastic=sdk.Elastic(config=cfg, seed=3, node=_join_node_spec(30)),
+        config=sdk.PlatformConfig(prefetch=_prefetch(peer)),
+    )
+    comps = {}
+    for i in range(JOIN_FUNCTIONS):
+        spec = sdk.declare(
+            f"joinfn{i}", lambda ins: {"out": [Item(1)]},
+            inputs=("x",), outputs=("out",),
+            profile=ColdStartProfile(SETUP_S, 0.020, jitter_sigma=0.2),
+        )
+        comps[i] = platform.deploy(sdk.single_function_app(spec))
+
+    # warm the seed nodes with real traffic (code caches + weights)
+    rng = np.random.default_rng(7)
+    arrivals = []
+    t = 0.0
+    while True:
+        t += rng.exponential(1.0 / JOIN_RATE_HZ)
+        if t >= JOIN_WARM_S:
+            break
+        arrivals.append((t, comps[int(rng.integers(JOIN_FUNCTIONS))],
+                         {"x": [Item(0)]}))
+    platform.submit_stream(arrivals)
+
+    cluster = platform.cluster
+
+    def join_wave():
+        for k in range(N_JOINERS):
+            node = _join_node_spec(100 + k).build(platform, name=f"join{k}")
+            cluster.add_node(node)
+
+    platform.loop.at(JOIN_WARM_S, join_wave)
+    with track(f"fig15/join_{'p2p' if peer else 'origin'}", len(arrivals)):
+        platform.run()
+
+    dist = platform.distributor
+    warms = [w for _, _, w in dist.join_log]
+    assert len(warms) == N_JOINERS, (
+        f"fig15 join: {len(warms)} of {N_JOINERS} joins completed"
+    )
+    s = dist.summary()
+    return {
+        "segment": f"join_{'p2p' if peer else 'origin'}",
+        "joiners": N_JOINERS,
+        "artifacts": s["artifacts"],
+        "peer_fetches": s["peer_fetches"],
+        "origin_fetches": s["origin_fetches"],
+        "transfer_mb": s["transfer_mb"],
+        "join_avg_s": s["join_warm_avg_s"],
+        "join_max_s": s["join_warm_max_s"],
+    }
+
+
+# ===========================================================================
+# Segment B: predicted burst — keepwarm / reactive / predictive
+# ===========================================================================
+def _burst_weight_store(pinned: bool):
+    def build():
+        # keepwarm is the peak-provisioned reference: weights pinned for
+        # the whole run. Elastic shapes pay keep-alive residency instead,
+        # scaled to the node keepalive so retired nodes release promptly.
+        ws = sdk.WeightStore(keepalive_s=0.0 if pinned else 4.0,
+                             pinned=pinned)
+        ws.register("burst_model", BURST_MODEL_BYTES, ("burstfn",))
+        return ws
+    return build
+
+
+def _burst_node_spec(seed: int, *, pinned: bool) -> sdk.NodeSpec:
+    return sdk.NodeSpec(
+        num_slots=NODE_SLOTS, code_cache_entries=NODE_CACHE_ENTRIES,
+        base_bytes=NODE_BASE_BYTES, seed=seed,
+        weight_store=_burst_weight_store(pinned),
+    )
+
+
+def _burst_events():
+    fn = TraceFunction(
+        name="burstfn", rate_hz=BURST_RATE_HZ,
+        exec_median_s=BURST_EXEC_S, exec_sigma=BURST_EXEC_SIGMA,
+        context_bytes=1 << 20,
+        burst_period_s=BURST_PERIOD_S, burst_duty=BURST_DUTY,
+    )
+    return generate_events([fn], BURST_DURATION_S, seed=11)
+
+
+def _burst_segment(name: str, *, min_nodes: int,
+                   predict: bool) -> Dict[str, object]:
+    cfg = ControlPlaneConfig(
+        min_nodes=min_nodes, max_nodes=MAX_NODES,
+        target_outstanding_per_node=1.5 * NODE_SLOTS,
+        max_queue_delay_s=100e-3,
+        keepalive_s=3.0, tick_interval_s=0.25,
+        node_boot=NODE_BOOT, node_base_bytes=NODE_BASE_BYTES,
+    )
+    pc = sdk.PlatformConfig(
+        prefetch=_prefetch(True) if predict else None,
+        predictor=PREDICTOR if predict else None,
+    )
+    pinned = min_nodes == MAX_NODES
+    platform = sdk.Platform(
+        elastic=sdk.Elastic(
+            config=cfg, seed=5,
+            node=_burst_node_spec(40, pinned=pinned),
+        ),
+        config=pc,
+    )
+    spec = sdk.declare(
+        "burstfn", lambda ins: {"out": [Item(1)]},
+        inputs=("x",), outputs=("out",), context_bytes=1 << 20,
+        profile=ColdStartProfile(
+            SETUP_S, BURST_EXEC_S, jitter_sigma=BURST_EXEC_SIGMA,
+            cold_setup_s=WEIGHT_COLD_S,
+        ),
+    )
+    comp = platform.deploy(sdk.single_function_app(spec))
+    events = _burst_events()
+    loop = platform.loop
+    latencies: List[float] = []
+
+    def stream():
+        for e in events:
+            if e.t >= BURST_WARMUP_S:
+                def done(inv, t0=e.t):
+                    if not inv.failed:
+                        latencies.append(loop.now - t0)
+                yield e.t, comp, {"x": [Item(0)]}, done
+            else:
+                yield e.t, comp, {"x": [Item(0)]}
+
+    with track(f"fig15/{name}", len(events)):
+        platform.submit_stream(stream())
+        platform.run(until=BURST_DURATION_S)
+        platform.run()      # drain stragglers past the window
+
+    cp = platform.control_plane
+    summ = cp.summary(BURST_DURATION_S)
+    lat = np.array(latencies) if latencies else np.array([0.0])
+    row = {
+        "segment": name,
+        "events": len(events),
+        "measured": len(latencies),
+        "p50_ms": float(np.percentile(lat, 50)) * 1e3,
+        "p99_ms": float(np.percentile(lat, 99)) * 1e3,
+        "avg_committed_mb": summ["committed_avg_mb"],
+        "peak_committed_mb": summ["committed_peak_mb"],
+        "nodes_avg": summ["nodes_avg"],
+        "nodes_peak": summ["nodes_peak"],
+        "scale_ups": summ["scale_ups"],
+    }
+    if predict:
+        pred = cp.predictor.summary()
+        row["predicted_edges"] = pred["edges"]
+        row["predictions_fired"] = pred["fired"]
+        row["period_est_s"] = pred["period_s"]
+    return row
+
+
+def _pad(rows: List[dict]) -> List[dict]:
+    """Unify heterogeneous segment rows onto one column set (first-seen
+    order, blanks for absent fields) so the CSV block has one header."""
+    cols: Dict[str, None] = {}
+    for r in rows:
+        for k in r:
+            cols.setdefault(k)
+    return [{k: r.get(k, "") for k in cols} for r in rows]
+
+
+def run() -> List[dict]:
+    rows = [
+        _join_segment(peer=True),
+        _join_segment(peer=False),
+        _burst_segment("burst_keepwarm", min_nodes=MAX_NODES, predict=False),
+        _burst_segment("burst_reactive", min_nodes=1, predict=False),
+        _burst_segment("burst_predictive", min_nodes=1, predict=True),
+    ]
+    by = {r["segment"]: r for r in rows}
+    rows.append({
+        "segment": "summary",
+        "join_p2p_over_origin": (
+            by["join_p2p"]["join_avg_s"]
+            / max(by["join_origin"]["join_avg_s"], 1e-9)
+        ),
+        "predictive_p99_over_keepwarm": (
+            by["burst_predictive"]["p99_ms"]
+            / max(by["burst_keepwarm"]["p99_ms"], 1e-9)
+        ),
+        "reactive_p99_over_keepwarm": (
+            by["burst_reactive"]["p99_ms"]
+            / max(by["burst_keepwarm"]["p99_ms"], 1e-9)
+        ),
+        "predictive_mem_over_keepwarm": (
+            by["burst_predictive"]["avg_committed_mb"]
+            / max(by["burst_keepwarm"]["avg_committed_mb"], 1e-9)
+        ),
+    })
+    rows = _pad(rows)
+    _LAST["rows"] = rows
+    return rows
+
+
+# last run() result, serialized to BENCH_prefetch.json by write_json
+# (called from benchmarks.run and from this module's main)
+_LAST: Dict[str, object] = {}
+
+
+def write_json(outdir: str = "results/bench") -> str:
+    rows = _LAST.get("rows")
+    if not rows:
+        raise RuntimeError("fig15: run() before write_json()")
+    by = {r["segment"]: r for r in rows}
+    payload = {
+        "workload": {
+            "join": {
+                "seed_nodes": SEED_NODES,
+                "joiners": N_JOINERS,
+                "functions": JOIN_FUNCTIONS,
+                "model_bytes": JOIN_MODEL_BYTES,
+                "warm_s": JOIN_WARM_S,
+            },
+            "burst": {
+                "period_s": BURST_PERIOD_S,
+                "duty": BURST_DUTY,
+                "rate_hz": BURST_RATE_HZ,
+                "exec_s": BURST_EXEC_S,
+                "weight_cold_s": WEIGHT_COLD_S,
+                "max_nodes": MAX_NODES,
+                "node_boot_s": NODE_BOOT.setup_s,
+                "duration_s": BURST_DURATION_S,
+                "warmup_s": BURST_WARMUP_S,
+                "predictor": {
+                    "bin_s": PREDICTOR.bin_s,
+                    "lead_s": PREDICTOR.lead_s,
+                    "nodes_ahead": PREDICTOR.nodes_ahead,
+                },
+            },
+        },
+        "segments": by,
+    }
+    os.makedirs(outdir, exist_ok=True)
+    path = os.path.join(outdir, "BENCH_prefetch.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def gate() -> None:
+    """CI gates — all virtual-time deterministic, robust on any runner."""
+    rows = _LAST.get("rows") or []
+    by = {r["segment"]: r for r in rows}
+    summ = by["summary"]
+    max_join_ratio = float(os.environ.get("FIG15_MAX_JOIN_RATIO", 0.5))
+    max_p99_x = float(os.environ.get("FIG15_MAX_P99_X", 1.1))
+    contrast = os.environ.get("FIG15_REQUIRE_CONTRAST", "1") == "1"
+    jr = summ["join_p2p_over_origin"]
+    if jr >= max_join_ratio:
+        raise SystemExit(
+            f"fig15 join gate: P2P cold-join is {jr:.3f}x origin-only "
+            f"(required < {max_join_ratio}x)"
+        )
+    px = summ["predictive_p99_over_keepwarm"]
+    if px > max_p99_x:
+        raise SystemExit(
+            f"fig15 tail gate: predictive p99 is {px:.3f}x keepwarm "
+            f"(limit {max_p99_x}x)"
+        )
+    mx = summ["predictive_mem_over_keepwarm"]
+    if mx >= 1.0:
+        raise SystemExit(
+            f"fig15 memory gate: predictive committed avg is {mx:.3f}x "
+            f"keepwarm — must be strictly lower"
+        )
+    if contrast and by["burst_predictive"]["p99_ms"] \
+            >= by["burst_reactive"]["p99_ms"]:
+        raise SystemExit(
+            f"fig15 contrast gate: predictive p99 "
+            f"{by['burst_predictive']['p99_ms']:.1f}ms must beat reactive "
+            f"{by['burst_reactive']['p99_ms']:.1f}ms"
+        )
+
+
+def main():
+    emit("fig15", run())
+    path = write_json()
+    print(f"# prefetch summary written to {path}")
+    gate()
+
+
+if __name__ == "__main__":
+    main()

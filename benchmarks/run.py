@@ -26,6 +26,7 @@ from benchmarks import (
     fig12_crossnode,
     fig13_serving,
     fig14_chaos,
+    fig15_prefetch,
     roofline,
     table1_coldstart,
 )
@@ -47,6 +48,8 @@ BENCHES = {
               fig13_serving.run),
     "fig14": ("Fig 14: reliability under chaos (churn + cancellation)",
               fig14_chaos.run),
+    "fig15": ("Fig 15: P2P artifact prefetch + predictive scaling",
+              fig15_prefetch.run),
     "roofline": ("Roofline: dry-run three-term table", roofline.run),
 }
 
@@ -91,6 +94,15 @@ def main() -> None:
         except SystemExit as e:
             print(f"# fig14 gate FAILED: {e}")
             status["fig14"] = (False, status["fig14"][1])
+    # prefetch summary + gates (cold-join ratio, predicted-burst tail)
+    if status.get("fig15", (False,))[0]:
+        print(f"# prefetch summary written to "
+              f"{fig15_prefetch.write_json(args.outdir)}")
+        try:
+            fig15_prefetch.gate()
+        except SystemExit as e:
+            print(f"# fig15 gate FAILED: {e}")
+            status["fig15"] = (False, status["fig15"][1])
     # simulator throughput trajectory (events/sec per tracked segment)
     perf_path = write_simperf(args.outdir)
     print(f"# simulator throughput written to {perf_path}")

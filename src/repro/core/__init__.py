@@ -6,6 +6,12 @@ platform communication functions, with all/each/key edge fan-out.
 Execution system (SS5-6): memory contexts, dispatcher, compute/comm
 engines, PI control plane, cold-start backends, cluster manager.
 """
+from repro.core.artifacts import (
+    Artifact,
+    ArtifactCatalog,
+    P2PDistributor,
+    PrefetchConfig,
+)
 from repro.core.cluster import ClusterManager, CrossNodePlacer, KeepWarmPlatform
 from repro.core.coldstart import (
     BACKENDS,
@@ -19,8 +25,10 @@ from repro.core.coldstart import (
 )
 from repro.core.control_plane import (
     BatchRouter,
+    BurstPredictor,
     ControlPlaneConfig,
     ElasticControlPlane,
+    PredictorConfig,
     ReplicaAutoscaler,
     ReplicaConfig,
     composition_batch_units,
@@ -52,9 +60,12 @@ from repro.core.tracing import (
 from repro.core.workloads import BatchStepModel, WeightStore
 
 __all__ = [
+    "Artifact",
+    "ArtifactCatalog",
     "BACKENDS",
     "BatchRouter",
     "BatchStepModel",
+    "BurstPredictor",
     "ClusterManager",
     "CodeCache",
     "ColdStartBreakdown",
@@ -82,8 +93,11 @@ __all__ = [
     "MemoryContext",
     "MemoryTracker",
     "NodeCounters",
+    "P2PDistributor",
     "PayloadMemo",
     "PortRef",
+    "PredictorConfig",
+    "PrefetchConfig",
     "RoutingStats",
     "ThroughputStats",
     "SanitizationError",

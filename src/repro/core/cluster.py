@@ -416,6 +416,7 @@ class ClusterManager:
         restart_attempts: int = 3,   # node-death re-executions per request
         route_policy: str = "outstanding",  # "outstanding" | "batch_aware"
         batch_router=None,   # control_plane.BatchRouter override
+        distributor=None,    # artifacts.P2PDistributor: P2P prefetch on join
     ):
         if restart_attempts < 0:
             raise ValueError(
@@ -449,6 +450,10 @@ class ClusterManager:
         if route_policy == "batch_aware" and self.batch_router is None:
             from repro.core.control_plane import BatchRouter
             self.batch_router = BatchRouter()
+        self.distributor = distributor
+        if distributor is not None and self.control_plane is not None \
+                and self.control_plane.distributor is None:
+            self.control_plane.distributor = distributor
         if crossnode is None:
             crossnode = os.environ.get("CROSSNODE") == "1"
         if crossnode_spread is None:
@@ -564,6 +569,11 @@ class ClusterManager:
         self._outstanding[id(node)] = 0
         if self.placer is not None:
             self.placer.attach(node)
+        if self.distributor is not None:
+            # static pool has no routing-popularity feed: stream the
+            # whole catalog to the joiner over the existing warm nodes
+            peers = [n for n in self._nodes if n is not node and n.alive]
+            self.distributor.on_node_join(node, peers=peers)
 
     def remove_node(self, node: WorkerNode):
         """Graceful drain: stop routing; node finishes in-flight work."""

@@ -276,6 +276,22 @@ class CodeCache:
             return 0.0
         return sum(1 for n in names if n in self._lru) / len(names)
 
+    def warm(self, fn_name: str) -> None:
+        """Seed residency without counting a hit or a miss.
+
+        Used by P2P artifact prefetch (``core.artifacts``): the binary
+        arrived over a modeled transfer, not a disk load, so the next
+        ``touch`` must be a warm hit and hit/miss rates must reflect only
+        real request traffic.
+        """
+        already = fn_name in self._lru
+        self._lru[fn_name] = None
+        self._lru.move_to_end(fn_name)
+        if not already:
+            while len(self._lru) > self.capacity_entries:
+                self._lru.popitem(last=False)
+                self.evictions += 1
+
     def touch(self, fn_name: str) -> bool:
         """Record a code load; returns True on a RAM hit (no disk read)."""
         hit = fn_name in self._lru

@@ -224,6 +224,16 @@ class ReplicaAutoscaler:
 
         self.loop.after(cfg.boot_s, activate)
 
+    def prewarm(self):
+        """Predictive spin-up (``BurstPredictor``): boot one replica on
+        every batch-capable node currently at zero replicas, through the
+        normal ``_starved`` activate path — same ``boot_s``, same
+        accounting, just enqueue-aligned to the *predicted* burst rather
+        than the first starved task."""
+        for n in self._nodes():
+            if n.alive and self._is_batch(n):
+                self._starved(n)
+
     def _ensure_floor(self):
         """Provision the ``min_replicas`` floor round-robin (instant,
         like the control plane's min_nodes: the floor exists before
@@ -310,6 +320,121 @@ class ReplicaAutoscaler:
             "replica_scale_downs": self.scale_downs,
             "scaleup_latency_max_s": max(lats) if lats else 0.0,
             "scaleup_latency_avg_s": sum(lats) / len(lats) if lats else 0.0,
+        }
+
+
+@dataclass
+class PredictorConfig:
+    """Knobs for trace-driven burst prediction (``BurstPredictor``).
+    Ships only through ``sdk.PlatformConfig(predictor=...)``."""
+
+    bin_s: float = 0.5          # arrival-count bin width
+    alpha: float = 0.2          # EWMA smoothing over per-bin counts
+    on_factor: float = 1.5      # bin > on_factor * EWMA after quiet => ON edge
+    min_cycles: int = 2         # ON-edge gaps observed before predicting
+    lead_s: float = 1.0         # fire this early before the predicted edge
+    nodes_ahead: int = 1        # nodes pre-booted per predicted burst
+    prewarm_replicas: bool = True  # also spin BATCH replicas via autoscaler
+    max_history: int = 64       # ON-edge timestamps retained
+
+    def __post_init__(self):
+        if self.bin_s <= 0.0:
+            raise ValueError(f"predictor bin_s must be > 0, got {self.bin_s}")
+        if not 0.0 < self.alpha <= 1.0:
+            raise ValueError(f"predictor alpha must be in (0, 1], "
+                             f"got {self.alpha}")
+        if self.min_cycles < 1:
+            raise ValueError(f"predictor min_cycles must be >= 1, "
+                             f"got {self.min_cycles}")
+
+
+class BurstPredictor:
+    """EWMA + ON/OFF period detection over the arrival stream.
+
+    ``observe(t)`` is called synchronously from ``route`` — the predictor
+    costs *zero* loop events until it has learned a period, so a disabled
+    or still-learning predictor leaves the event stream untouched.
+    Arrivals are counted into ``bin_s`` bins; a bin whose count jumps
+    past ``on_factor`` times the EWMA after a silent bin is an ON edge
+    (fig11/fig13's duty-cycled traces go fully quiet between bursts).
+    Once ``min_cycles`` edge-to-edge gaps are seen, the period estimate
+    (median gap — robust to one irregular cycle) schedules ``on_burst``
+    at the next predicted edge minus ``lead_s``: early enough that node
+    boot delay leaves the p99 entirely (Boxer's argument). Prediction
+    events are daemon events — an armed prediction past the end of the
+    trace never keeps the loop alive. No RNG; byte-deterministic."""
+
+    def __init__(self, loop: EventLoop, config: Optional[PredictorConfig]
+                 = None, *, on_burst: Optional[Callable[[float], None]] = None):
+        self.loop = loop
+        self.cfg = config or PredictorConfig()
+        self.on_burst = on_burst
+        self.edges: List[float] = []        # detected ON-edge times
+        self.predictions: List[float] = []  # scheduled fire times
+        self.fired = 0
+        self._bin_i: Optional[int] = None
+        self._count = 0
+        self._ewma = 0.0
+        self._on = False
+        self._last_fire_t = -float("inf")
+
+    @property
+    def period_s(self) -> Optional[float]:
+        """Current period estimate (median ON-edge gap), or None while
+        still learning."""
+        gaps = [b - a for a, b in zip(self.edges, self.edges[1:])]
+        if len(gaps) < self.cfg.min_cycles:
+            return None
+        return sorted(gaps)[len(gaps) // 2]
+
+    def observe(self, t: float) -> None:
+        """Count one arrival at virtual time ``t`` (monotone non-dec)."""
+        i = int(t / self.cfg.bin_s)
+        if self._bin_i is None:
+            self._bin_i = i
+        while i > self._bin_i:
+            self._close_bin()
+            self._bin_i += 1
+        self._count += 1
+
+    def _close_bin(self) -> None:
+        c = self._count
+        self._count = 0
+        if c == 0:
+            self._on = False                 # silent bin: OFF
+        elif not self._on and self._ewma > 0.0 \
+                and c > self.cfg.on_factor * self._ewma:
+            self._on = True
+            self._edge(self._bin_i * self.cfg.bin_s)
+        a = self.cfg.alpha
+        self._ewma = c if self._ewma == 0.0 else (1 - a) * self._ewma + a * c
+
+    def _edge(self, t: float) -> None:
+        self.edges.append(t)
+        if len(self.edges) > self.cfg.max_history:
+            self.edges.pop(0)
+        period = self.period_s
+        if period is None or period <= 0.0:
+            return
+        fire_t = t + period - self.cfg.lead_s
+        # one armed prediction per cycle; never fire in the past
+        if fire_t <= self.loop.now or fire_t <= self._last_fire_t:
+            return
+        self._last_fire_t = fire_t
+        self.predictions.append(fire_t)
+        self.loop.at(fire_t, lambda ft=fire_t: self._fire(ft), daemon=True)
+
+    def _fire(self, predicted_t: float) -> None:
+        self.fired += 1
+        if self.on_burst is not None:
+            self.on_burst(predicted_t)
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "edges": len(self.edges),
+            "predictions": len(self.predictions),
+            "fired": self.fired,
+            "period_s": self.period_s or 0.0,
         }
 
 
@@ -432,6 +557,8 @@ class ElasticControlPlane:
         config: Optional[ControlPlaneConfig] = None,
         seed: int = 0,
         journal: bool = False,
+        predictor: Optional[PredictorConfig] = None,
+        distributor=None,   # artifacts.P2PDistributor (optional)
     ):
         self.loop = loop
         self.factory = node_factory
@@ -465,6 +592,16 @@ class ElasticControlPlane:
             or (BatchRouter() if self.cfg.route_policy == "batch_aware"
                 else None)
         )
+        # P2P artifact prefetch on node join (core.artifacts); None (the
+        # default) leaves every existing code path untouched
+        self.distributor = distributor
+        # trace-driven burst prediction: observe() is a synchronous call
+        # from route(), so a disabled predictor adds zero loop events
+        self.predictor: Optional[BurstPredictor] = None
+        if predictor is not None:
+            self.predictor = BurstPredictor(
+                self.loop, predictor, on_burst=self._on_burst_predicted
+            )
         for _ in range(self.cfg.min_nodes):
             self._boot_node(instant=True)
         self.replica_autoscaler: Optional[ReplicaAutoscaler] = None
@@ -537,6 +674,19 @@ class ElasticControlPlane:
         self.mem.commit(m.base_committed)
         self._log(f"ready {m.node.name}")
         self._record_count()
+        if self.distributor is not None:
+            # stream the hot artifact set to the fresh node over warm
+            # peers; nothing is hot before any traffic (initial
+            # min_nodes boots), so seed nodes warm through requests
+            hot = self.distributor.cfg.hot_k
+            hot_fns = self.stats.hot_functions(hot)
+            if hot_fns:
+                peers = [p.node for p in self.members
+                         if p is not m and p.state in (ACTIVE, DRAINING)
+                         and p.node.alive]
+                self.distributor.on_node_join(
+                    m.node, peers=peers, hot_fns=hot_fns
+                )
 
     def adopt(self, node: WorkerNode):
         """Register an externally created node as active (manual add)."""
@@ -589,6 +739,12 @@ class ElasticControlPlane:
     def route(self, comp: Composition) -> WorkerNode:
         """Two-level policy: code-cache affinity, else p2c on load."""
         self._ensure_tick()
+        if self.predictor is not None:
+            self.predictor.observe(self.loop.now)
+        # per-function popularity feeds the distributor's hot set; pure
+        # counter accounting, recorded only when someone consumes it
+        track = composition_functions(comp) if self.distributor is not None \
+            else ()
         active = [m for m in self.members if m.state == ACTIVE and m.node.alive]
         if not active:
             raise RuntimeError("no active nodes")
@@ -600,12 +756,14 @@ class ElasticControlPlane:
             )
             if picked is not None:
                 m = by_node[id(picked)]
-                self.stats.record_route(m.node.name, affinity=False)
+                self.stats.record_route(m.node.name, affinity=False,
+                                        fns=track)
                 self._log(f"route {m.node.name} batch out={m.outstanding}")
                 return m.node
         fns = composition_functions(comp)
         pick, kind = self._pick_two_level(active, fns, lambda m: m.outstanding)
-        self.stats.record_route(pick.node.name, affinity=(kind == "affinity"))
+        self.stats.record_route(pick.node.name, affinity=(kind == "affinity"),
+                                fns=track)
         self._log(f"route {pick.node.name} {kind} out={pick.outstanding}")
         return pick.node
 
@@ -730,6 +888,22 @@ class ElasticControlPlane:
             self._low_since = None
 
         self.loop.after(self.cfg.tick_interval_s, self._tick, daemon=True)
+
+    def _on_burst_predicted(self, predicted_t: float):
+        """A learned ON edge is ``lead_s`` away: boot ``nodes_ahead``
+        nodes now (normal boot path — same RNG-sampled delay, same
+        journal/accounting) so they are ACTIVE when the burst lands,
+        and optionally pre-spin BATCH replicas on existing nodes."""
+        assert self.predictor is not None
+        cfg = self.predictor.cfg
+        active = sum(1 for m in self.members if m.state == ACTIVE)
+        booting = sum(1 for m in self.members if m.state == BOOTING)
+        n = min(cfg.nodes_ahead, self.cfg.max_nodes - active - booting)
+        self._log(f"predict_burst t={predicted_t:.6f} boots={max(n, 0)}")
+        for _ in range(max(n, 0)):
+            self._boot_node()
+        if cfg.prewarm_replicas and self.replica_autoscaler is not None:
+            self.replica_autoscaler.prewarm()
 
     def on_node_failure(self, node: WorkerNode):
         """Out-of-band failure notification (the periodic tick would also

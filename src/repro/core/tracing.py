@@ -257,13 +257,14 @@ class RoutingStats:
     scale_downs: int = 0
     drains: int = 0            # nodes that drained in-flight work first
     per_node: Dict[str, NodeCounters] = field(default_factory=dict)
+    fn_routed: Dict[str, int] = field(default_factory=dict)  # popularity
 
     def node(self, name: str) -> NodeCounters:
         if name not in self.per_node:
             self.per_node[name] = NodeCounters(name)
         return self.per_node[name]
 
-    def record_route(self, node_name: str, affinity: bool):
+    def record_route(self, node_name: str, affinity: bool, fns=()):
         nc = self.node(node_name)
         nc.routed += 1
         if affinity:
@@ -271,6 +272,15 @@ class RoutingStats:
             self.affinity_hits += 1
         else:
             self.spillover += 1
+        for fn in fns:
+            self.fn_routed[fn] = self.fn_routed.get(fn, 0) + 1
+
+    def hot_functions(self, k: int) -> List[str]:
+        """Top-``k`` most-routed functions — the P2P distributor's "what
+        is hot" feed. Deterministic: count descending, name ascending on
+        ties."""
+        ranked = sorted(self.fn_routed.items(), key=lambda kv: (-kv[1], kv[0]))
+        return [fn for fn, _ in ranked[:k]]
 
     def summary(self) -> Dict[str, float]:
         total = self.affinity_hits + self.spillover

@@ -220,6 +220,37 @@ class WeightStore:
             self.tracker.commit(st.param_bytes)
         return self.pinned  # a pinned store never pays the cold term
 
+    def preload(self, model: str) -> bool:
+        """Seed ``model`` resident without counting a cold touch.
+
+        Used by P2P artifact prefetch (``core.artifacts``): the weights
+        arrived over a modeled transfer that was already priced, so
+        residency is committed here exactly once and the next request's
+        ``touch`` sees a warm hit — ``cold_setup_s`` is never charged on
+        top of the transfer. Honors ``capacity_bytes`` eviction and
+        starts the keep-alive idle clock so an unused prefetch is reaped
+        like any idle model. Returns True when the model is resident on
+        exit (idempotent; False only for an unknown model)."""
+        st = self._models.get(model)
+        if st is None:
+            return False
+        now = self.loop.now if self.loop is not None else 0.0
+        st.last_touch_t = now
+        if st.resident:
+            return True
+        if self.capacity_bytes is not None:
+            self._evict_for(st)
+        st.resident = True
+        if self.tracker is not None:
+            self.tracker.commit(st.param_bytes)
+        if not self.pinned and st.inflight == 0:
+            st.idle_since = now
+            if self.keepalive_s > 0.0 and self.loop is not None:
+                self.loop.after(
+                    self.keepalive_s, lambda: self._reap(st), daemon=True
+                )
+        return True
+
     def _evict_for(self, incoming: _ModelState) -> None:
         """Make room for ``incoming`` under ``capacity_bytes`` by evicting
         resident idle models, least-recently-touched first (registration

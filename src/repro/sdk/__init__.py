@@ -38,10 +38,12 @@ Minimal application:
 
 Error taxonomy in ``repro.sdk.errors``; full reference in docs/API.md.
 """
+from repro.core.artifacts import PrefetchConfig
 from repro.core.coldstart import ColdStartProfile, TransferProfile
 from repro.core.control_plane import (
     BatchRouter,
     ControlPlaneConfig,
+    PredictorConfig,
     ReplicaConfig,
 )
 from repro.core.dag import RetryPolicy
@@ -68,6 +70,7 @@ from repro.sdk.errors import (
     ValidationError,
     WiringError,
 )
+from repro.sdk.config import DEPRECATED_ENV_ALIASES, PlatformConfig
 from repro.sdk.functions import FunctionSpec, declare, function, ref
 from repro.sdk.platform import Elastic, InvocationHandle, NodeSpec, Platform
 
@@ -88,10 +91,14 @@ __all__ = [
     "key",
     "single_function_app",
     # platform
+    "DEPRECATED_ENV_ALIASES",
     "Elastic",
     "InvocationHandle",
     "NodeSpec",
     "Platform",
+    "PlatformConfig",
+    "PredictorConfig",
+    "PrefetchConfig",
     # errors
     "DeclarationError",
     "DeploymentError",

@@ -29,6 +29,7 @@ committed CSV rows byte-for-byte (gated by tools/check_bench_identity.py).
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -43,6 +44,7 @@ from repro.core.node import WorkerNode
 from repro.core.registry import FunctionRegistry
 from repro.core.sim import EventLoop, ShardedEventLoop
 from repro.sdk.builder import App
+from repro.sdk.config import PlatformConfig
 from repro.sdk.errors import DeploymentError, InvocationFailed
 from repro.sdk.functions import FunctionSpec
 
@@ -309,6 +311,7 @@ class Platform:
         route_policy: str = "outstanding",
         batch_router: Any = None,
         crossnode_spread: Optional[bool] = None,
+        config: Optional[PlatformConfig] = None,
     ):
         shapes = [s for s in (node, pool, elastic) if s is not None]
         if len(shapes) > 1:
@@ -318,6 +321,15 @@ class Platform:
             )
         if pool is not None and not pool:
             raise DeploymentError("pool= needs at least one NodeSpec")
+        # one validated parse of the env spelling when no explicit config
+        # is passed; explicit Platform kwargs layer on top either way
+        if config is None:
+            config = PlatformConfig.from_env(warn_deprecated=True)
+        self.config = config.with_overrides(
+            crossnode=crossnode, crossnode_spread=crossnode_spread
+        )
+        crossnode = self.config.crossnode
+        crossnode_spread = self.config.crossnode_spread
         if pool is None and elastic is None and (
             crossnode or transfer_links or transfer_profile
         ):
@@ -325,21 +337,33 @@ class Platform:
                 "crossnode/transfer options need a cluster shape "
                 "(pool= or elastic=); a single node has no peers"
             )
+        if pool is None and elastic is None and self.config.prefetch:
+            raise DeploymentError(
+                "PlatformConfig.prefetch needs a cluster shape "
+                "(pool= or elastic=); a single node has no peers to warm"
+            )
+        if elastic is None and self.config.predictor:
+            raise DeploymentError(
+                "PlatformConfig.predictor needs the elastic shape; "
+                "prediction drives node boots"
+            )
         self._node_spec = node if shapes else NodeSpec()
         self._pool_specs = list(pool) if pool is not None else None
         self._elastic = elastic
         self.registry = registry or FunctionRegistry(memoize=memoize)
         self.services = services or ServiceRegistry()
-        self.loop = loop or _default_loop()
+        self.loop = loop if loop is not None else self.config.build_loop()
         # shared per-function dispatcher profiles: deploy() merges each
         # spec's calibrated profile in-place, so nodes built later (and
         # the elastic factory's nodes) all read the same dict
         self.profiles: Dict[str, ColdStartProfile] = \
             profiles if profiles is not None else {}
-        if route_policy != "outstanding" and pool is None:
+        if route_policy not in ("outstanding", "batch_aware"):
+            raise DeploymentError(f"unknown route_policy {route_policy!r}")
+        if route_policy != "outstanding" and pool is None and elastic is None:
             raise DeploymentError(
-                "route_policy= configures static-pool routing; elastic "
-                "shapes set ControlPlaneConfig.route_policy instead"
+                "route_policy= needs a cluster shape (pool= or elastic=); "
+                "a single node has nothing to route over"
             )
         self._crossnode = crossnode
         self._crossnode_spread = crossnode_spread
@@ -425,14 +449,31 @@ class Platform:
         if self._built:
             return
         self._built = True
+        distributor = None
+        if self.config.prefetch is not None:
+            from repro.core.artifacts import P2PDistributor
+            distributor = P2PDistributor(
+                self.loop, config=self.config.prefetch
+            )
         if self._elastic is not None:
             e = self._elastic
+            cp_cfg = e.config
+            if self._route_policy == "batch_aware":
+                # compose batch-aware routing with node autoscaling; the
+                # default "outstanding" leaves the elastic config (and
+                # its byte-pinned decision stream) untouched
+                cp_cfg = dataclasses.replace(
+                    cp_cfg, route_policy="batch_aware",
+                    batch_router=self._batch_router or cp_cfg.batch_router,
+                )
             self._cp = ElasticControlPlane(
                 self.loop,
                 lambda name: e.node.build(self, name=name),
-                config=e.config,
+                config=cp_cfg,
                 seed=e.seed,
                 journal=e.journal,
+                predictor=self.config.predictor,
+                distributor=distributor,
             )
             self._cluster = ClusterManager(
                 control_plane=self._cp,
@@ -441,6 +482,7 @@ class Platform:
                 transfer_links=self._transfer_links,
                 transfer_profile=self._transfer_profile,
                 restart_attempts=self._restart_attempts,
+                distributor=distributor,
             )
         elif self._pool_specs is not None:
             # auto-name unnamed specs by position; explicit duplicate
@@ -464,6 +506,7 @@ class Platform:
                 restart_attempts=self._restart_attempts,
                 route_policy=self._route_policy,
                 batch_router=self._batch_router,
+                distributor=distributor,
             )
         else:
             self._worker = self._node_spec.build(self)
@@ -497,6 +540,20 @@ class Platform:
         """The ``CrossNodePlacer`` when cross-node scheduling is on."""
         self._build()
         return None if self._cluster is None else self._cluster.placer
+
+    @property
+    def distributor(self):
+        """The ``P2PDistributor`` when ``PlatformConfig.prefetch`` is
+        set, or None."""
+        self._build()
+        return None if self._cluster is None else self._cluster.distributor
+
+    @property
+    def predictor(self):
+        """The elastic shape's ``BurstPredictor`` when
+        ``PlatformConfig.predictor`` is set, or None."""
+        self._build()
+        return None if self._cp is None else self._cp.predictor
 
     @property
     def replica_autoscaler(self):

@@ -1,0 +1,385 @@
+"""P2P artifact distribution, burst prediction, and the PlatformConfig
+front door (core/artifacts.py, control_plane.BurstPredictor, sdk/config.py).
+
+Pins the contracts ISSUE 9 ships on:
+
+  * the distributor's transfer journal is byte-deterministic — identical
+    across repeated runs, across ``EventLoop`` vs exact-mode
+    ``ShardedEventLoop``, and under both ``CROSSNODE`` values;
+  * a prefetched artifact never pays a second cold start: the next
+    dispatcher ``touch`` of the code cache / weight store is a warm hit
+    and the cold counters stay at zero;
+  * freed-exactly-once survives prefetch: sender-side staging bytes are
+    released on arrival, receiver residency is committed once through
+    ``CodeCache.warm``/``WeightStore.preload``, refcounts drain to zero;
+  * the deprecated env aliases build platforms identical to the explicit
+    ``sdk.PlatformConfig``, with exactly one ``DeprecationWarning`` per
+    process;
+  * ``route_policy="batch_aware"`` composes with elastic node
+    autoscaling, and stays deterministic on the static pool.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro import sdk
+from repro.core import (
+    ColdStartProfile,
+    ControlPlaneConfig,
+    EventLoop,
+    Item,
+    ShardedEventLoop,
+)
+from repro.core.artifacts import ArtifactCatalog, P2PDistributor, PrefetchConfig
+from repro.core.dag import Composition
+from repro.core.node import WorkerNode
+from repro.core.registry import FunctionRegistry
+from repro.core.workloads import WeightStore
+from repro.sdk.errors import DeploymentError
+import repro.sdk.config as sdk_config
+
+MODEL_BYTES = 8 << 20
+
+
+# ===========================================================================
+# core-level: prefetch seeds cold-start accounting exactly once
+# ===========================================================================
+def _core_registry():
+    reg = FunctionRegistry()
+    reg.register_function("f", lambda ins: {"out": [Item(1)]})
+    c = Composition("one")
+    v = c.compute("f", "f", inputs=("x",), outputs=("out",))
+    c.bind_input("x", v["x"])
+    c.bind_output("out", v["out"])
+    c.validate()
+    reg.register_composition(c)
+    return reg, c
+
+
+def _core_node(reg, loop, name):
+    ws = WeightStore(keepalive_s=0.0)
+    ws.register("m", MODEL_BYTES, ("f",))
+    profiles = {"f": ColdStartProfile(1e-3, 5e-3, jitter_sigma=0.0,
+                                      cold_setup_s=0.2)}
+    return WorkerNode(reg, loop=loop, num_slots=4, profiles=profiles,
+                      code_cache_entries=8, weight_store=ws, name=name)
+
+
+def test_prefetched_then_invoked_pays_no_second_cold_start():
+    loop = EventLoop()
+    reg, comp = _core_registry()
+    warm = _core_node(reg, loop, "warm")
+    cold = _core_node(reg, loop, "cold")
+    # the warm peer holds both artifacts (seeded as if by prior traffic)
+    warm.code_cache.warm("f")
+    warm.weight_store.preload("m")
+
+    dist = P2PDistributor(loop, config=PrefetchConfig(journal=True))
+    dist.catalog.sync_registry(reg)
+    dist.catalog.sync_weight_store(warm.weight_store)
+    done = []
+    dist.on_node_join(cold, peers=[warm], hot_fns=["f"],
+                      on_complete=done.append)
+    loop.run()
+
+    assert done, "join never completed"
+    assert dist.peer_fetches == 2 and dist.origin_fetches == 0
+    ws = cold.weight_store
+    assert ws.resident("m")
+    assert ws._models["m"].cold_touches == 0
+    assert cold.code_cache.resident("f")
+    # prefetch seeding counts neither hits nor misses
+    assert cold.code_cache.hits == 0 and cold.code_cache.misses == 0
+
+    # a real invocation on the prefetched node: warm dispatch, so the
+    # profile's cold_setup_s (0.2 s) is never charged on top of the
+    # transfer the artifact already paid for
+    inv = cold.invoke(comp, {"x": [Item(0)]})
+    loop.run()
+    assert inv.done
+    assert inv.latency < 0.05, (
+        f"prefetched node paid a cold start: latency {inv.latency:.3f}s"
+    )
+    assert ws._models["m"].cold_touches == 0
+    assert cold.code_cache.misses == 0 and cold.code_cache.hits >= 1
+
+
+def test_freed_exactly_once_through_prefetch():
+    loop = EventLoop()
+    reg, _ = _core_registry()
+    warm = _core_node(reg, loop, "warm")
+    cold = _core_node(reg, loop, "cold")
+    warm.code_cache.warm("f")
+    warm.weight_store.preload("m")
+    sender_committed = warm.tracker.committed
+    receiver_committed = cold.tracker.committed
+
+    dist = P2PDistributor(loop)
+    dist.catalog.sync_registry(reg)
+    dist.catalog.sync_weight_store(warm.weight_store)
+    dist.on_node_join(cold, peers=[warm], hot_fns=["f"])
+    loop.run()
+
+    # sender: in-flight staging bytes released on arrival, nothing leaks
+    assert warm.tracker.committed == sender_committed
+    # receiver: exactly the model weights were committed, exactly once
+    assert cold.tracker.committed == receiver_committed + MODEL_BYTES
+    assert cold.weight_store.inflight == 0 and warm.weight_store.inflight == 0
+    # idempotent re-join: everything already resident, no new transfers
+    fetched = dist.peer_fetches
+    dist.on_node_join(cold, peers=[warm], hot_fns=["f"])
+    loop.run()
+    assert dist.peer_fetches == fetched
+    assert cold.tracker.committed == receiver_committed + MODEL_BYTES
+
+
+def test_origin_fallback_serializes_on_one_uplink():
+    loop = EventLoop()
+    reg, _ = _core_registry()
+    a = _core_node(reg, loop, "a")
+    b = _core_node(reg, loop, "b")
+    dist = P2PDistributor(loop, config=PrefetchConfig(peer=False))
+    dist.catalog.sync_registry(reg)
+    dist.catalog.sync_weight_store(a.weight_store)
+    dist.on_node_join(a, peers=[], hot_fns=["f"])
+    dist.on_node_join(b, peers=[a], hot_fns=["f"])
+    loop.run()
+    assert dist.origin_fetches == 4 and dist.peer_fetches == 0
+    warms = [w for _, _, w in dist.join_log]
+    # the second joiner queues behind the first on the origin's single
+    # uplink — strictly slower despite identical artifact sets
+    assert warms[1] > warms[0]
+
+
+# ===========================================================================
+# sdk-level: transfer-journal byte determinism across runs / loops
+# ===========================================================================
+N_JOIN_FNS = 3
+
+
+def _join_node_spec(seed):
+    def make_ws():
+        ws = sdk.WeightStore(keepalive_s=60.0)
+        ws.register("jm", MODEL_BYTES,
+                    tuple(f"jf{i}" for i in range(N_JOIN_FNS)))
+        return ws
+    return sdk.NodeSpec(num_slots=4, code_cache_entries=8,
+                        base_bytes=32 << 20, seed=seed,
+                        weight_store=make_ws)
+
+
+def _journal_run(*, crossnode, shards):
+    """A small warm pool adopting two joiners mid-traffic; returns the
+    distributor's transfer journal plus end-state counters."""
+    cfg = ControlPlaneConfig(min_nodes=2, max_nodes=2, keepalive_s=60.0,
+                             node_base_bytes=32 << 20)
+    platform = sdk.Platform(
+        elastic=sdk.Elastic(config=cfg, seed=3, node=_join_node_spec(9)),
+        config=sdk.PlatformConfig(
+            crossnode=crossnode, shards=shards,
+            prefetch=sdk.PrefetchConfig(hot_k=8, fanout=1, journal=True),
+        ),
+    )
+    comps = []
+    for i in range(N_JOIN_FNS):
+        spec = sdk.declare(
+            f"jf{i}", lambda ins: {"out": [Item(1)]},
+            inputs=("x",), outputs=("out",),
+            profile=ColdStartProfile(1e-3, 10e-3, jitter_sigma=0.2),
+        )
+        comps.append(platform.deploy(sdk.single_function_app(spec)))
+    rng = np.random.default_rng(5)
+    arrivals, t = [], 0.0
+    while True:
+        t += float(rng.exponential(1.0 / 25.0))
+        if t >= 4.0:
+            break
+        arrivals.append((t, comps[int(rng.integers(N_JOIN_FNS))],
+                         {"x": [Item(0)]}))
+    platform.submit_stream(arrivals)
+    cluster = platform.cluster
+
+    def join_wave():
+        for k in range(2):
+            node = _join_node_spec(70 + k).build(platform, name=f"join{k}")
+            cluster.add_node(node)
+
+    platform.loop.at(2.0, join_wave)
+    platform.run()
+    dist = platform.distributor
+    assert dist.joins == 2 and len(dist.join_log) == 2
+    return tuple(dist.journal), dist.peer_fetches, platform.loop.now
+
+
+@pytest.mark.parametrize("crossnode", [False, True])
+def test_transfer_journal_byte_deterministic(crossnode):
+    ref = _journal_run(crossnode=crossnode, shards=False)
+    again = _journal_run(crossnode=crossnode, shards=False)
+    sharded = _journal_run(crossnode=crossnode, shards=True)
+    assert ref[0], "journal is empty — the joins never streamed"
+    assert ref[1] > 0, "no peer fetches — the tree never formed"
+    assert again == ref, "identical runs diverged"
+    assert sharded == ref, "sharded loop diverged from the merged heap"
+
+
+# ===========================================================================
+# PlatformConfig: env aliases, validation, override layering
+# ===========================================================================
+LEGACY_ENV = {
+    "CROSSNODE": "1",
+    "CROSSNODE_SPREAD": "1",
+    "DANDELION_SHARDS": "1",
+    "DANDELION_SHARD_LOOKAHEAD_S": "0.25",
+}
+
+
+def _pool_platform(**kw):
+    return sdk.Platform(pool=[sdk.NodeSpec(seed=1), sdk.NodeSpec(seed=2)],
+                        **kw)
+
+
+def test_env_aliases_equal_explicit_config(monkeypatch):
+    for k, v in LEGACY_ENV.items():
+        monkeypatch.setenv(k, v)
+    monkeypatch.setattr(sdk_config, "_warned_deprecated", False)
+    with warnings.catch_warnings(record=True) as seen:
+        warnings.simplefilter("always")
+        p_env = _pool_platform()
+        _pool_platform()    # second build: the warning fired already
+    dep = [w for w in seen if issubclass(w.category, DeprecationWarning)]
+    assert len(dep) == 1, "legacy env aliases must warn exactly once"
+    assert "CROSSNODE" in str(dep[0].message)
+
+    explicit = sdk.PlatformConfig(crossnode=True, crossnode_spread=True,
+                                  shards=True, shard_lookahead_s=0.25)
+    assert p_env.config == explicit
+    for k in LEGACY_ENV:
+        monkeypatch.delenv(k)
+    with warnings.catch_warnings(record=True) as seen:
+        warnings.simplefilter("always")
+        p_cfg = _pool_platform(config=explicit)
+    assert not [w for w in seen if issubclass(w.category, DeprecationWarning)]
+    assert p_cfg.config == p_env.config
+    assert isinstance(p_env.loop, ShardedEventLoop)
+    assert isinstance(p_cfg.loop, ShardedEventLoop)
+    assert p_env.loop.lookahead_s == p_cfg.loop.lookahead_s == 0.25
+    assert p_env.cluster.placer is not None
+    assert p_cfg.cluster.placer is not None
+
+
+def test_prefetch_predictor_env_spelling():
+    env = {
+        "DANDELION_PREFETCH": "1",
+        "DANDELION_PREFETCH_HOT_K": "4",
+        "DANDELION_PREFETCH_FANOUT": "3",
+        "DANDELION_PREFETCH_PEER": "0",
+        "DANDELION_PREDICT": "1",
+        "DANDELION_PREDICT_BIN_S": "0.25",
+        "DANDELION_PREDICT_LEAD_S": "2.0",
+        "DANDELION_PREDICT_NODES_AHEAD": "2",
+    }
+    cfg = sdk.PlatformConfig.from_env(env)
+    assert cfg.prefetch == sdk.PrefetchConfig(hot_k=4, fanout=3, peer=False)
+    assert cfg.predictor == sdk.PredictorConfig(bin_s=0.25, lead_s=2.0,
+                                                nodes_ahead=2)
+    # off by default: empty env parses to the all-default config
+    assert sdk.PlatformConfig.from_env({}) == sdk.PlatformConfig()
+
+
+def test_config_validation_errors():
+    with pytest.raises(DeploymentError):
+        sdk.PlatformConfig(shard_lookahead_s=1.0)    # lookahead sans shards
+    with pytest.raises(DeploymentError):
+        sdk.PlatformConfig(crossnode=False, crossnode_spread=True)
+    with pytest.raises(DeploymentError):
+        sdk.PlatformConfig(prefetch=object())
+    with pytest.raises(DeploymentError):
+        sdk.PlatformConfig.from_env({"CROSSNODE": "yes"})
+    with pytest.raises(DeploymentError):
+        sdk.PlatformConfig.from_env({"DANDELION_SHARDS": "maybe"})
+    with pytest.raises(DeploymentError):
+        sdk.PlatformConfig.from_env({"DANDELION_PREFETCH": "1",
+                                     "DANDELION_PREFETCH_HOT_K": "0"})
+    with pytest.raises(DeploymentError):
+        sdk.Platform(config=sdk.PlatformConfig(
+            prefetch=sdk.PrefetchConfig()))      # prefetch needs a cluster
+    with pytest.raises(DeploymentError):
+        _pool_platform(config=sdk.PlatformConfig(
+            predictor=sdk.PredictorConfig()))    # predictor needs elastic
+    with pytest.raises(DeploymentError):
+        _pool_platform(route_policy="nope")
+
+
+def test_explicit_kwargs_override_config():
+    cfg = sdk.PlatformConfig(crossnode=False)
+    p = _pool_platform(config=cfg, crossnode=True)
+    assert p.config.crossnode is True
+    assert p.cluster.placer is not None
+
+
+# ===========================================================================
+# batch_aware routing composes with elastic autoscaling
+# ===========================================================================
+def _elastic_batch_platform(route_policy):
+    cfg = ControlPlaneConfig(
+        min_nodes=1, max_nodes=3, target_outstanding_per_node=4,
+        max_queue_delay_s=50e-3, keepalive_s=1.0, tick_interval_s=0.1,
+        node_boot=ColdStartProfile(0.05, 0.0, jitter_sigma=0.0),
+    )
+    return sdk.Platform(
+        elastic=sdk.Elastic(config=cfg, seed=4,
+                            node=sdk.NodeSpec(num_slots=4, seed=17)),
+        route_policy=route_policy,
+    )
+
+
+def test_batch_aware_composes_with_elastic_autoscaling():
+    platform = _elastic_batch_platform("batch_aware")
+    cp = platform.control_plane
+    assert cp.cfg.route_policy == "batch_aware"
+    assert cp.batch_router is not None
+    spec = sdk.declare(
+        "bf", lambda ins: {"out": [Item(1)]},
+        inputs=("x",), outputs=("out",),
+        profile=ColdStartProfile(1e-3, 50e-3, jitter_sigma=0.0),
+    )
+    comp = platform.deploy(sdk.single_function_app(spec))
+    done = []
+    platform.submit_stream(
+        (0.01 * i, comp, {"x": [Item(0)]},
+         lambda inv: done.append(inv.failed)) for i in range(80)
+    )
+    platform.run()
+    assert len(done) == 80 and not any(done)
+    # the queue-pressure autoscaler still fires under batch-aware routing
+    assert cp.summary(platform.loop.now)["scale_ups"] > 0
+
+
+def test_default_elastic_route_policy_untouched():
+    # the plain path never sees the batch-aware replace(): its config
+    # object (and decision stream) is exactly the one the caller built
+    platform = _elastic_batch_platform("outstanding")
+    cp = platform.control_plane
+    assert cp.cfg.route_policy == "affinity"
+    assert cp.batch_router is None
+
+
+def test_static_pool_batch_aware_deterministic():
+    def once():
+        platform = _pool_platform(route_policy="batch_aware")
+        spec = sdk.declare(
+            "pf", lambda ins: {"out": [Item(1)]},
+            inputs=("x",), outputs=("out",),
+            profile=ColdStartProfile(1e-3, 20e-3, jitter_sigma=0.3),
+        )
+        comp = platform.deploy(sdk.single_function_app(spec))
+        lat = []
+        platform.submit_stream(
+            (0.005 * i, comp, {"x": [Item(0)]},
+             lambda inv: lat.append(inv.latency)) for i in range(60)
+        )
+        platform.run()
+        return lat
+    a, b = once(), once()
+    assert len(a) == 60 and a == b

@@ -2,14 +2,15 @@
 """CI gate: deterministic benchmark CSVs must match their committed seeds.
 
 Regenerates the named benchmarks (default: the fully modeled, seeded
-ones — fig10, fig11, fig12, fig13) into a scratch directory and
+ones — fig10, fig11, fig12, fig13, fig14) into a scratch directory and
 compares their *data rows* against the committed files under
 ``results/bench/``. Comment lines (``# ...``, including the
 machine-dependent ``# perf`` throughput lines) are excluded; everything
 else must be byte-identical — the cross-PR determinism contract
 docs/BENCHMARKS.md states, promoted here from a manual check into an
-automated job. When fig13 is in the set, its JSON sidecar
-(``BENCH_serving.json``) is held to the same standard.
+automated job. When fig13/fig14 are in the set, their JSON sidecars
+(``BENCH_serving.json``, ``BENCH_chaos.json``) are held to the same
+standard.
 
 Usage:
     python tools/check_bench_identity.py [--names fig10,fig11,fig12]
@@ -30,7 +31,7 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
 SEED_DIR = ROOT / "results" / "bench"
-DEFAULT_NAMES = "fig10,fig11,fig12,fig13"
+DEFAULT_NAMES = "fig10,fig11,fig12,fig13,fig14"
 
 
 def data_rows(path: Path):
@@ -54,6 +55,15 @@ def regenerate(names: str, outdir: str) -> int:
                  "FIG13_NODES", "FIG13_RATE_HZ", "FIG13_PREFILL_CHUNK",
                  "FIG13_MAX_TTFT_RATIO", "FIG13_MAX_MEM_RATIO",
                  "FIG13_MAX_SCALEUP_S",
+                 "FIG14_NODES", "FIG14_RATE_HZ", "FIG14_DURATION_S",
+                 "FIG14_CHURN_PERIOD_S", "FIG14_CANCEL_RATE",
+                 "FIG14_MAX_P99_X", "FIG14_MIN_COMPLETION",
+                 "FIG15_QUICK", "FIG15_JOINERS", "FIG15_MAX_JOIN_RATIO",
+                 "FIG15_MAX_P99_X", "FIG15_REQUIRE_CONTRAST",
+                 "DANDELION_PREFETCH", "DANDELION_PREFETCH_HOT_K",
+                 "DANDELION_PREFETCH_FANOUT", "DANDELION_PREFETCH_PEER",
+                 "DANDELION_PREDICT", "DANDELION_PREDICT_BIN_S",
+                 "DANDELION_PREDICT_LEAD_S", "DANDELION_PREDICT_NODES_AHEAD",
                  "DANDELION_SHARD_LOOKAHEAD_S", "CROSSNODE",
                  "CROSSNODE_SPREAD"):
         env.pop(knob, None)
@@ -84,16 +94,18 @@ def compare(names, outdir: Path) -> list:
                 f"{got[diff] if diff < len(got) else '<missing>'}\n    seed:  "
                 f"{want[diff] if diff < len(want) else '<missing>'}"
             )
-    if "fig13" in names:
-        fresh = outdir / "BENCH_serving.json"
-        seed = SEED_DIR / "BENCH_serving.json"
+    sidecars = {"fig13": "BENCH_serving.json", "fig14": "BENCH_chaos.json"}
+    for name, sidecar in sidecars.items():
+        if name not in names:
+            continue
+        fresh, seed = outdir / sidecar, SEED_DIR / sidecar
         if not seed.is_file():
-            errors.append(f"fig13: committed seed {seed} missing")
+            errors.append(f"{name}: committed seed {seed} missing")
         elif not fresh.is_file():
-            errors.append(f"fig13: regenerated sidecar {fresh} missing")
+            errors.append(f"{name}: regenerated sidecar {fresh} missing")
         elif fresh.read_bytes() != seed.read_bytes():
             errors.append(
-                "fig13: BENCH_serving.json differs from committed seed"
+                f"{name}: {sidecar} differs from committed seed"
             )
     return errors
 
