@@ -107,6 +107,22 @@ def main() -> None:
     perf_path = write_simperf(args.outdir)
     print(f"# simulator throughput written to {perf_path}")
 
+    # determinism lint over the platform source: an unwaived finding
+    # (wall-clock, unseeded RNG, set iteration, ...) threatens the very
+    # byte-identity the benchmarks above are gated on, so it fails the
+    # run like any benchmark
+    t0 = time.time()
+    from repro.analysis.detlint import lint_paths
+    src_root = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
+    lint = lint_paths([src_root])
+    status["det_lint"] = (not lint.unwaived, time.time() - t0)
+    if lint.unwaived:
+        print(f"# det_lint FAILED: {len(lint.unwaived)} unwaived finding(s)")
+        for f in lint.unwaived:
+            print(f"#   {f.render()}")
+    else:
+        print(f"# det_lint clean ({len(lint.waived)} waived finding(s))")
+
     failed = [n for n, (ok, _) in status.items() if not ok]
     print("\n# ---- summary ----")
     for name, (ok, secs) in status.items():

@@ -62,6 +62,9 @@ def main():
     generate = sdk.declare(
         "generate", generate_fn, inputs=("prompt",), outputs=("tokens",),
         context_bytes=8 << 20, memoize=False,
+        # knowingly impure: drives the stateful continuous batcher and a
+        # closed-over request counter — real serving, not a modeled payload
+        pure_unsafe=True,
     )
     with sdk.composition("serve_lm") as app:
         g = generate(prompt=app.input("prompt"))

@@ -86,8 +86,11 @@ def run(steps, batch, seq, ckpt_dir, crash_at=None, lr=3e-4, log_every=None,
 
 
 @sdk.function(inputs=("cmd",), outputs=("report",), memoize=False,
-              timeout_s=7 * 86400.0)  # effectively unlimited, like the
+              timeout_s=7 * 86400.0,  # effectively unlimited, like the
                                       # pre-SDK direct run() call
+              # knowingly impure: run() writes checkpoints and progress
+              # to stdout — real training, not a modeled payload
+              pure_unsafe=True)
 def train_phase(ins):
     """One training phase as a platform payload: config in, loss report
     out. Crash/resume state lives in the checkpoint directory."""

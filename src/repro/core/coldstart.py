@@ -1,3 +1,4 @@
+# det-lint: file waive[wall-clock] reason=real-exec cold-start measurement; wall time here IS the measurement, not a model
 """Cold-start backends: three real code paths with Table-1-style phases.
 
 The paper's four isolation backends (CHERI/rWasm/process/KVM) are CPU

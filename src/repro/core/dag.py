@@ -18,11 +18,43 @@ from __future__ import annotations
 
 import heapq
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 MODES = ("all", "each", "key")
 
 COMPUTE, COMM, SUBGRAPH = "compute", "comm", "composition"
+
+# ------------------------------------------------------------------ hooks
+# Registration hooks: callables invoked with each Composition as a
+# FunctionRegistry accepts it — the seam the static-analysis layer
+# (repro.analysis.graphlint.registration_lint_hook) plugs into without
+# the IR importing the analyzer. The empty-list common case costs one
+# truthiness check on the per-request register path.
+_REGISTRATION_HOOKS: List[Callable[["Composition"], None]] = []
+
+
+def add_registration_hook(hook) -> Callable[["Composition"], None]:
+    """Install ``hook(comp)`` to run on every composition registration.
+    Returns the hook (usable as a decorator)."""
+    _REGISTRATION_HOOKS.append(hook)
+    return hook
+
+
+def remove_registration_hook(hook) -> None:
+    """Uninstall a previously added hook (no-op if absent)."""
+    try:
+        _REGISTRATION_HOOKS.remove(hook)
+    except ValueError:
+        pass
+
+
+def fire_registration_hooks(comp: "Composition") -> None:
+    """Invoke all installed hooks (snapshot, so a hook may uninstall
+    itself). Exceptions propagate: a strict lint hook is *supposed* to
+    reject the registration."""
+    if _REGISTRATION_HOOKS:
+        for hook in tuple(_REGISTRATION_HOOKS):
+            hook(comp)
 
 
 @dataclass(frozen=True)

@@ -19,7 +19,8 @@ from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional, Tuple
 
-from repro.core.dag import COMPUTE, SUBGRAPH, Composition
+from repro.core.dag import (COMPUTE, SUBGRAPH, Composition,
+                            fire_registration_hooks)
 from repro.core.items import SetDict, fingerprint_sets
 
 
@@ -43,6 +44,9 @@ class ComputeFunction:
     batchable: bool = False
     disk_path: str = ""
     code: bytes = b""
+    # declared purity opt-out (sdk.function(pure_unsafe=True)): the
+    # analysis pass records it in the PurityReport instead of blocking
+    pure_unsafe: bool = False
 
 
 class PayloadMemo:
@@ -143,6 +147,7 @@ class FunctionRegistry:
         service_time_s: Optional[float] = None,
         memoize: bool = True,
         batchable: bool = False,
+        pure_unsafe: bool = False,
     ) -> ComputeFunction:
         try:
             code = pickle.dumps(fn)
@@ -165,6 +170,7 @@ class FunctionRegistry:
             batchable=batchable,
             disk_path=path,
             code=code,
+            pure_unsafe=pure_unsafe,
         )
         self.functions[name] = cf
         return cf
@@ -214,6 +220,10 @@ class FunctionRegistry:
         invoke time."""
         comp.validate()
         self._check_functions(comp)
+        # analysis seam: lint hooks (repro.core.dag.add_registration_hook)
+        # see every structurally-valid composition before it is stored —
+        # a strict hook raises and the registration never lands
+        fire_registration_hooks(comp)
         self.compositions[comp.name] = comp
         return comp
 

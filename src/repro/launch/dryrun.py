@@ -1,3 +1,4 @@
+# det-lint: file waive[wall-clock] reason=real compile/lowering timing in a CLI driver; reported to the operator, never journaled
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 # ^ MUST precede any jax import: jax locks the device count on first init.

@@ -1,3 +1,4 @@
+# det-lint: file waive[wall-clock] reason=real-exec CLI driver; wall time measures actual serving steps, not a modeled path
 """End-to-end serving driver: batched requests through the Dandelion
 platform with the continuous-batching LM engine as the compute payload.
 

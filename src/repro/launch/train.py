@@ -1,3 +1,4 @@
+# det-lint: file waive[wall-clock] reason=real-exec CLI driver; wall time measures actual training steps, not a modeled path
 """End-to-end training driver.
 
 Runs real steps on the host devices (CPU here; the same code path drives

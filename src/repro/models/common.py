@@ -21,6 +21,7 @@ Logical axis vocabulary (mapped to mesh axes in ``repro.sharding.rules``):
 from __future__ import annotations
 
 import math
+import zlib
 from typing import Any, Callable, NamedTuple, Optional, Tuple
 
 import jax
@@ -84,7 +85,9 @@ def init_params(template, rng: jax.Array, default_dtype: str = "bfloat16"):
     out = []
     for path, spec in leaves_with_paths:
         name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
-        key = jax.random.fold_in(rng, int(abs(hash(name)) % (2**31)))
+        # crc32, not hash(): builtin str hashing is salted per process
+        # (PYTHONHASHSEED), which would give each process different inits
+        key = jax.random.fold_in(rng, zlib.crc32(name.encode()) % (2**31))
         dt = jnp.dtype(spec.dtype or default_dtype)
         if spec.init == "zeros":
             arr = jnp.zeros(spec.shape, dt)

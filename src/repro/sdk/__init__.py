@@ -65,6 +65,7 @@ from repro.sdk.errors import (
     DeclarationError,
     DeploymentError,
     InvocationFailed,
+    PurityError,
     SDKError,
     UnknownPortError,
     ValidationError,
@@ -73,6 +74,8 @@ from repro.sdk.errors import (
 from repro.sdk.config import DEPRECATED_ENV_ALIASES, PlatformConfig
 from repro.sdk.functions import FunctionSpec, declare, function, ref
 from repro.sdk.platform import Elastic, InvocationHandle, NodeSpec, Platform
+from repro.sdk.verify import verify
+from repro.analysis import PurityReport
 
 __all__ = [
     # declaration
@@ -99,10 +102,14 @@ __all__ = [
     "PlatformConfig",
     "PredictorConfig",
     "PrefetchConfig",
+    # verification
+    "verify",
+    "PurityReport",
     # errors
     "DeclarationError",
     "DeploymentError",
     "InvocationFailed",
+    "PurityError",
     "SDKError",
     "UnknownPortError",
     "ValidationError",

@@ -41,6 +41,7 @@ variable                                field
 ``DANDELION_PREDICT_BIN_S``             ``predictor.bin_s``
 ``DANDELION_PREDICT_LEAD_S``            ``predictor.lead_s``
 ``DANDELION_PREDICT_NODES_AHEAD``       ``predictor.nodes_ahead``
+``DANDELION_VERIFY``                    ``verify`` ("off" | "warn" | "strict")
 ======================================  =====================================
 
 Determinism contract: an all-default ``PlatformConfig`` (every field
@@ -124,8 +125,16 @@ class PlatformConfig:
     # trace-driven burst prediction (core.control_plane.BurstPredictor)
     # — needs the elastic shape
     predictor: Optional[PredictorConfig] = None
+    # deploy-time purity verification gate (repro.analysis): None means
+    # the platform default ("warn")
+    verify: Optional[str] = None
 
     def __post_init__(self):
+        if self.verify not in (None, "off", "warn", "strict"):
+            raise DeploymentError(
+                f"verify must be one of 'off', 'warn', 'strict', "
+                f"got {self.verify!r}"
+            )
         if self.shard_lookahead_s < 0.0:
             raise DeploymentError(
                 f"shard_lookahead_s must be >= 0, got {self.shard_lookahead_s}"
@@ -209,6 +218,13 @@ class PlatformConfig:
             except ValueError as e:
                 raise DeploymentError(str(e)) from None
 
+        verify = env.get("DANDELION_VERIFY") or None
+        if verify not in (None, "off", "warn", "strict"):
+            raise DeploymentError(
+                f"DANDELION_VERIFY must be 'off', 'warn' or 'strict', "
+                f"got {verify!r}"
+            )
+
         return cls(
             crossnode=_parse_bool(env, "CROSSNODE"),
             crossnode_spread=_parse_bool(env, "CROSSNODE_SPREAD"),
@@ -216,6 +232,7 @@ class PlatformConfig:
             shard_lookahead_s=lookahead or 0.0,
             prefetch=prefetch,
             predictor=predictor,
+            verify=verify,
         )
 
     # ------------------------------------------------------------ build
@@ -229,8 +246,8 @@ class PlatformConfig:
             return ShardedEventLoop(lookahead_s=self.shard_lookahead_s)
         return EventLoop()
 
-    def with_overrides(self, *, crossnode=None, crossnode_spread=None
-                       ) -> "PlatformConfig":
+    def with_overrides(self, *, crossnode=None, crossnode_spread=None,
+                       verify=None) -> "PlatformConfig":
         """This config with explicit ``Platform`` kwargs layered on top
         (an explicit kwarg always beats the config/env value)."""
         out = self
@@ -238,6 +255,8 @@ class PlatformConfig:
             out = replace(out, crossnode=crossnode)
         if crossnode_spread is not None:
             out = replace(out, crossnode_spread=crossnode_spread)
+        if verify is not None:
+            out = replace(out, verify=verify)
         return out
 
 

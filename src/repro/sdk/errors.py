@@ -18,7 +18,12 @@ the phase that raised it — the taxonomy ``docs/API.md`` documents:
     composition referencing an unregistered function);
   * ``InvocationFailed`` — ``InvocationHandle.result()`` on a failed (or
     never-completing) invocation; carries the dispatcher's failure
-    reason, which names the failing vertex.
+    reason, which names the failing vertex;
+  * ``PurityError``      — strict-mode purity verification failed at
+    ``Platform(verify="strict")`` deploy time (or ``sdk.verify`` result
+    escalated by the caller). Carries the full ``PurityReport`` as
+    ``.report``; the message names every offending function, rule, and
+    line.
 """
 from __future__ import annotations
 
@@ -51,3 +56,24 @@ class DeploymentError(SDKError):
 
 class InvocationFailed(SDKError):
     """``InvocationHandle.result()`` on a failed invocation."""
+
+
+class PurityError(SDKError):
+    """Strict purity verification rejected a deployment.
+
+    ``.report`` is the full ``repro.analysis.PurityReport``; the message
+    lists each blocking finding as ``function @ file:line [rule]``.
+    """
+
+    def __init__(self, report):
+        self.report = report
+        blocking = report.blocking
+        lines = [
+            f"  {f.function or '<?>'} @ {f.file}:{f.line} "
+            f"[{f.rule}] {f.message}"
+            for f in blocking
+        ]
+        super().__init__(
+            f"strict purity verification failed: {len(blocking)} "
+            f"violation(s)\n" + "\n".join(lines)
+        )

@@ -110,6 +110,12 @@ class FunctionSpec:
     profile: Optional[ColdStartProfile] = None
     # per-vertex failure handling; None -> platform/dispatcher default
     retry: Optional[RetryPolicy] = None
+    # purity escape hatch: the payload is knowingly impure (stateful
+    # batcher, real checkpoint I/O). Verification still runs but its
+    # findings are waived and the declaration is recorded in the
+    # PurityReport's ``unsafe`` list — an audited opt-out, not a blind
+    # spot.
+    pure_unsafe: bool = False
 
     def __post_init__(self):
         if not isinstance(self.name, str) or not self.name:
@@ -151,6 +157,7 @@ class FunctionSpec:
             service_time_s=self.service_time_s,
             memoize=self.memoize,
             batchable=self.batchable,
+            pure_unsafe=self.pure_unsafe,
         )
 
     # ------------------------------------------------------------------
@@ -211,6 +218,7 @@ def function(
     backoff_s: float = 0.0,             # sugar: capped exponential base
     max_backoff_s: float = 30.0,        # sugar: backoff cap
     retry_timeouts: bool = False,       # sugar: timeouts retryable too
+    pure_unsafe: bool = False,          # audited purity opt-out
 ) -> Callable[[Callable[[SetDict], SetDict]], FunctionSpec]:
     """Decorator form: ``@sdk.function(inputs=..., outputs=...)``.
 
@@ -234,6 +242,7 @@ def function(
                 name or fn.__name__, retry, retries, backoff_s,
                 max_backoff_s, retry_timeouts,
             ),
+            pure_unsafe=pure_unsafe,
         )
 
     return wrap

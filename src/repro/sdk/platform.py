@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -45,7 +46,7 @@ from repro.core.registry import FunctionRegistry
 from repro.core.sim import EventLoop, ShardedEventLoop
 from repro.sdk.builder import App
 from repro.sdk.config import PlatformConfig
-from repro.sdk.errors import DeploymentError, InvocationFailed
+from repro.sdk.errors import DeploymentError, InvocationFailed, PurityError
 from repro.sdk.functions import FunctionSpec
 
 
@@ -312,6 +313,7 @@ class Platform:
         batch_router: Any = None,
         crossnode_spread: Optional[bool] = None,
         config: Optional[PlatformConfig] = None,
+        verify: Optional[str] = None,
     ):
         shapes = [s for s in (node, pool, elastic) if s is not None]
         if len(shapes) > 1:
@@ -326,7 +328,8 @@ class Platform:
         if config is None:
             config = PlatformConfig.from_env(warn_deprecated=True)
         self.config = config.with_overrides(
-            crossnode=crossnode, crossnode_spread=crossnode_spread
+            crossnode=crossnode, crossnode_spread=crossnode_spread,
+            verify=verify,
         )
         crossnode = self.config.crossnode
         crossnode_spread = self.config.crossnode_spread
@@ -377,6 +380,9 @@ class Platform:
         self._cluster: Optional[ClusterManager] = None
         self._cp: Optional[ElasticControlPlane] = None
         self._built = False
+        # most recent deploy-time PurityReport (None before any deploy
+        # or with verify="off")
+        self.last_verify_report = None
 
     # ------------------------------------------------------- deployment
     def service(self, host: str, handler, **kwargs) -> None:
@@ -399,15 +405,18 @@ class Platform:
                     f"sdk.ref {target.name!r} does not resolve: no such "
                     f"function registered on this platform"
                 )
+            self._verify_gate(target)
             cf = self._register_spec(target)
             self._merge_profiles(profiles)
             return cf
         if isinstance(target, App):
             comp = target.compile(self.registry)
+            self._verify_gate(target)
             for spec in target.function_specs():
                 self._register_spec(spec)
         elif isinstance(target, Composition):
             comp = target
+            self._verify_gate(comp)
         else:
             raise DeploymentError(
                 f"deploy() takes an App, Composition, or FunctionSpec, "
@@ -419,6 +428,35 @@ class Platform:
             raise DeploymentError(str(e)) from e
         self._merge_profiles(profiles)
         return comp
+
+    def _verify_gate(self, target) -> None:
+        """Deploy-time purity verification (the ``verify=`` knob):
+        ``off`` skips analysis entirely, ``warn`` (default) emits one
+        ``UserWarning`` naming the violations, ``strict`` raises
+        ``sdk.PurityError``. The report (including waived findings and
+        ``pure_unsafe`` opt-outs) is kept on ``last_verify_report``."""
+        mode = self.config.verify or "warn"
+        if mode == "off":
+            return
+        from repro.sdk.verify import verify as _verify
+
+        report = _verify(
+            target, registry=self.registry,
+            cluster=self._pool_specs is not None or self._elastic is not None,
+            crossnode=bool(self._crossnode),
+        )
+        self.last_verify_report = report
+        if not report.blocking:
+            return
+        if mode == "strict":
+            raise PurityError(report)
+        warnings.warn(
+            "purity verification found "
+            f"{len(report.blocking)} violation(s) "
+            "(deploying anyway; Platform(verify='strict') rejects):\n"
+            + "\n".join(f.render() for f in report.blocking),
+            stacklevel=3,
+        )
 
     def _register_spec(self, spec: FunctionSpec):
         if spec.is_ref:

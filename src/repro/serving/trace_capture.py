@@ -1,3 +1,4 @@
+# det-lint: file waive[wall-clock] reason=real-exec calibration capture; measures actual jitted step times to fit the modeled BatchStepModel
 """Trace capture: measure real prefill/decode step timings to calibrate
 the platform's serving cost models.
 

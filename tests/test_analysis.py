@@ -1,0 +1,619 @@
+"""The static-analysis subsystem: purity verifier, determinism lint,
+composition lint, and the SDK/platform verification gate.
+
+Fixture payloads are written to a real file and imported (``inspect``
+must see source; ``exec``-built code is exactly what the
+``source-unavailable`` rule is for). Rule tests assert on rule ids and
+locations, not message prose, so wording can evolve.
+"""
+import ast
+import importlib.util
+import os
+import random
+import sys
+import warnings
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (
+    Finding,
+    PurityReport,
+    Report,
+    RULES,
+    analyze_callable,
+    clear_cache,
+    lint_composition,
+    lint_paths,
+    lint_source,
+    registration_lint_hook,
+)
+from repro.analysis.findings import ERROR, INFO, WARN
+from repro.core import FunctionRegistry, Item
+from repro.core.dag import (
+    Composition,
+    RetryPolicy,
+    add_registration_hook,
+    remove_registration_hook,
+)
+from repro import sdk
+from repro.sdk import PlatformConfig, PurityError
+from repro.sdk.errors import DeploymentError
+
+REPO = Path(__file__).resolve().parent.parent
+
+FIXTURE_SOURCE = '''\
+"""Purity-rule fixture payloads (imported from a real file)."""
+import datetime
+import os
+import random
+import subprocess
+import time
+import zlib
+from time import perf_counter
+
+import numpy as np
+
+SHARED = {"hits": 0}
+ITEMS = []
+
+
+def clock_direct(ins):
+    return {"out": [time.time()]}
+
+
+def clock_aliased(ins):
+    return {"out": [perf_counter()]}
+
+
+def clock_datetime(ins):
+    return {"out": [datetime.datetime.now()]}
+
+
+def rng_global(ins):
+    return {"out": [random.random()]}
+
+
+def rng_unseeded_np(ins):
+    g = np.random.default_rng()
+    return {"out": [g.normal()]}
+
+
+def rng_seeded_np(ins):
+    g = np.random.default_rng(7)
+    return {"out": [g.normal()]}
+
+
+def io_print(ins):
+    print("side effect")
+    return {"out": []}
+
+
+def io_open(ins):
+    with open("/tmp/x") as f:
+        return {"out": [f.read()]}
+
+
+def io_subprocess(ins):
+    return {"out": [subprocess.run(["ls"])]}
+
+
+def io_os(ins):
+    return {"out": [os.getpid()]}
+
+
+def io_os_path_ok(ins):
+    return {"out": [os.path.join("a", "b")]}
+
+
+def mutates_global(ins):
+    SHARED["hits"] += 1
+    return {"out": []}
+
+
+def mutates_global_method(ins):
+    ITEMS.append(1)
+    return {"out": []}
+
+
+def mutates_local_ok(ins):
+    items = []
+    items.append(1)
+    return {"out": items}
+
+
+def global_stmt(ins):
+    global SHARED
+    SHARED = {}
+    return {"out": []}
+
+
+def set_iter_loop(ins):
+    acc = []
+    for x in {1, 2, 3}:
+        acc.append(x)
+    return {"out": acc}
+
+
+def set_iter_sum_ok(ins):
+    return {"out": [sum(x for x in {1, 2, 3})]}
+
+
+def hash_builtin(ins):
+    return {"out": [hash("name")]}
+
+
+def hash_crc_ok(ins):
+    return {"out": [zlib.crc32(b"name")]}
+
+
+def waived_clock(ins):
+    t = time.time()  # det-lint: waive[wall-clock] reason=fixture: real path
+    return {"out": [t]}
+
+
+def waived_above(ins):
+    # det-lint: waive[wall-clock] reason=fixture: pragma on line above
+    t = time.time()
+    return {"out": [t]}
+
+
+def waived_no_reason(ins):
+    t = time.time()  # det-lint: waive[wall-clock]
+    return {"out": [t]}
+
+
+def _helper_prints(x):
+    print(x)
+    return x
+
+
+def calls_helper(ins):
+    return {"out": [_helper_prints(1)]}
+
+
+def _deep2(x):
+    return time.time() + x
+
+
+def _deep1(x):
+    return _deep2(x)
+
+
+def calls_deep(ins):
+    return {"out": [_deep1(0)]}
+
+
+def clean(ins):
+    g = np.random.default_rng(0)
+    vals = sorted({1, 2, 3})
+    return {"out": [g.normal() + sum(vals)]}
+'''
+
+
+@pytest.fixture(scope="module")
+def fixture_mod(tmp_path_factory):
+    path = tmp_path_factory.mktemp("analysis") / "purity_fixtures.py"
+    path.write_text(FIXTURE_SOURCE)
+    spec = importlib.util.spec_from_file_location("purity_fixtures", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    clear_cache()
+    yield mod
+    clear_cache()
+
+
+def rules_of(findings, *, include_waived=False):
+    return sorted({f.rule for f in findings
+                   if include_waived or not f.waived})
+
+
+def fixture_line(marker: str) -> int:
+    """1-based line of the first fixture-source line containing marker."""
+    for i, line in enumerate(FIXTURE_SOURCE.splitlines(), start=1):
+        if marker in line:
+            return i
+    raise AssertionError(f"marker {marker!r} not in fixture source")
+
+
+# ===========================================================================
+# 1. purity rules, one by one
+# ===========================================================================
+@pytest.mark.parametrize("fn_name,rule", [
+    ("clock_direct", "wall-clock"),
+    ("clock_aliased", "wall-clock"),       # from-import alias resolved
+    ("clock_datetime", "wall-clock"),
+    ("rng_global", "rng"),
+    ("rng_unseeded_np", "rng"),            # np alias resolved
+    ("io_print", "io"),
+    ("io_open", "io"),
+    ("io_subprocess", "io"),
+    ("io_os", "io"),
+    ("mutates_global", "global-mutation"),
+    ("mutates_global_method", "global-mutation"),
+    ("global_stmt", "global-mutation"),
+    ("set_iter_loop", "set-iter"),
+    ("hash_builtin", "builtin-hash"),
+])
+def test_rule_fires(fixture_mod, fn_name, rule):
+    findings = analyze_callable(getattr(fixture_mod, fn_name))
+    assert rule in rules_of(findings), (fn_name, findings)
+    assert all(f.severity == ERROR for f in findings if f.rule == rule)
+
+
+@pytest.mark.parametrize("fn_name", [
+    "rng_seeded_np", "io_os_path_ok", "mutates_local_ok",
+    "set_iter_sum_ok", "hash_crc_ok", "clean",
+])
+def test_rule_negative(fixture_mod, fn_name):
+    findings = analyze_callable(getattr(fixture_mod, fn_name))
+    assert rules_of(findings) == [], (fn_name, findings)
+
+
+def test_findings_carry_file_and_line(fixture_mod):
+    (f,) = [f for f in analyze_callable(fixture_mod.clock_direct)
+            if f.rule == "wall-clock"]
+    assert f.file.endswith("purity_fixtures.py")
+    assert f.line == fixture_line('return {"out": [time.time()]}')
+    assert f.function == "clock_direct"
+
+
+def test_every_flagged_rule_is_in_catalog(fixture_mod):
+    for name in ("clock_direct", "rng_global", "io_print",
+                 "mutates_global", "set_iter_loop", "hash_builtin"):
+        for f in analyze_callable(getattr(fixture_mod, name)):
+            assert f.rule in RULES
+
+
+# ===========================================================================
+# 2. callee recursion and source availability
+# ===========================================================================
+def test_callee_recursion_flags_helper(fixture_mod):
+    findings = analyze_callable(fixture_mod.calls_helper)
+    ios = [f for f in findings if f.rule == "io"]
+    assert ios, findings
+    assert "in callee _helper_prints()" in ios[0].message
+    assert ios[0].line == fixture_line("    print(x)")
+
+
+def test_callee_recursion_depth_two(fixture_mod):
+    findings = analyze_callable(fixture_mod.calls_deep)
+    assert "wall-clock" in rules_of(findings)     # via _deep1 -> _deep2
+
+
+def test_callee_recursion_is_depth_bounded(fixture_mod):
+    assert rules_of(analyze_callable(fixture_mod.calls_deep,
+                                     depth=1)) == []
+
+
+def test_unanalyzable_payload_is_advisory_not_blocking():
+    findings = analyze_callable(len, name="builtin_len")
+    assert [f.rule for f in findings] == ["source-unavailable"]
+    assert findings[0].severity == INFO
+    assert Report(findings).ok
+
+
+def test_exec_built_code_is_source_unavailable():
+    ns = {}
+    exec("def made(ins):\n    return {}", ns)
+    findings = analyze_callable(ns["made"])
+    assert [f.rule for f in findings] == ["source-unavailable"]
+
+
+def test_memoized_by_code_object(fixture_mod):
+    a = analyze_callable(fixture_mod.clock_direct)
+    b = analyze_callable(fixture_mod.clock_direct)
+    assert a == b
+
+
+# ===========================================================================
+# 3. waiver pragmas
+# ===========================================================================
+def test_line_waiver_keeps_finding_but_unblocks(fixture_mod):
+    findings = analyze_callable(fixture_mod.waived_clock)
+    (f,) = [f for f in findings if f.rule == "wall-clock"]
+    assert f.waived and "real path" in f.waive_reason
+    assert Report(findings).ok
+
+
+def test_comment_only_waiver_covers_next_line(fixture_mod):
+    findings = analyze_callable(fixture_mod.waived_above)
+    (f,) = [f for f in findings if f.rule == "wall-clock"]
+    assert f.waived
+
+
+def test_waiver_without_reason_is_its_own_finding(fixture_mod):
+    findings = analyze_callable(fixture_mod.waived_no_reason)
+    rules = rules_of(findings)
+    assert "bad-waiver" in rules          # the pragma itself
+    assert "wall-clock" in rules          # ...and it waives nothing
+    assert not Report(findings).ok
+
+
+def test_file_scope_waiver_and_star():
+    src = ("# det-lint: file waive[wall-clock] reason=whole-file test\n"
+           "import time\n"
+           "def f():\n"
+           "    t = time.time()\n"
+           "    g = __import__('random')\n"
+           "    return sorted([], key=lambda x: (id(x), x))  "
+           "# det-lint: waive[*] reason=star test\n")
+    findings = lint_source(src, "t.py")
+    assert findings, "expected findings"
+    assert all(f.waived for f in findings), findings
+
+
+# ===========================================================================
+# 4. determinism lint (module-level pass)
+# ===========================================================================
+def test_det_lint_scope_separation_no_duplicates():
+    src = ("import time\n"
+           "def outer():\n"
+           "    def inner():\n"
+           "        return time.time()\n"
+           "    return inner\n")
+    findings = lint_source(src, "t.py")
+    assert len(findings) == 1
+    assert findings[0].function == "outer.inner"
+
+
+def test_det_lint_id_order_rule():
+    src = "def f(xs):\n    return sorted(xs, key=lambda x: id(x))\n"
+    assert rules_of(lint_source(src, "t.py")) == ["id-order"]
+
+
+def test_det_lint_id_as_dict_key_not_flagged():
+    src = ("def f(xs, load):\n"
+           "    return min(xs, key=lambda x: load[id(x)])\n")
+    assert rules_of(lint_source(src, "t.py")) == []
+
+
+def test_det_lint_set_typed_local_tracked_across_statements():
+    src = ("def f():\n"
+           "    s = set([3, 1])\n"
+           "    out = [x for x in s]\n"
+           "    return out\n")
+    assert rules_of(lint_source(src, "t.py")) == ["set-iter"]
+
+
+def test_det_lint_does_not_run_purity_rules():
+    src = "def f():\n    print('fine for the simulator itself')\n"
+    assert lint_source(src, "t.py") == []
+
+
+def test_repo_source_is_unwaived_clean():
+    """The tentpole gate: zero unwaived findings over src/repro, and
+    every waiver carries a reason (the pragma grammar enforces it)."""
+    report = lint_paths([REPO / "src" / "repro"])
+    assert report.unwaived == [], report.render(show_waived=False)
+    assert all(f.waive_reason for f in report.waived)
+
+
+# ===========================================================================
+# 5. report model: deterministic ordering, rendering
+# ===========================================================================
+def test_report_order_is_input_order_independent():
+    base = [Finding(rule="io", severity=ERROR, file=f, line=n,
+                    message=f"m{n}", function="fn")
+            for f in ("b.py", "a.py") for n in (9, 2, 5)]
+    rng = random.Random(0)
+    renders = set()
+    for _ in range(5):
+        shuffled = list(base)
+        rng.shuffle(shuffled)
+        renders.add(Report(shuffled).render())
+    assert len(renders) == 1
+    ordered = Report(base).findings
+    assert [(f.file, f.line) for f in ordered] == sorted(
+        (f.file, f.line) for f in base)
+
+
+def test_report_summary_counts():
+    fs = [
+        Finding(rule="io", severity=ERROR, file="a", line=1, message="x"),
+        Finding(rule="graph-unreachable", severity=WARN, file="a", line=2,
+                message="y"),
+        Finding(rule="io", severity=ERROR, file="a", line=3, message="z",
+                waived=True, waive_reason="r"),
+    ]
+    r = Report(fs)
+    assert len(r.blocking) == 1 and len(r.waived) == 1 and not r.ok
+    assert "3 finding(s): 1 blocking, 1 advisory, 1 waived" in r.render()
+    assert len(r.render(show_waived=False).splitlines()) == 3
+
+
+# ===========================================================================
+# 6. composition lint
+# ===========================================================================
+def bad_graph() -> Composition:
+    c = Composition("bad")
+    a = c.compute("a", "fa", inputs=("i",), outputs=("o",))
+    c.compute("island", "fb", inputs=(), outputs=("o2",))
+    h = c.http("h")
+    c.vertices["h"].retry = RetryPolicy(max_retries=3)
+    c.bind_input("in", a["i"])
+    c.edge(a["o"], h["requests"], mode="each")
+    c.bind_output("out", h["responses"])
+    return c
+
+
+def test_graph_lint_rules_fire():
+    report = lint_composition(bad_graph(), cluster=True, crossnode=False)
+    by = {f.rule: f for f in report.findings}
+    assert set(by) == {"graph-unreachable", "graph-dangling-output",
+                       "graph-comm-retry", "graph-fanout-local"}
+    assert by["graph-unreachable"].severity == WARN
+    assert by["graph-unreachable"].function == "island"
+    assert by["graph-comm-retry"].severity == WARN
+    assert by["graph-dangling-output"].severity == INFO
+    assert report.ok                       # none of these blocks strict
+
+
+def test_graph_fanout_rule_needs_cluster_without_crossnode():
+    comp = bad_graph()
+    for cluster, crossnode in ((False, False), (True, True)):
+        report = lint_composition(comp, cluster=cluster,
+                                  crossnode=crossnode)
+        assert report.by_rule("graph-fanout-local") == []
+
+
+def test_graph_lint_clean_composition():
+    c = Composition("ok")
+    a = c.compute("a", "fa", inputs=("i",), outputs=("o",))
+    c.bind_input("in", a["i"])
+    c.bind_output("out", a["o"])
+    assert lint_composition(c).findings == ()
+
+
+def test_registration_hook_strict_blocks_registration():
+    hook = registration_lint_hook("strict")
+    add_registration_hook(hook)
+    try:
+        reg = FunctionRegistry()
+        for fname in ("fa", "fb"):
+            reg.register_function(fname, lambda ins: {}, context_bytes=1)
+        with pytest.raises(ValueError, match="graph-unreachable"):
+            reg.register_composition(bad_graph())
+        assert "bad" not in reg.compositions
+    finally:
+        remove_registration_hook(hook)
+    # hook removed: the same composition now registers
+    reg2 = FunctionRegistry()
+    for fname in ("fa", "fb"):
+        reg2.register_function(fname, lambda ins: {}, context_bytes=1)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        reg2.register_composition(bad_graph())
+    assert "bad" in reg2.compositions
+
+
+def test_registration_hook_mode_validated():
+    with pytest.raises(ValueError):
+        registration_lint_hook("loud")
+
+
+# ===========================================================================
+# 7. sdk.verify + the Platform gate
+# ===========================================================================
+def impure_spec(fixture_mod, **kw):
+    return sdk.declare("impure_fixture", fixture_mod.clock_direct,
+                       inputs=("x",), outputs=("out",), **kw)
+
+
+def test_verify_returns_purity_report(fixture_mod):
+    report = sdk.verify(impure_spec(fixture_mod))
+    assert isinstance(report, PurityReport)
+    assert report.checked == ("impure_fixture",)
+    assert not report.ok
+    assert "wall-clock" in {f.rule for f in report.blocking}
+
+
+def test_verify_pure_unsafe_waives_and_records(fixture_mod):
+    report = sdk.verify(impure_spec(fixture_mod, pure_unsafe=True))
+    assert report.ok
+    assert report.unsafe == ("impure_fixture",)
+    assert any(f.rule == "wall-clock" and f.waived for f in report.findings)
+    assert "pure_unsafe" in report.render()
+
+
+def test_verify_rejects_unknown_target():
+    with pytest.raises(TypeError):
+        sdk.verify(42)
+
+
+def test_strict_deploy_raises_typed_error_naming_everything(fixture_mod):
+    platform = sdk.Platform(node=sdk.NodeSpec(num_slots=2),
+                            verify="strict")
+    with pytest.raises(PurityError) as exc:
+        platform.deploy(impure_spec(fixture_mod))
+    msg = str(exc.value)
+    assert "[wall-clock]" in msg
+    assert "impure_fixture" in msg
+    line = fixture_line('return {"out": [time.time()]}')
+    assert f":{line}" in msg
+    assert isinstance(exc.value.report, PurityReport)
+    assert "impure_fixture" not in platform.registry.functions
+
+
+def test_default_mode_warns_and_deploys(fixture_mod):
+    platform = sdk.Platform(node=sdk.NodeSpec(num_slots=2))
+    with pytest.warns(UserWarning, match="wall-clock"):
+        platform.deploy(impure_spec(fixture_mod))
+    assert "impure_fixture" in platform.registry.functions
+    assert not platform.last_verify_report.ok
+
+
+def test_off_mode_skips_analysis(fixture_mod):
+    platform = sdk.Platform(node=sdk.NodeSpec(num_slots=2), verify="off")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")     # any warning fails the test
+        platform.deploy(impure_spec(fixture_mod))
+    assert platform.last_verify_report is None
+
+
+def test_strict_deploy_accepts_clean_app_end_to_end(fixture_mod):
+    spec = sdk.declare("clean_fixture", fixture_mod.clean,
+                       inputs=("x",), outputs=("out",))
+    platform = sdk.Platform(node=sdk.NodeSpec(num_slots=2),
+                            verify="strict")
+    comp = platform.deploy(sdk.single_function_app(spec))
+    assert comp.name in platform.registry.compositions
+    assert platform.last_verify_report.ok
+
+
+def test_pure_unsafe_deploys_under_strict(fixture_mod):
+    platform = sdk.Platform(node=sdk.NodeSpec(num_slots=2),
+                            verify="strict")
+    platform.deploy(impure_spec(fixture_mod, pure_unsafe=True))
+    assert platform.last_verify_report.unsafe == ("impure_fixture",)
+
+
+# ===========================================================================
+# 8. PlatformConfig front door
+# ===========================================================================
+def test_verify_env_parsed_and_validated():
+    assert PlatformConfig.from_env({}).verify is None
+    for mode in ("off", "warn", "strict"):
+        assert PlatformConfig.from_env(
+            {"DANDELION_VERIFY": mode}).verify == mode
+    with pytest.raises(DeploymentError, match="DANDELION_VERIFY"):
+        PlatformConfig.from_env({"DANDELION_VERIFY": "LOUD"})
+
+
+def test_verify_field_validated_on_construction():
+    with pytest.raises(DeploymentError):
+        PlatformConfig(verify="yes")
+
+
+def test_explicit_kwarg_beats_env(fixture_mod, monkeypatch):
+    monkeypatch.setenv("DANDELION_VERIFY", "strict")
+    platform = sdk.Platform(node=sdk.NodeSpec(num_slots=2), verify="off")
+    assert platform.config.verify == "off"
+    platform.deploy(impure_spec(fixture_mod))   # off: no raise, no warn
+    with_env = sdk.Platform(node=sdk.NodeSpec(num_slots=2))
+    assert with_env.config.verify == "strict"
+
+
+def test_with_overrides_only_touches_named_fields():
+    cfg = PlatformConfig(crossnode=True)
+    out = cfg.with_overrides(verify="strict")
+    assert out.verify == "strict" and out.crossnode is True
+    assert cfg.verify is None              # frozen: original untouched
+
+
+# ===========================================================================
+# 9. the property: verification must not move benchmark bytes
+# ===========================================================================
+def test_fig10_rows_identical_under_strict_verification(monkeypatch):
+    """Analysis is observation-free: running every deploy through the
+    strict verifier changes nothing in the fig10 rows (the byte-identity
+    contract tools/check_bench_identity.py pins across PRs)."""
+    import importlib
+
+    monkeypatch.setenv("FIG10_DURATION_S", "30")
+    monkeypatch.delenv("DANDELION_VERIFY", raising=False)
+    mod = importlib.import_module("benchmarks.fig10_azure_trace")
+    ref = mod.run()
+    monkeypatch.setenv("DANDELION_VERIFY", "strict")
+    got = mod.run()
+    assert got == ref

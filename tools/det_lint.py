@@ -1,0 +1,23 @@
+#!/usr/bin/env python
+"""CI gate: the determinism lint over the simulator/platform source.
+
+Thin CLI wrapper around ``repro.analysis.detlint`` so the lint is
+runnable from the repo root without setting PYTHONPATH:
+
+    python tools/det_lint.py [paths...] [--show-waived] [-q]
+
+Default target is ``src/repro/``. Exit 1 on any unwaived finding —
+waivers are ``# det-lint: waive[rule] reason=...`` pragmas (see
+docs/ARCHITECTURE.md for the rule catalog and waiver grammar).
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.analysis.detlint import main  # noqa: E402
+
+if __name__ == "__main__":
+    raise SystemExit(main())
